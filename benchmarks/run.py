@@ -1,0 +1,199 @@
+"""Benchmark harness — one function per paper table/figure.
+
+The paper has no numbered tables; its quantitative claims live in
+§Overhead (per-future overhead by backend, sources of overhead and which
+can be disabled), §Future work (chunking / load balancing), and §parallel
+RNG (seed=TRUE cost). Each bench_* function covers one of those, plus the
+framework-level benches (compression, kernels-vs-ref, roofline readout from
+the dry-run artifacts).
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import repro.core as rc
+
+
+def _timeit(fn, n: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6        # us/call
+
+
+def _row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# --------------------------------------------------------------------------
+# paper §Overhead: per-future overhead by backend
+# --------------------------------------------------------------------------
+
+def bench_future_overhead(quick: bool = False) -> None:
+    n = 20 if quick else 100
+    backends = [("sequential", {}), ("threads", {"workers": 2}),
+                ("jax_async", {}), ("processes", {"workers": 2})]
+    baseline = _timeit(lambda: (lambda: 42)(), n * 10)
+    _row("overhead/direct_call", baseline, "no future")
+    for name, kw in backends:
+        rc.plan(name, **kw)
+        n_eff = max(n // 4, 5) if name == "processes" else n
+        us = _timeit(lambda: rc.value(rc.future(lambda: 42)), n_eff)
+        _row(f"overhead/{name}", us, "future()+value()")
+        rc.shutdown()
+    rc.plan("sequential")
+
+
+def bench_relay_overhead(quick: bool = False) -> None:
+    """§Overhead: relaying stdout/conditions can be disabled."""
+    import contextlib
+    import io
+    n = 20 if quick else 100
+
+    def noisy():
+        print("x" * 100)
+        return 1
+
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        us_on = _timeit(lambda: rc.value(rc.future(noisy)), n)
+        us_off = _timeit(
+            lambda: rc.value(rc.future(noisy, stdout=False,
+                                       conditions=False)), n)
+    _row("relay/captured", us_on, "stdout+conditions relayed")
+    _row("relay/disabled", us_off,
+         f"saves {us_on - us_off:.0f}us ({(1 - us_off / max(us_on, 1e-9)) * 100:.0f}%)")
+
+
+def bench_rng_overhead(quick: bool = False) -> None:
+    """§parallel RNG: seed=True costs more than seed=None (and warns)."""
+    import warnings
+    n = 20 if quick else 60
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        us_plain = _timeit(lambda: rc.value(rc.future(lambda: 1)), n)
+        us_seed = _timeit(
+            lambda: rc.value(rc.future(lambda key=None: 1, seed=True)), n)
+    _row("rng/no_seed", us_plain, "")
+    _row("rng/seed_stream", us_seed,
+         f"+{us_seed - us_plain:.0f}us for key derivation")
+
+
+# --------------------------------------------------------------------------
+# paper §Future work: chunking / load balancing
+# --------------------------------------------------------------------------
+
+def bench_chunking(quick: bool = False) -> None:
+    n_items = 64 if quick else 256
+    rc.plan("threads", workers=4)
+    xs = list(range(n_items))
+    for chunks in (n_items, 16, 4):
+        us = _timeit(lambda c=chunks: rc.future_map(
+            lambda v: v + 1, xs, chunks=c), 3, warmup=1)
+        _row(f"chunking/{chunks}_chunks", us / n_items,
+             f"us/element over {n_items} items")
+    rc.shutdown()
+    rc.plan("sequential")
+
+
+# --------------------------------------------------------------------------
+# framework: gradient compression
+# --------------------------------------------------------------------------
+
+def bench_compression(quick: bool = False) -> None:
+    import jax.numpy as jnp
+    from repro.optim.compression import dequantize_int8, quantize_int8
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal(1 << (16 if quick else 20))
+                    .astype(np.float32))
+    q, s = quantize_int8(x)
+    err = float(jnp.max(jnp.abs(dequantize_int8(q, s) - x)))
+    us = _timeit(lambda: quantize_int8(x)[0].block_until_ready(),
+                 10 if quick else 30)
+    nbytes = x.size * 4
+    _row("compression/int8_quantize", us,
+         f"{nbytes / us / 1e3:.1f} MB/s; max_err={err:.4f}; 4x reduction")
+
+
+# --------------------------------------------------------------------------
+# kernels vs refs (CPU wall time is indicative only; interpret mode)
+# --------------------------------------------------------------------------
+
+def bench_kernels(quick: bool = False) -> None:
+    import jax
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+
+    b, h, kv, s, d = 1, 4, 2, 256, 64
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, h, s, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, s, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, s, d))
+    us_ref = _timeit(lambda: ref.flash_attention_ref(
+        q, k, v, causal=True).block_until_ready(), 5, warmup=1)
+    _row("kernels/flash_ref_jnp", us_ref, f"B{b}H{h}S{s}D{d} fp32 CPU")
+    if not quick:
+        us_int = _timeit(lambda: flash_attention(
+            q, k, v, causal=True, bq=64, bk=64,
+            interpret=True).block_until_ready(), 2, warmup=1)
+        _row("kernels/flash_pallas_interpret", us_int,
+             "interpret-mode (correctness path, not perf)")
+
+
+# --------------------------------------------------------------------------
+# roofline readout from the dry-run artifacts (deliverable g)
+# --------------------------------------------------------------------------
+
+def bench_roofline(quick: bool = False) -> None:
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "dryrun")
+    if not os.path.isdir(d):
+        _row("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for fname in sorted(os.listdir(d)):
+        if not fname.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, fname)))
+        tag = f"#{r['tag']}" if r.get("tag") else ""
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}"
+        if r.get("status") != "ok":
+            _row(name, 0.0, "FAILED")
+            continue
+        dom = r["dominant"].replace("_s", "")
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        _row(name, step_s * 1e6,
+             f"dominant={dom}; compute={r['compute_s']:.3f}s "
+             f"memory={r['memory_s']:.3f}s coll={r['collective_s']:.3f}s "
+             f"useful={r['useful_ratio']:.2f}")
+
+
+BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
+           bench_chunking, bench_compression, bench_kernels, bench_roofline]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        if args.only and args.only not in bench.__name__:
+            continue
+        bench(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

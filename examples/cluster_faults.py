@@ -1,0 +1,60 @@
+"""Multi-pod training under failures: the paper's fault-tolerance story.
+
+Runs the real multi-pod driver (cluster backend = worker processes) while
+injecting: (1) a hard node failure mid-round, (2) a straggler pod raced by
+a speculative duplicate, (3) an elastic resize between rounds. The run
+must finish with a decreasing loss despite all three.
+
+Run: PYTHONPATH=src python examples/cluster_faults.py
+"""
+
+import tempfile
+import time
+
+import repro.core as rc
+from repro.launch.train import MultiPodDriver, PodRunConfig
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="repro-cluster-")
+    cfg = PodRunConfig(
+        arch="xlstm-125m", pods=2, rounds=4, local_steps=3,
+        batch=2, seq=32, smoke=True,
+        ckpt_dir=f"{tmp}/ckpt",
+        fail_marker=f"{tmp}/pod0-die-once",     # pod 0 dies on first touch
+        straggle_pod=1, straggle_s=20.0,        # pod 1 is slow in round 0
+        straggler_timeout_s=3.0,                # ... and gets raced
+    )
+    print(f"2 pods, 4 rounds; node-failure + straggler injected; {tmp}")
+    driver = MultiPodDriver(cfg)
+
+    t0 = time.time()
+    rec0 = driver.run_round(0)
+    print(f"round 0 survived failure+straggler: loss={rec0['loss']:.4f} "
+          f"({time.time() - t0:.1f}s, straggler was 20s)")
+    driver.cfg.straggle_pod = None              # back to healthy pods
+
+    rec1 = driver.run_round(1)
+    print(f"round 1: loss={rec1['loss']:.4f}")
+
+    print("elastic resize: 2 -> 3 pods")
+    driver.resize(3)
+    for rnd in (2, 3):
+        rec = driver.run_round(rnd)
+        print(f"round {rnd} (3 pods): loss={rec['loss']:.4f}")
+        if driver.ckpt:
+            driver.ckpt.save(rnd + 1, {str(i): p for i, p in
+                                       enumerate(driver.params)})
+    if driver.ckpt:
+        driver.ckpt.wait()
+        print("checkpoint at step", driver.ckpt.latest_step())
+
+    losses = [h["loss"] for h in driver.history]
+    print(f"losses: {['%.3f' % l for l in losses]}")
+    assert losses[-1] < losses[0], "training failed to progress"
+    print("OK: converged through failure, straggler, and resize")
+    rc.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Quickstart: the Future API, mirroring the paper's running examples.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+import warnings
+
+import repro.core as rc
+from repro.core import (ListEnv, future, future_either, future_map, plan,
+                        resolved, value)
+
+
+def slow_fcn(x):
+    time.sleep(0.05)
+    return x * x
+
+
+def main():
+    # -- the three constructs (paper §Three atomic constructs) -------------
+    plan("sequential")
+    x = 1
+    f = future(lambda: slow_fcn(x))
+    x = 2                       # snapshot semantics: the future saw x == 1
+    print("value(f) =", value(f), "(uses x=1, not x=2)")
+
+    # -- end-user picks the backend; the code above does not change --------
+    plan("threads", workers=2)
+    fs = [future(lambda i=i: slow_fcn(i)) for i in range(3)]
+    print("resolved? ", resolved(fs))
+    print("values:   ", value(fs))
+
+    # -- parallel for-loop via a list environment (paper: listenv) ---------
+    env = ListEnv()
+    for i in range(4):
+        env[i] = future(lambda i=i: slow_fcn(i))
+    print("listenv:  ", env.as_list())
+
+    # -- map-reduce with load-balanced chunking (future.apply analogue) ----
+    print("future_map:", future_map(slow_fcn, range(8)))
+
+    # -- exception + condition relay (paper §Exception handling/§Relaying) -
+    def noisy():
+        print("Hello world")
+        warnings.warn("Missing values were omitted")
+        print("Bye bye")
+        return 55
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        v = value(future(noisy))
+    print(f"noisy future -> {v}; relayed warnings: "
+          f"{[str(x.message) for x in w]}")
+
+    try:
+        value(future(lambda: [0][3]))
+    except IndexError as e:
+        print("relayed as-is:", type(e).__name__, "-", e)
+
+    # -- backend-invariant parallel RNG (paper §parallel RNG) --------------
+    import jax
+    rc.set_session_seed(42)
+
+    def draw(x, key):
+        return float(jax.random.normal(key, ()))
+
+    a = future_map(draw, [0, 0, 0], seed=True, chunks=1)
+    rc.set_session_seed(42)
+    b = future_map(draw, [0, 0, 0], seed=True, chunks=3)
+    print("rng invariant to chunking:", a == b, a)
+
+    # -- EITHER construct (paper §Other uses) -------------------------------
+    winner = future_either(
+        lambda: (time.sleep(2.0), "shell sort")[1],
+        lambda: (time.sleep(0.01), "radix sort")[1],
+    )
+    print("future_either winner:", winner)
+
+    # -- worker processes + fault tolerance ---------------------------------
+    plan("processes", workers=2)
+    import os
+    print("worker pid:", value(future(lambda: os.getpid())),
+          "(parent:", str(os.getpid()) + ")")
+
+    def die():
+        os._exit(9)
+
+    try:
+        value(future(die))
+    except rc.WorkerDiedError as e:
+        print("node failure detected:", e)
+    print("pool self-healed:", value(future(lambda: "alive")))
+    rc.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Batched serving example: request futures + one decode loop.
+
+Clients submit prompts as *futures* on a thread backend; the serving loop
+batches whatever requests are pending (continuous-batching-lite), runs
+jitted decode steps against per-slot KV caches, and resolves each client's
+future when its sequence finishes. `resolved()` gives clients non-blocking
+polling — the Future API as a serving front door.
+
+Run: PYTHONPATH=src python examples/serve.py
+"""
+
+import queue
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as rc
+from repro.configs import get_arch
+from repro.models import Model
+from repro.train import make_serve_step
+
+
+class Server:
+    """Greedy decode server with slot-based batching."""
+
+    def __init__(self, arch="xlstm-125m", slots=4, max_new=16):
+        self.cfg = get_arch(arch, smoke=True)
+        self.model = Model(self.cfg)
+        self.params = self.model.init(jax.random.PRNGKey(0))
+        self.slots = slots
+        self.max_new = max_new
+        self.step = jax.jit(make_serve_step(self.model))
+        self.requests: queue.Queue = queue.Queue()
+        self._stop = False
+
+    def submit(self, prompt_tokens: list[int]) -> "rc.Future":
+        """Client-facing: returns a future over the generated tokens.
+
+        NB: the reply channel is a Queue, NOT a mutable dict — futures
+        snapshot captured mutable containers at creation (the paper's
+        globals semantics), so later mutation of a captured dict would be
+        invisible. Queues are synchronization objects and pass by
+        reference.
+        """
+        reply: queue.Queue = queue.Queue(1)
+        self.requests.put((prompt_tokens, reply))
+
+        def wait():
+            return reply.get()
+
+        return rc.future(wait)
+
+    def serve_loop(self):
+        """One batch at a time; pads free slots with finished sequences."""
+        while not self._stop:
+            batch = []
+            try:
+                batch.append(self.requests.get(timeout=0.2))
+            except queue.Empty:
+                continue
+            while len(batch) < self.slots:
+                try:
+                    batch.append(self.requests.get_nowait())
+                except queue.Empty:
+                    break
+            self._decode_batch(batch)
+
+    def _decode_batch(self, batch):
+        b = len(batch)
+        cache = self.model.init_cache(b, max_seq=64, dtype=jnp.float32)
+        # prefill via single-token steps (prompts are short here)
+        maxlen = max(len(p) for p, _ in batch)
+        outs = [[] for _ in range(b)]
+        tok = jnp.zeros((b, 1), jnp.int32)
+        for t in range(maxlen + self.max_new):
+            col = []
+            for i, (prompt, _) in enumerate(batch):
+                col.append(prompt[t] if t < len(prompt)
+                           else int(np.asarray(tok[i, 0])))
+            tok = jnp.asarray(col, jnp.int32)[:, None]
+            tok, cache = self.step(self.params, cache, tok)
+            for i, (prompt, _) in enumerate(batch):
+                if t >= len(prompt) - 1:
+                    outs[i].append(int(np.asarray(tok[i, 0])))
+        for i, (_, reply) in enumerate(batch):
+            reply.put(outs[i][:self.max_new])
+
+
+def main():
+    rc.plan("threads", workers=4)
+    server = Server()
+    loop = threading.Thread(target=server.serve_loop, daemon=True)
+    loop.start()
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    futures = []
+    for i in range(6):
+        prompt = rng.integers(0, server.cfg.vocab_size, size=4).tolist()
+        futures.append((i, prompt, server.submit(prompt)))
+        print(f"request {i}: submitted prompt={prompt}")
+
+    pending = dict((i, f) for i, _, f in futures)
+    while pending:
+        for i, f in list(pending.items()):
+            if rc.resolved(f):
+                toks = rc.value(f)
+                print(f"request {i}: done -> {toks[:8]}... "
+                      f"({time.time() - t0:.2f}s)")
+                del pending[i]
+        time.sleep(0.01)
+    server._stop = True
+    rc.shutdown()
+    print("all requests served")
+
+
+if __name__ == "__main__":
+    main()

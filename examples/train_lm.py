@@ -1,0 +1,52 @@
+"""End-to-end training driver: xLSTM-125M (the ~100M-param assigned arch).
+
+Futures at work in the loop: prefetched data batches, async checkpoints,
+progress relay. Defaults are CPU-sized (reduced model, 50 steps); pass
+``--full --steps 300`` for the real 125M config / a few hundred steps
+(hours on this 1-core host — sized for a real machine).
+
+Run: PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+"""
+
+import argparse
+
+import repro.core as rc
+from repro.configs import get_arch
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="real 125M config instead of the reduced one")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    rc.plan("threads", workers=2)      # data prefetch + ckpt writer overlap
+    cfg = get_arch("xlstm-125m", smoke=not args.full)
+    batch = args.batch or (8 if args.full else 8)
+    seq = args.seq or (512 if args.full else 64)
+
+    tcfg = TrainerConfig(steps=args.steps, batch=batch, seq=seq,
+                         log_every=max(args.steps // 10, 1),
+                         ckpt_every=max(args.steps // 4, 1),
+                         ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(cfg, tcfg, AdamWConfig(
+        lr=3e-3 if not args.full else 6e-4,
+        warmup_steps=max(args.steps // 20, 1), total_steps=args.steps))
+    state, history = trainer.run()
+    first, last = history[0], history[-1]
+    print(f"\nloss: {first['loss']:.4f} (step {first['step']}) -> "
+          f"{last['loss']:.4f} (step {last['step']})")
+    print(f"tokens/s: {last['step'] * batch * seq / last['wall_s']:.0f}")
+    print(f"checkpoints in {args.ckpt_dir}: latest step "
+          f"{trainer.ckpt.latest_step()}")
+    rc.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Rank the top HBM/FLOP/collective contributors in a saved dry-run HLO.
+
+Usage: PYTHONPATH=src python scripts/hlo_top.py <file.hlo> [n]
+"""
+
+import re
+import sys
+
+sys.path.insert(0, "src")
+import repro.launch.hlo_analysis as H  # noqa: E402
+
+
+def main():
+    path = sys.argv[1]
+    n = int(sys.argv[2]) if len(sys.argv) > 2 else 12
+    txt = open(path).read()
+    comps = H.parse_hlo(txt)
+    entry = next(c for c in comps.values() if c.is_entry)
+    rows = []
+
+    def walk(comp, mult=1.0):
+        for name in comp.order:
+            info = comp.ops[name]
+            kind = info.kind
+            if kind == "while":
+                body_m = re.search(r"body=%?([\w\.\-]+)", info.line)
+                tc = re.search(r'known_trip_count..\{"n":"(\d+)"\}',
+                               info.line)
+                trips = int(tc.group(1)) if tc else 1
+                if body_m and body_m.group(1) in comps:
+                    walk(comps[body_m.group(1)], mult * trips)
+                continue
+            if kind in ("call", "conditional"):
+                for m in H._CALLED.finditer(info.line):
+                    for sn in re.split(r",\s*%?", m.group(1)):
+                        if sn in comps:
+                            walk(comps[sn], mult)
+                continue
+            flops = link = 0.0
+            if kind == "fusion":
+                b = H._fusion_hbm_bytes(info, comp, comps)
+                called = H._CALLS_FUSION.search(info.line)
+                if called and called.group(1) in comps:
+                    sub = comps[called.group(1)]
+                    for sn in sub.order:
+                        si = sub.ops[sn]
+                        if si.kind == "dot":
+                            flops += H._dot_flops(si, sub)
+            elif kind == "dot":
+                flops = H._dot_flops(info, comp)
+                b = H._operand_bytes(info, comp) + \
+                    H._shape_bytes(info.out_type)
+            elif any(kind.startswith(c) for c in H._COLLECTIVES):
+                in_b = H._operand_bytes(info, comp)
+                out_b = H._shape_bytes(info.out_type)
+                link = 2 * in_b if kind.startswith("all-reduce") else \
+                    out_b if kind.startswith("all-gather") else \
+                    max(in_b, out_b)
+                b = in_b + out_b
+            elif kind in H._SKIP_BYTES:
+                continue
+            else:
+                sl = H._sliced_op_bytes(info, comp)
+                b = sl if sl is not None else \
+                    H._operand_bytes(info, comp) + \
+                    H._shape_bytes(info.out_type)
+            rows.append((b * mult, flops * mult, link * mult, kind,
+                         info.line.strip()[:150]))
+
+    walk(entry)
+    for key, label in ((0, "HBM bytes"), (1, "FLOPs"), (2, "link bytes")):
+        print(f"\n=== top {label} ===")
+        rows.sort(key=lambda r: -r[key])
+        for row in rows[:n]:
+            if row[key] <= 0:
+                break
+            meta = re.search(r'op_name="([^"]+)"', row[4])
+            print(f"{row[key]:.3e}  {row[3]:<18s} "
+                  f"{(meta.group(1)[-80:] if meta else row[4][:80])}")
+
+
+if __name__ == "__main__":
+    main()

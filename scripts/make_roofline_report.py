@@ -1,0 +1,113 @@
+"""Build EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSON artifacts. Run: PYTHONPATH=src python scripts/make_roofline_report.py"""
+
+import json
+import os
+import sys
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+ARCH_ORDER = ["qwen2-vl-72b", "qwen2-moe-a2.7b", "deepseek-moe-16b", "yi-9b",
+              "nemotron-4-340b", "yi-34b", "minicpm3-4b", "hubert-xlarge",
+              "recurrentgemma-9b", "xlstm-125m"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.1f}"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}m"
+    return f"{x * 1e6:.0f}u"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x / div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(mesh):
+    out = {}
+    for f in os.listdir(DIR):
+        if not f.endswith(f"_{mesh}.json"):
+            continue
+        r = json.load(open(os.path.join(DIR, f)))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def main():
+    single = load("single")
+    multi = load("multi")
+
+    print("### Dry-run (single-pod 16x16=256 chips / multi-pod 2x16x16=512"
+          " chips)\n")
+    print("| arch | shape | single | multi | compile_s (s/m) | "
+          "args/dev | collective mix (single) |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            s = single.get((arch, shape))
+            m = multi.get((arch, shape))
+            if s is None and m is None:
+                continue
+            coll = s.get("collectives", {}) if s else {}
+            tot = sum(coll.values()) or 1
+            mix = " ".join(f"{k.split('-')[-1][:6]}:{v / tot * 100:.0f}%"
+                           for k, v in sorted(coll.items(),
+                                              key=lambda kv: -kv[1])[:3])
+            print(f"| {arch} | {shape} "
+                  f"| {'ok' if s and s['status'] == 'ok' else 'FAIL'} "
+                  f"| {'ok' if m and m['status'] == 'ok' else 'FAIL'} "
+                  f"| {s.get('compile_s', '-')}/{m.get('compile_s', '-')} "
+                  f"| {fmt_b(s.get('arg_bytes_per_device'))} "
+                  f"| {mix} |")
+
+    print("\n### Roofline (single-pod, v5e: 197TF bf16 | 819GB/s HBM | "
+          "50GB/s ICI)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| MODEL_FLOPS | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = single.get((arch, shape))
+            if r is None or r.get("status") != "ok":
+                continue
+            step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            # roofline fraction: ideal compute time of MODEL_FLOPS vs the
+            # step's dominant-term time
+            ideal = r["model_flops"] / (r["chips"] * 197e12)
+            frac = ideal / step if step else 0.0
+            print(f"| {arch} | {shape} | {fmt_s(r['compute_s'])} "
+                  f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+                  f"| {r['dominant'].replace('_s', '')} "
+                  f"| {r['model_flops']:.2e} "
+                  f"| {r['useful_ratio']:.2f} | {frac * 100:.1f}% |")
+
+    # summary stats for picking hillclimb targets
+    print("\n### Hillclimb candidates (worst roofline fraction / most "
+          "collective-bound)\n```")
+    rows = []
+    for (arch, shape), r in single.items():
+        if r.get("status") != "ok":
+            continue
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        ideal = r["model_flops"] / (r["chips"] * 197e12)
+        rows.append((ideal / step if step else 0, arch, shape,
+                     r["dominant"],
+                     r["collective_s"] / step if step else 0))
+    rows.sort()
+    for frac, arch, shape, dom, collfrac in rows[:8]:
+        print(f"frac={frac * 100:5.1f}%  coll_share={collfrac * 100:5.1f}%  "
+              f"dom={dom:13s} {arch} x {shape}")
+    print("```")
+
+
+if __name__ == "__main__":
+    main()

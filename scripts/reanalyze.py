@@ -1,0 +1,44 @@
+"""Re-run the HLO roofline analysis over saved .hlo artifacts and patch the
+JSON records in place (no recompilation). Used when the analyzer improves.
+
+Run: PYTHONPATH=src python scripts/reanalyze.py [dir]
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch import hlo_analysis  # noqa: E402
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+
+for fname in sorted(os.listdir(DIR)):
+    if not fname.endswith(".hlo"):
+        continue
+    jname = fname[:-4] + ".json"
+    jpath = os.path.join(DIR, jname)
+    if not os.path.exists(jpath):
+        continue
+    rec = json.load(open(jpath))
+    if rec.get("status") != "ok":
+        continue
+    roof = hlo_analysis.analyze(open(os.path.join(DIR, fname)).read())
+    secs = roof.seconds(rec["chips"])
+    rec.update({
+        "hlo_flops_per_device": roof.flops,
+        "hlo_bytes_per_device": roof.hbm_bytes,
+        "convert_bytes_per_device": roof.convert_bytes,
+        "link_bytes_per_device": roof.link_bytes,
+        "collectives": roof.collectives,
+        "while_trips": roof.while_trips,
+        **secs,
+    })
+    rec["dominant"] = max(
+        ("compute_s", "memory_s", "collective_s"),
+        key=lambda k: rec[k])
+    rec["useful_ratio"] = rec["model_flops"] / max(
+        roof.flops * rec["chips"], 1.0)
+    json.dump(rec, open(jpath, "w"), indent=1, default=str)
+    print(f"{jname}: mem={secs['memory_s']:.2f}s "
+          f"mem_tpu={secs['memory_s_tpu']:.2f}s")

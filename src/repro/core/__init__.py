@@ -1,0 +1,42 @@
+"""repro.core — the Future API (the paper's contribution, in Python/JAX).
+
+    from repro.core import future, value, resolved, plan
+
+    plan("threads", workers=4)
+    f = future(lambda: slow_fcn(x))
+    ...
+    v = value(f)
+
+Backends: "sequential" (default), "threads", "processes", "cluster",
+"jax_async". See DESIGN.md §2 for the paper↔framework mapping.
+"""
+
+from . import rng                                            # noqa: F401
+from .backends import base as _base                          # noqa: F401
+from .backends import sequential as _sequential              # noqa: F401
+from .backends import threads as _threads                    # noqa: F401
+from .backends import processes as _processes                # noqa: F401
+from .backends import jax_async as _jax_async                # noqa: F401
+from .conditions import (CapturedRun, ImmediateCondition, message,  # noqa: F401
+                         signal_progress)
+from .containers import ListEnv                              # noqa: F401
+from .errors import (ChannelError, FutureCancelledError, FutureError,  # noqa: F401
+                     GlobalsError, NonExportableObjectError,
+                     RNGMisuseWarning, WorkerDiedError)
+from .future import Future, future, merge, resolved, value   # noqa: F401
+from .mapreduce import (future_either, future_lapply, future_map,  # noqa: F401
+                        future_map_chunked_lazy, retry)
+from .planning import (available_cores, plan, shutdown, spec, tweak,  # noqa: F401
+                   active_backend)
+from .rng import set_session_seed                            # noqa: F401
+
+__all__ = [
+    "future", "value", "resolved", "merge", "Future",
+    "plan", "spec", "tweak", "shutdown", "available_cores", "active_backend",
+    "future_map", "future_lapply", "future_either", "retry",
+    "future_map_chunked_lazy",
+    "FutureError", "WorkerDiedError", "ChannelError", "FutureCancelledError",
+    "GlobalsError", "NonExportableObjectError", "RNGMisuseWarning",
+    "signal_progress", "message", "ListEnv", "set_session_seed",
+    "CapturedRun", "ImmediateCondition",
+]

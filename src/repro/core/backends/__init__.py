@@ -1,0 +1,1 @@
+"""Future backends: sequential | threads | processes | cluster | jax_async."""

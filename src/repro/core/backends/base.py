@@ -1,0 +1,83 @@
+"""Backend ABC + registry (the paper's 'future backend' contract).
+
+A backend resolves futures. The *Future API conformance* contract (paper
+§Validation / future.tests) is: for any backend, the same program yields the
+same value, the same relayed output/conditions, the same RNG streams, and
+the same exception behaviour. ``tests/test_conformance.py`` asserts this for
+every registered backend.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable
+
+from ..conditions import CapturedRun, ImmediateCondition
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    """Everything a backend needs to evaluate one future."""
+    task_id: int
+    fn: Callable[..., Any]              # frozen callable (globals snapshotted)
+    args: tuple = ()
+    kwargs: dict = dataclasses.field(default_factory=dict)
+    label: str = ""
+    capture_stdout: bool = True
+    capture_conditions: bool = True
+    seed_declared: bool = False
+    # For external-process backends only: pre-shipped function blob.
+    shipped: bytes | None = None
+    nested_stack: tuple = ()            # BackendSpec tuple for the worker
+
+
+class Backend(abc.ABC):
+    """One resolver of futures. Implementations must be registered in
+    BACKEND_REGISTRY to be usable from plan()."""
+
+    name: str = "abstract"
+    #: whether immediateConditions can be relayed before value()
+    supports_immediate: bool = False
+
+    @abc.abstractmethod
+    def submit(self, task: TaskSpec) -> Any:
+        """Begin resolving; returns an opaque handle. May block when all
+        workers are busy (paper: future() blocks until a worker frees up)."""
+
+    @abc.abstractmethod
+    def poll(self, handle: Any) -> bool:
+        """Non-blocking: is the future resolved?"""
+
+    @abc.abstractmethod
+    def collect(self, handle: Any) -> CapturedRun:
+        """Block until resolved and return the captured run.
+
+        Infrastructure failures raise FutureError; evaluation errors are
+        *inside* the CapturedRun (relayed by the Future at value())."""
+
+    def drain_immediate(self, handle: Any) -> list[ImmediateCondition]:
+        """Immediate conditions produced since the last drain (may be [])."""
+        return []
+
+    def cancel(self, handle: Any) -> bool:
+        """Best-effort cancel; returns True if the task will not complete."""
+        return False
+
+    def shutdown(self) -> None:
+        """Release workers. Idempotent."""
+
+    @property
+    def workers(self) -> int:
+        return 1
+
+
+BACKEND_REGISTRY: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    def deco(cls):
+        cls.name = name
+        BACKEND_REGISTRY[name] = cls
+        return cls
+    return deco

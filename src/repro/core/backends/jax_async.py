@@ -1,0 +1,58 @@
+"""plan(jax_async): futures backed by JAX's asynchronous dispatch.
+
+JAX already *is* a future system at the device level: calling a jitted
+function returns immediately with arrays that are promises over device
+computation. This backend makes that explicit in Future-API terms —
+``submit`` dispatches on the caller thread (cheap: tracing/compile cache hit
++ enqueue), ``resolved`` maps to ``is_ready()`` on the result leaves, and
+``collect`` maps to ``block_until_ready()``.
+
+This is the backend of choice *inside* a pod where the computation is one
+SPMD program and host-level process parallelism would only add copies — the
+analogue of the paper's observation that multithreading lives below the R
+level, adapted to XLA.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from ..conditions import CapturedRun, capture_run
+from .. import planning as plan_mod
+from ..rng import rng_scope
+from .base import Backend, TaskSpec, register_backend
+
+
+def _leaves(value: Any):
+    return [x for x in jax.tree_util.tree_leaves(value)
+            if isinstance(x, jax.Array)]
+
+
+@register_backend("jax_async")
+class JaxAsyncBackend(Backend):
+    supports_immediate = True
+
+    def submit(self, task: TaskSpec) -> CapturedRun:
+        # Dispatch happens now (async); python-level errors are captured now,
+        # device-level errors surface at collect() via block_until_ready.
+        with plan_mod.use_nested_stack():
+            with rng_scope(task.seed_declared):
+                run = capture_run(
+                    lambda: task.fn(*task.args, **task.kwargs),
+                    capture_stdout=task.capture_stdout,
+                    capture_conditions=task.capture_conditions,
+                )
+        return run
+
+    def poll(self, handle: CapturedRun) -> bool:
+        if handle.error is not None:
+            return True
+        return all(leaf.is_ready() for leaf in _leaves(handle.value))
+
+    def collect(self, handle: CapturedRun) -> CapturedRun:
+        if handle.error is None:
+            for leaf in _leaves(handle.value):
+                leaf.block_until_ready()
+        return handle

@@ -1,0 +1,251 @@
+"""plan(processes) / plan(cluster): resolve futures on worker processes.
+
+The analogue of the paper's ``multisession`` / PSOCK ``cluster`` backends: a
+pool of background interpreter processes, functions + snapshotted globals
+shipped over pipes (serialization — the paper's §Known limitations apply:
+non-picklable globals raise NonExportableObjectError *at creation*, not at
+some far-away crash on the worker).
+
+This backend is the substrate for fault tolerance:
+
+* a worker that dies mid-task (simulated node failure) is detected via
+  pipe EOF and surfaces as :class:`WorkerDiedError` (a FutureError), while
+  the pool **restarts the worker** so subsequent futures find a healthy pool;
+* ``cancel()`` terminates the worker running the task (used by
+  ``future_either`` speculative execution) and restarts it;
+* ``resize()`` grows/shrinks the pool — elastic scaling.
+"""
+
+from __future__ import annotations
+
+import itertools
+import pickle
+import threading
+from typing import Any
+
+import multiprocessing as mp
+
+from ..conditions import CapturedRun, ImmediateCondition
+from ..errors import WorkerDiedError
+from ..globals_capture import ship_function
+from .. import planning as plan_mod
+from .base import Backend, TaskSpec, register_backend
+
+
+class _Worker:
+    def __init__(self, ctx, nested_blob: bytes, session_seed: int, wid: int):
+        self.wid = wid
+        self.parent_conn, child_conn = ctx.Pipe()
+        from .worker import worker_main
+        self.proc = ctx.Process(
+            target=worker_main, args=(child_conn, nested_blob, session_seed),
+            daemon=True, name=f"repro-worker-{wid}")
+        self.proc.start()
+        child_conn.close()
+        self._ready = False
+        self.busy_task: "_Handle | None" = None
+
+    def wait_ready(self) -> None:
+        if not self._ready:
+            msg = self.parent_conn.recv()           # handshake
+            assert msg == ("ready",)
+            self._ready = True
+
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+    def terminate(self) -> None:
+        try:
+            self.proc.terminate()
+            self.proc.join(timeout=5)
+        except Exception:                            # noqa: BLE001
+            pass
+        try:
+            self.parent_conn.close()
+        except OSError:
+            pass
+
+
+class _Handle:
+    def __init__(self, task: TaskSpec):
+        self.task = task
+        self.done = threading.Event()
+        self.run: CapturedRun | None = None
+        self.error: Exception | None = None          # infrastructure error
+        self.immediate: list[ImmediateCondition] = []
+        self.ilock = threading.Lock()
+        self.worker: _Worker | None = None
+        self.cancelled = False
+
+
+@register_backend("processes")
+class ProcessBackend(Backend):
+    """Pool of persistent worker processes with fault detection/restart."""
+
+    supports_immediate = True
+    # spawn, not fork: the parent has live XLA thread pools once any jax
+    # computation ran; forking then risks deadlock on inherited mutexes.
+    _START_METHOD = "spawn"
+
+    def __init__(self, workers: int | None = None):
+        self._n = int(workers) if workers else plan_mod.available_cores()
+        self._ctx = mp.get_context(self._START_METHOD)
+        self._nested_blob = pickle.dumps(plan_mod.nested_stack())
+        from .. import rng as rng_mod
+        self._session_seed = rng_mod._session_seed
+        self._wid = itertools.count()
+        self._lock = threading.Lock()
+        # start all workers first, then handshake (parallel startup)
+        self._idle: list[_Worker] = [self._spawn(defer=True)
+                                     for _ in range(self._n)]
+        for w in self._idle:
+            w.wait_ready()
+        self._slots = threading.Semaphore(self._n)
+        self._open = True
+
+    # -- pool management ----------------------------------------------------
+
+    def _spawn(self, defer: bool = False) -> _Worker:
+        w = _Worker(self._ctx, self._nested_blob, self._session_seed,
+                    next(self._wid))
+        if not defer:
+            w.wait_ready()
+        return w
+
+    def _checkout(self) -> _Worker:
+        with self._lock:
+            while self._idle:
+                w = self._idle.pop()
+                if w.alive():
+                    return w
+                w.terminate()
+            return self._spawn()
+
+    def _checkin(self, w: _Worker, healthy: bool) -> None:
+        with self._lock:
+            if not self._open:
+                w.terminate()
+                return
+            if healthy and w.alive():
+                self._idle.append(w)
+            else:
+                w.terminate()
+                self._idle.append(self._spawn())     # restart: pool self-heals
+
+    def resize(self, workers: int) -> None:
+        """Elastic scaling: grow/shrink the worker pool in place."""
+        with self._lock:
+            delta = workers - self._n
+            self._n = workers
+        if delta > 0:
+            for _ in range(delta):
+                with self._lock:
+                    self._idle.append(self._spawn())
+                self._slots.release()
+        else:
+            for _ in range(-delta):
+                self._slots.acquire()
+                with self._lock:
+                    if self._idle:
+                        self._idle.pop().terminate()
+
+    # -- Backend API ---------------------------------------------------------
+
+    def submit(self, task: TaskSpec) -> _Handle:
+        handle = _Handle(task)
+        self._slots.acquire()            # paper semantics: block for a worker
+        th = threading.Thread(target=self._drive, args=(handle,),
+                              name=f"future-io-{task.task_id}", daemon=True)
+        th.start()
+        return handle
+
+    def _drive(self, handle: _Handle) -> None:
+        """Parent-side I/O thread: feed one task to one worker, pump
+        progress messages, detect death."""
+        task = handle.task
+        try:
+            if handle.cancelled:
+                from ..errors import FutureCancelledError
+                handle.error = FutureCancelledError(
+                    "future cancelled before dispatch", future_label=task.label)
+                return
+            worker = self._checkout()
+            handle.worker = worker
+            worker.busy_task = handle
+            healthy = True
+            try:
+                blob = task.shipped
+                assert blob is not None, "process backend requires shipped fn"
+                worker.parent_conn.send(("task", task.task_id, blob))
+                while True:
+                    try:
+                        msg = worker.parent_conn.recv()
+                    except (EOFError, OSError):
+                        healthy = False
+                        handle.error = WorkerDiedError(
+                            f"worker {worker.wid} died while resolving "
+                            f"future {task.label or task.task_id!r}",
+                            future_label=task.label, worker=worker.wid)
+                        return
+                    if msg[0] == "progress":
+                        with handle.ilock:
+                            handle.immediate.append(msg[2])
+                    elif msg[0] == "result":
+                        handle.run = msg[2]
+                        return
+            finally:
+                worker.busy_task = None
+                self._checkin(worker, healthy and not handle.cancelled)
+        finally:
+            handle.done.set()
+            self._slots.release()
+
+    def poll(self, handle: _Handle) -> bool:
+        return handle.done.is_set()
+
+    def collect(self, handle: _Handle) -> CapturedRun:
+        handle.done.wait()
+        if handle.error is not None:
+            raise handle.error
+        assert handle.run is not None
+        return handle.run
+
+    def drain_immediate(self, handle: _Handle) -> list[ImmediateCondition]:
+        with handle.ilock:
+            out = handle.immediate[:]
+            handle.immediate.clear()
+        return out
+
+    def cancel(self, handle: _Handle) -> bool:
+        handle.cancelled = True
+        if handle.done.is_set():
+            return False
+        w = handle.worker
+        if w is not None:
+            w.terminate()                # hard-cancel: kill the worker; the
+        return True                      # drive thread sees EOF and returns
+
+    def shutdown(self) -> None:
+        with self._lock:
+            self._open = False
+            workers, self._idle = self._idle, []
+        for w in workers:
+            try:
+                w.parent_conn.send(("stop",))
+            except (OSError, ValueError):
+                pass
+            w.terminate()
+
+    @property
+    def workers(self) -> int:
+        return self._n
+
+
+@register_backend("cluster")
+class ClusterBackend(ProcessBackend):
+    """Multi-node flavour: identical protocol, one worker per 'node' (pod).
+
+    On real deployments the Pipe transport is replaced by the launcher's
+    gRPC/TCP channels; the Future API above it is unchanged — that is the
+    paper's point. ``workers`` here is the number of pods.
+    """

@@ -1,0 +1,98 @@
+"""plan(threads): resolve futures on a pool of threads.
+
+The in-process analogue of the paper's ``multicore`` (shared-memory,
+zero-copy globals). JAX releases the GIL inside jitted computations, so this
+gives real overlap for device work and I/O; for pure-Python bodies it gives
+concurrency. Creation blocks when all workers are busy, matching the
+paper's semantics ("future() blocks until one of the workers is available").
+
+Immediate conditions are supported live: the worker thread pushes progress
+events onto a queue the parent drains at resolved()/value().
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any
+
+from ..conditions import CapturedRun, ImmediateCondition, capture_run
+from ..errors import FutureCancelledError
+from .. import planning as plan_mod
+from ..rng import rng_scope
+from .base import Backend, TaskSpec, register_backend
+
+
+class _Handle:
+    def __init__(self, task: TaskSpec):
+        self.task = task
+        self.done = threading.Event()
+        self.run: CapturedRun | None = None
+        self.immediate: queue.SimpleQueue[ImmediateCondition] = queue.SimpleQueue()
+        self.cancelled = False
+
+
+@register_backend("threads")
+class ThreadBackend(Backend):
+    supports_immediate = True
+
+    def __init__(self, workers: int | None = None):
+        from ..planning import available_cores
+        self._n = int(workers) if workers else available_cores()
+        self._slots = threading.Semaphore(self._n)
+        self._nested = plan_mod.nested_stack()
+        self._open = True
+
+    def submit(self, task: TaskSpec) -> _Handle:
+        handle = _Handle(task)
+        self._slots.acquire()            # paper semantics: block for a worker
+        th = threading.Thread(target=self._worker, args=(handle,),
+                              name=f"future-{task.task_id}", daemon=True)
+        th.start()
+        return handle
+
+    def _worker(self, handle: _Handle) -> None:
+        task = handle.task
+        try:
+            if handle.cancelled:
+                run = CapturedRun(error=FutureCancelledError(
+                    "future cancelled before it started",
+                    future_label=task.label))
+            else:
+                with plan_mod.use_nested_stack(self._nested):
+                    with rng_scope(task.seed_declared):
+                        run = capture_run(
+                            lambda: task.fn(*task.args, **task.kwargs),
+                            capture_stdout=task.capture_stdout,
+                            capture_conditions=task.capture_conditions,
+                            immediate_emit=handle.immediate.put,
+                        )
+            handle.run = run
+        finally:
+            handle.done.set()
+            self._slots.release()
+
+    def poll(self, handle: _Handle) -> bool:
+        return handle.done.is_set()
+
+    def collect(self, handle: _Handle) -> CapturedRun:
+        handle.done.wait()
+        assert handle.run is not None
+        return handle.run
+
+    def drain_immediate(self, handle: _Handle) -> list[ImmediateCondition]:
+        out = []
+        while True:
+            try:
+                out.append(handle.immediate.get_nowait())
+            except queue.Empty:
+                return out
+
+    def cancel(self, handle: _Handle) -> bool:
+        # Threads cannot be killed; we can only prevent a queued start.
+        handle.cancelled = True
+        return not handle.done.is_set() and handle.run is None
+
+    @property
+    def workers(self) -> int:
+        return self._n

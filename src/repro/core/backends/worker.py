@@ -1,0 +1,92 @@
+"""Worker-process main loop for the process/cluster backend.
+
+Protocol (length-prefixed pickles over a multiprocessing Pipe):
+
+  parent -> worker : ("task", task_id, blob)        blob = shipped function
+                     ("stop",)
+  worker -> parent : ("progress", task_id, payload) immediateConditions, live
+                     ("result", task_id, run_blob)  CapturedRun (sanitized)
+                     ("ready",)                     handshake after spawn
+
+Unexpected worker death is detected by the parent as EOF/broken pipe and
+surfaces as WorkerDiedError — the paper's 'terminated R workers' case.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+from typing import Any
+
+
+def _sanitize_run(run) -> Any:
+    """Make a CapturedRun safely picklable (exception objects may not be)."""
+    if run.error is not None:
+        try:
+            pickle.dumps(run.error)
+        except Exception:                                   # noqa: BLE001
+            run = dataclasses.replace(
+                run, error=RuntimeError(
+                    f"{type(run.error).__name__}: {run.error}"))
+    try:
+        pickle.dumps(run.value)
+    except Exception as exc:                                # noqa: BLE001
+        run = dataclasses.replace(
+            run, value=None,
+            error=RuntimeError(
+                f"future value of type {type(run.value).__name__} "
+                f"is not exportable from the worker: {exc}"),
+        )
+    return run
+
+
+def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
+    """Entry point of a spawned worker process."""
+    # Workers must see a *popped* plan stack (nested-parallelism protection)
+    # and must never oversubscribe numeric libraries.
+    os.environ.setdefault("OMP_NUM_THREADS", "1")
+    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+    from ..conditions import capture_run
+    from ..globals_capture import unship_function
+    from .. import planning as plan_mod
+    from .. import rng as rng_mod
+    from ..rng import rng_scope
+
+    nested = pickle.loads(nested_stack_blob)
+    plan_mod._TLS.stack = tuple(nested)         # worker-local plan stack
+    rng_mod.set_session_seed(session_seed)
+
+    conn.send(("ready",))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return
+        if msg[0] == "stop":
+            return
+        _, task_id, blob = msg
+        payload = pickle.loads(blob)
+        fn = unship_function(payload["fn"])
+        args = payload["args"]
+        kwargs = payload["kwargs"]
+
+        def emit(cond, _tid=task_id):
+            try:
+                conn.send(("progress", _tid, cond))
+            except (OSError, ValueError):
+                pass
+
+        with rng_scope(payload["seed_declared"]):
+            run = capture_run(
+                lambda: fn(*args, **kwargs),
+                capture_stdout=payload["capture_stdout"],
+                capture_conditions=payload["capture_conditions"],
+                immediate_emit=emit,
+            )
+        run = _sanitize_run(run)
+        try:
+            conn.send(("result", task_id, run))
+        except (OSError, ValueError):
+            return

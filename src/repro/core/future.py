@@ -1,0 +1,260 @@
+"""The Future API: future(), value(), resolved() (paper §Three constructs).
+
+    f <- future(expr)   ->   f = future(lambda: slow_fcn(x))
+    v <- value(f)       ->   v = value(f)
+    r <- resolved(f)    ->   r = resolved(f)
+
+Semantics reproduced from the paper:
+
+* **snapshot at creation** — globals/closure values are frozen when the
+  future is created, so reassigning ``x`` afterwards does not change the
+  future's value;
+* **blocking** — creating a future blocks iff no worker is free (backend
+  dependent); ``value()`` blocks until resolved; ``resolved()`` never blocks;
+* **relaying** — stdout first, then conditions in order, at the first
+  ``value()``; errors re-raised as-is at *every* ``value()``;
+* **lazy futures** — ``lazy=True`` defers dispatch until ``resolved()`` or
+  ``value()`` first touches the future; lazy futures can be ``merge()``d
+  into a single chunked future (the paper's §Future-work load balancing);
+* **seed** — ``seed=True`` gives the body a deterministic per-future RNG
+  stream key, invariant to the backend and worker count.
+"""
+
+from __future__ import annotations
+
+import inspect
+import itertools
+import threading
+from typing import Any, Callable, Iterable, Sequence
+
+from . import planning as plan_mod
+from .backends.base import Backend, TaskSpec
+from .conditions import CapturedRun, relay
+from .errors import FutureError, GlobalsError
+from .globals_capture import (assert_exportable, identify_globals,
+                              ship_function)
+from . import rng as rng_mod
+
+_ids = itertools.count(1)
+
+_CREATED, _SUBMITTED, _COLLECTED = "created", "submitted", "collected"
+
+
+def _freeze(fn: Callable, explicit: dict | None) -> tuple[Callable, dict, set]:
+    """Rebuild ``fn`` against a creation-time snapshot of its globals and
+    closure — the paper's automatic-globals semantics."""
+    import types
+    snapshot, packages = identify_globals(fn, explicit=explicit)
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return fn, snapshot, packages
+    g = dict(getattr(fn, "__globals__", {}))       # freeze *bindings* now
+    g.update({k: v for k, v in snapshot.items() if k not in code.co_freevars})
+    cells = []
+    if code.co_freevars:
+        for name in code.co_freevars:
+            cells.append(types.CellType(snapshot.get(name)))
+    frozen = types.FunctionType(code, g, fn.__name__, fn.__defaults__,
+                                tuple(cells) or None)
+    if fn.__kwdefaults__:
+        frozen.__kwdefaults__ = dict(fn.__kwdefaults__)
+    return frozen, snapshot, packages
+
+
+def _accepts_kwarg(fn: Callable, name: str) -> bool:
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    params = sig.parameters
+    if name in params:
+        return True
+    return any(p.kind is inspect.Parameter.VAR_KEYWORD
+               for p in params.values())
+
+
+class Future:
+    """One future. Create via :func:`future`, interrogate via
+    :func:`resolved`, harvest via :func:`value`."""
+
+    def __init__(self, fn: Callable, args: tuple, kwargs: dict, *,
+                 seed: bool | int | None = None,
+                 lazy: bool = False,
+                 globals: dict | None = None,      # noqa: A002 — paper name
+                 label: str | None = None,
+                 stdout: bool = True,
+                 conditions: bool = True,
+                 backend: Backend | None = None):
+        self.id = next(_ids)
+        self.label = label or f"future-{self.id}"
+        self._lock = threading.Lock()
+        self._state = _CREATED
+        self._handle: Any = None
+        self._run: CapturedRun | None = None
+        self._relayed = False
+        self._stdout = stdout
+        self._conditions = conditions
+        self._backend = backend
+
+        self.seed_declared = seed is not None and seed is not False
+        if isinstance(seed, bool) or seed is None:
+            self._stream_index = rng_mod.next_stream_index()
+        else:
+            self._stream_index = int(seed)
+
+        frozen, snapshot, packages = _freeze(fn, globals)
+        self._snapshot, self._packages = snapshot, packages
+        if self.seed_declared and _accepts_kwarg(fn, "key"):
+            key = rng_mod.stream_key(self._stream_index)
+            kwargs = dict(kwargs, key=key)
+        self._fn, self._args, self._kwargs = frozen, args, kwargs
+
+        if not lazy:
+            self._submit()
+
+    # -- dispatch -------------------------------------------------------------
+
+    def _task(self, backend: Backend) -> TaskSpec:
+        shipped = None
+        if backend.name in ("processes", "cluster"):
+            assert_exportable(self._snapshot, backend=backend.name)
+            from .globals_capture import dumps_robust
+            shipped = dumps_robust({
+                "fn": ship_function(self._fn, self._snapshot, self._packages),
+                "args": self._args, "kwargs": self._kwargs,
+                "capture_stdout": self._stdout,
+                "capture_conditions": self._conditions,
+                "seed_declared": self.seed_declared,
+            })
+        return TaskSpec(
+            task_id=self.id, fn=self._fn, args=self._args,
+            kwargs=self._kwargs, label=self.label,
+            capture_stdout=self._stdout, capture_conditions=self._conditions,
+            seed_declared=self.seed_declared, shipped=shipped,
+        )
+
+    def _submit(self) -> None:
+        with self._lock:
+            if self._state != _CREATED:
+                return
+            backend = self._backend or plan_mod.active_backend()
+            self._backend = backend
+            self._handle = backend.submit(self._task(backend))
+            self._state = _SUBMITTED
+
+    # -- the three constructs ---------------------------------------------------
+
+    def resolved(self) -> bool:
+        """Non-blocking: lazy futures are launched on first touch (paper)."""
+        if self._state == _CREATED:
+            self._submit()
+            # fallthrough: freshly submitted may already be done (sequential)
+        if self._state == _COLLECTED:
+            return True
+        self._relay_immediate()
+        return self._backend.poll(self._handle)
+
+    def value(self) -> Any:
+        """Block until resolved; relay stdout/conditions (once) and the
+        error (every call); return the value."""
+        if self._state == _CREATED:
+            self._submit()
+        if self._state != _COLLECTED:
+            run = self._backend.collect(self._handle)   # may raise FutureError
+            with self._lock:
+                self._run, self._state = run, _COLLECTED
+        assert self._run is not None
+        if not self._relayed:
+            self._relayed = True
+            return relay(self._run)          # prints, warns, raises, returns
+        if self._run.error is not None:
+            raise self._run.error
+        return self._run.value
+
+    # -- extras ------------------------------------------------------------------
+
+    def cancel(self) -> bool:
+        if self._state == _SUBMITTED:
+            return self._backend.cancel(self._handle)
+        return False
+
+    def _relay_immediate(self) -> None:
+        if self._state == _SUBMITTED and self._backend is not None:
+            import sys
+            for cond in self._backend.drain_immediate(self._handle):
+                print(f"[progress] {cond.payload}", file=sys.stderr)
+
+    def __repr__(self):
+        return f"<Future {self.label} state={self._state}>"
+
+
+# --------------------------------------------------------------------------
+# Public constructors
+# --------------------------------------------------------------------------
+
+def future(fn: Callable, *args, **opts_and_kwargs) -> Future:
+    """Create a future evaluating ``fn(*args, **kwargs)``.
+
+    Options (consumed, not passed to fn): ``seed``, ``lazy``, ``globals``,
+    ``label``, ``stdout``, ``conditions``, ``backend``.
+    """
+    opts = {}
+    for name in ("seed", "lazy", "globals", "label", "stdout", "conditions",
+                 "backend"):
+        if name in opts_and_kwargs:
+            opts[name] = opts_and_kwargs.pop(name)
+    return Future(fn, args, opts_and_kwargs, **opts)
+
+
+def resolved(f: "Future | Iterable[Future]") -> "bool | list[bool]":
+    if isinstance(f, Future):
+        return f.resolved()
+    return [fi.resolved() for fi in f]
+
+
+def value(f: "Future | Sequence | dict") -> Any:
+    """Generic value(): works on a future, list/tuple of futures, or dict —
+    the paper's value() S3 generic for containers."""
+    if isinstance(f, Future):
+        return f.value()
+    if isinstance(f, dict):
+        return {k: value(v) for k, v in f.items()}
+    if isinstance(f, (list, tuple)):
+        # merged futures return lists of sub-values; flatten one level so
+        # value(fs) after chunking equals value(fs) without chunking.
+        flat = []
+        for fi in f:
+            v = value(fi)
+            if isinstance(fi, Future) and getattr(fi, "_merged_n", 0):
+                flat.extend(v)
+            else:
+                flat.append(v)
+        return type(f)(flat)
+    return f
+
+
+def merge(futures: Sequence[Future], *, label: str | None = None) -> Future:
+    """Merge *lazy* futures into one future resolving them sequentially in a
+    single task (paper §Future work): the chunking primitive that the
+    map-reduce layer uses for load balancing. ``value()`` of the merged
+    future returns the list of sub-values."""
+    for f in futures:
+        if f._state != _CREATED:
+            raise GlobalsError("merge() requires lazy, unlaunched futures")
+
+    subs = [(f._fn, f._args, f._kwargs, f.seed_declared) for f in futures]
+
+    def _chunk(subs=subs):
+        out = []
+        for fn, args, kwargs, _seed in subs:
+            out.append(fn(*args, **kwargs))
+        return out
+
+    merged = Future(_chunk, (), {}, label=label or
+                    f"merge[{len(futures)}]",
+                    seed=futures[0].seed_declared or None)
+    merged._merged_n = len(futures)
+    return merged
+
+
+__all__ = ["Future", "future", "value", "resolved", "merge", "FutureError"]

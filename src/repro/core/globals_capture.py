@@ -1,0 +1,227 @@
+"""Automatic identification and snapshotting of globals (paper §Globals).
+
+The R implementation walks the expression's AST (via ``globals`` /
+``codetools``) to find free variables, records their *values at
+future-creation time*, and ships them with the future. The defining
+semantics (paper's example):
+
+    x <- 1
+    f <- future({ slow_fcn(x) })
+    x <- 2
+    value(f)        # uses x == 1
+
+We reproduce this in Python by analysing the callable's code object:
+
+* ``co_freevars``  -> closure cells (lexically captured variables);
+* ``LOAD_GLOBAL``-referenced ``co_names`` -> the function's ``__globals__``;
+* nested code objects (lambdas/comprehensions inside the body) are scanned
+  recursively — the paper's "walking the AST in order".
+
+Like the paper we use an *optimistic* strategy: names that resolve to
+modules or builtins are recorded as *packages* (re-imported on the worker,
+never serialized); unresolvable names are tolerated at creation (they may be
+created at run time, e.g. ``get("k")``-style dynamic lookup) and produce the
+ordinary NameError at evaluation — and, as in the paper, can be supplied
+explicitly with ``globals={"k": 42}``.
+
+Snapshot rules: immutable scalars/strings/tuples and JAX/numpy arrays are
+captured **by reference** (cheap — JAX arrays are immutable); mutable
+containers (list/dict/set/bytearray) are **copied** at creation so later
+mutation does not leak into the future, mirroring R's copy-on-assign.
+"""
+
+from __future__ import annotations
+
+import builtins
+import copy
+import dis
+import pickle
+import types
+from typing import Any, Callable, Iterable
+
+from .errors import GlobalsError, NonExportableObjectError
+
+_GLOBAL_OPS = {"LOAD_GLOBAL", "LOAD_NAME", "STORE_GLOBAL", "DELETE_GLOBAL"}
+
+
+def _code_global_names(code: types.CodeType) -> set[str]:
+    """Names referenced via global scope in ``code`` and nested code objects."""
+    names: set[str] = set()
+    stack = [code]
+    while stack:
+        co = stack.pop()
+        for instr in dis.get_instructions(co):
+            if instr.opname in _GLOBAL_OPS and isinstance(instr.argval, str):
+                names.add(instr.argval)
+        for const in co.co_consts:
+            if isinstance(const, types.CodeType):
+                stack.append(const)
+    return names
+
+
+def _snapshot_value(value: Any) -> Any:
+    """Creation-time snapshot. Mutable python containers are copied; arrays,
+    scalars, functions and modules are captured by reference (immutables)."""
+    if isinstance(value, (list, dict, set, bytearray)):
+        return copy.deepcopy(value)
+    return value
+
+
+def identify_globals(fn: Callable, *,
+                     explicit: dict[str, Any] | None = None,
+                     ) -> tuple[dict[str, Any], set[str]]:
+    """Return ``(globals_snapshot, packages)`` for a callable.
+
+    ``globals_snapshot`` maps name -> snapshotted value for every free
+    variable the future body needs; ``packages`` is the set of module names
+    recorded (to be re-imported on the worker rather than serialized —
+    the paper's package-namespace recording).
+    """
+    if not callable(fn):
+        raise GlobalsError(f"future body must be callable, got {type(fn)!r}")
+    snapshot: dict[str, Any] = {}
+    packages: set[str] = set()
+
+    code = getattr(fn, "__code__", None)
+    if code is None:                      # builtins / partials: nothing to scan
+        if explicit:
+            snapshot.update({k: _snapshot_value(v) for k, v in explicit.items()})
+        return snapshot, packages
+
+    # Closure cells (lexical captures).
+    if code.co_freevars and fn.__closure__:
+        for name, cell in zip(code.co_freevars, fn.__closure__):
+            try:
+                snapshot[name] = _snapshot_value(cell.cell_contents)
+            except ValueError:            # empty cell (recursive def)
+                pass
+
+    # Module-level globals referenced by the body.
+    fn_globals = getattr(fn, "__globals__", {})
+    for name in sorted(_code_global_names(code)):
+        if explicit and name in explicit:
+            continue                      # explicit overrides win
+        if name in fn_globals:
+            val = fn_globals[name]
+            if isinstance(val, types.ModuleType):
+                packages.add((name, val.__name__))   # (alias, module)
+            else:
+                snapshot[name] = _snapshot_value(val)
+        elif hasattr(builtins, name):
+            continue                      # builtins need no shipping
+        # else: optimistic — may be defined at run time (paper's get("k")).
+
+    if explicit:
+        for k, v in explicit.items():
+            snapshot[k] = _snapshot_value(v)
+    return snapshot, packages
+
+
+def assert_exportable(snapshot: dict[str, Any], *, backend: str) -> None:
+    """For external-process backends, verify the snapshot can be serialized —
+    the analogue of the paper's non-exportable-object scan (connections,
+    external pointers)."""
+    for name, val in snapshot.items():
+        if isinstance(val, types.ModuleType):
+            continue
+        try:
+            dumps_robust(val)
+        except Exception as exc:          # noqa: BLE001
+            raise NonExportableObjectError(
+                f"global {name!r} ({type(val).__name__}) cannot be exported "
+                f"to backend {backend!r}: {exc}") from exc
+
+
+# --------------------------------------------------------------------------
+# Function shipping without cloudpickle
+# --------------------------------------------------------------------------
+
+def _fn_importable(fn: types.FunctionType) -> bool:
+    """Can this function be pickled by reference (module.qualname lookup)?"""
+    if fn.__name__ == "<lambda>" or "<locals>" in fn.__qualname__:
+        return False
+    import sys
+    mod = sys.modules.get(fn.__module__)
+    if mod is None:
+        return False
+    obj = mod
+    for part in fn.__qualname__.split("."):
+        obj = getattr(obj, part, None)
+        if obj is None:
+            return False
+    return obj is fn
+
+
+def _rebuild_shipped(blob: bytes) -> Callable:
+    return unship_function(blob)
+
+
+class _ShippingPickler(pickle.Pickler):
+    """Pickler that ships lambdas / local functions by marshalled code +
+    their own recursively-identified globals (no cloudpickle dependency)."""
+
+    def reducer_override(self, obj):
+        if isinstance(obj, types.FunctionType) and not _fn_importable(obj):
+            snapshot, packages = identify_globals(obj)
+            return (_rebuild_shipped, (ship_function(obj, snapshot,
+                                                     packages),))
+        if isinstance(obj, types.ModuleType):
+            import importlib
+            return (importlib.import_module, (obj.__name__,))
+        return NotImplemented
+
+
+def dumps_robust(obj: Any) -> bytes:
+    import io
+    buf = io.BytesIO()
+    _ShippingPickler(buf, protocol=pickle.HIGHEST_PROTOCOL).dump(obj)
+    return buf.getvalue()
+
+
+def ship_function(fn: Callable, snapshot: dict[str, Any],
+                  packages: Iterable[str]) -> bytes:
+    """Serialize a callable (including lambdas/closures) for a worker process.
+
+    Plain ``pickle`` cannot serialize lambdas; we marshal the code object and
+    rebuild the function on the worker with its snapshot as globals — the
+    moral equivalent of the paper shipping the expression + its globals.
+    Function-valued globals/defaults are shipped recursively.
+    """
+    import marshal
+    code = fn.__code__
+    payload = {
+        "code": marshal.dumps(code),
+        "name": fn.__name__,
+        "defaults": fn.__defaults__,
+        "kwdefaults": fn.__kwdefaults__,
+        "closure_names": code.co_freevars,
+        "snapshot": snapshot,
+        "packages": sorted(set(packages)),
+        "doc": fn.__doc__,
+    }
+    return dumps_robust(payload)
+
+
+def unship_function(blob: bytes) -> Callable:
+    """Rebuild a shipped function inside a worker process."""
+    import importlib
+    import marshal
+    payload = pickle.loads(blob)
+    code = marshal.loads(payload["code"])
+    g: dict[str, Any] = {"__builtins__": builtins}
+    for entry in payload["packages"]:
+        alias, mod = entry if isinstance(entry, tuple) else (
+            entry.split(".")[0], entry)
+        try:
+            g[alias] = importlib.import_module(mod)
+        except ImportError:
+            pass
+    closure_names = payload["closure_names"]
+    snapshot = dict(payload["snapshot"])
+    cells = tuple(types.CellType(snapshot.pop(n, None)) for n in closure_names)
+    g.update(snapshot)
+    fn = types.FunctionType(code, g, payload["name"],
+                            payload["defaults"], cells or None)
+    if payload["kwdefaults"]:
+        fn.__kwdefaults__ = payload["kwdefaults"]
+    return fn

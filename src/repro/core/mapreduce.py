@@ -1,0 +1,171 @@
+"""Map-reduce frontends built on the three Future constructs.
+
+The paper argues the Future API is *sufficient* to build every higher-level
+parallel pattern (future.apply / furrr / doFuture are thin layers). This
+module is our ``future.mapreduce``: the shared chunking ("load balancing"),
+per-element RNG, ordered collection, retry, and speculative-execution
+helpers that the paper's §Future-work proposes centralizing.
+
+* :func:`future_map` — parallel map with one-chunk-per-worker load
+  balancing (via lazy futures + merge), per-element RNG streams that are
+  invariant to chunking/backend, and as-completed collection.
+* :func:`future_either` — the Hewitt&Baker (EITHER ...) construct: first
+  resolved wins, the losers are cancelled. Used for speculative straggler
+  mitigation in the launcher.
+* :func:`retry` — re-dispatch on FutureError (restart(f) analogue).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterable, Sequence
+
+from . import planning as plan_mod
+from .errors import FutureError
+from .future import Future, future, merge, value
+from . import rng as rng_mod
+
+
+def _chunk_slices(n: int, chunks: int) -> list[range]:
+    chunks = max(1, min(chunks, n))
+    base, extra = divmod(n, chunks)
+    out, start = [], 0
+    for i in range(chunks):
+        size = base + (1 if i < extra else 0)
+        out.append(range(start, start + size))
+        start += size
+    return out
+
+
+def future_map(fn: Callable, xs: Sequence, *,
+               seed: bool | int | None = None,
+               chunks: int | None = None,
+               label: str | None = None,
+               retries: int = 0,
+               ) -> list:
+    """Parallel map: ``[fn(x) for x in xs]`` resolved via futures.
+
+    Load balancing (paper §Future work): elements are partitioned into
+    ``chunks`` chunks (default: one per worker) and each chunk becomes one
+    future — one merge()d task per worker instead of one future per element.
+
+    Per-element RNG: with ``seed=``, each *element* gets
+    ``fold_in(session_key, i)`` passed as ``key=`` — identical results for
+    any chunking, backend, or worker count (the paper's CMRG guarantee).
+    """
+    xs = list(xs)
+    if not xs:
+        return []
+    backend = plan_mod.active_backend()
+    n_chunks = chunks or backend.workers
+    seed_declared = seed is not None and seed is not False
+    base_index = int(seed) if isinstance(seed, int) and not isinstance(seed, bool) else 0
+
+    from .future import _accepts_kwarg
+    pass_key = seed_declared and _accepts_kwarg(fn, "key")
+
+    def run_chunk(idx: "list[int]", items: "list", _fn=fn,
+                  _pass_key=pass_key, _base=base_index):
+        out = []
+        for i, x in zip(idx, items):
+            if _pass_key:
+                out.append(_fn(x, key=rng_mod.stream_key(_base + i)))
+            else:
+                out.append(_fn(x))
+        return out
+
+    slices = _chunk_slices(len(xs), n_chunks)
+    fs: list[Future] = []
+    for ci, rng in enumerate(slices):
+        idx = list(rng)
+        items = [xs[i] for i in idx]
+        fs.append(future(run_chunk, idx, items,
+                         seed=seed if seed_declared else None,
+                         label=f"{label or 'map'}[{ci}]"))
+
+    results: list[Any] = [None] * len(xs)
+    pending = {id(f): (f, list(slices[ci])) for ci, f in enumerate(fs)}
+    attempts = {id(f): 0 for f in fs}
+    # as-completed collection (paper: collect resolved futures first to free
+    # workers / lower relay latency), with FutureError-driven re-dispatch.
+    while pending:
+        progressed = False
+        for key in list(pending):
+            f, idx = pending[key]
+            if not f.resolved():
+                continue
+            progressed = True
+            del pending[key]
+            try:
+                vals = f.value()
+            except FutureError:
+                if attempts[key] >= retries:
+                    raise
+                attempts[key] += 1
+                items = [xs[i] for i in idx]
+                nf = future(run_chunk, idx, items,
+                            seed=seed if seed_declared else None,
+                            label=f"{label or 'map'}-retry")
+                pending[id(nf)] = (nf, idx)
+                attempts[id(nf)] = attempts[key]
+                continue
+            for i, v in zip(idx, vals):
+                results[i] = v
+        if pending and not progressed:
+            time.sleep(0.001)
+    return results
+
+
+def future_lapply(xs: Sequence, fn: Callable, **kw) -> list:
+    """R argument order, for familiarity."""
+    return future_map(fn, xs, **kw)
+
+
+def future_either(*thunks: Callable, label: str | None = None) -> Any:
+    """Evaluate thunks concurrently; return the value of the first one that
+    finishes; cancel the rest (paper §Other uses / Hewitt & Baker 1977).
+
+    This is the speculative-execution primitive: dispatch the same work
+    twice and take whichever worker is not the straggler.
+    """
+    if not thunks:
+        raise ValueError("future_either() needs at least one expression")
+    fs = [future(t, label=f"{label or 'either'}[{i}]")
+          for i, t in enumerate(thunks)]
+    while True:
+        for f in fs:
+            if f.resolved():
+                for other in fs:
+                    if other is not f:
+                        other.cancel()
+                return f.value()
+        time.sleep(0.001)
+
+
+def retry(fn: Callable, *, times: int = 3, backoff_s: float = 0.0,
+          on: type = FutureError, label: str | None = None) -> Any:
+    """retry({...}, times=3, on="FutureError") from the paper's roadmap:
+    re-dispatch a future when it fails with an *infrastructure* error
+    (worker death, channel loss). Evaluation errors propagate immediately —
+    they would fail deterministically anywhere."""
+    last: Exception | None = None
+    for attempt in range(times):
+        f = future(fn, label=f"{label or 'retry'}#{attempt}")
+        try:
+            return f.value()
+        except on as exc:                 # noqa: PERF203
+            last = exc
+            if backoff_s:
+                time.sleep(backoff_s * (2 ** attempt))
+    assert last is not None
+    raise last
+
+
+def future_map_chunked_lazy(fn: Callable, xs: Sequence, *,
+                            chunks: int) -> list:
+    """Didactic variant following the paper's §Future-work construction
+    literally: per-element *lazy* futures merged into chunk futures."""
+    lazy = [future(fn, x, lazy=True) for x in xs]
+    merged = [merge([lazy[i] for i in rng])
+              for rng in _chunk_slices(len(lazy), chunks)]
+    return value(merged)

@@ -1,0 +1,194 @@
+"""plan(): the end-user's choice of how/where futures are resolved.
+
+The paper's central design split: *the developer decides what to
+parallelize, the end-user decides how* — by setting ``plan(...)`` once,
+without touching the algorithm code. Plans form a **stack** for nested
+parallelism, e.g.::
+
+    plan([spec("cluster", workers=2), spec("threads", workers=3)])
+
+runs at most 2×3 tasks: the first level resolves on the cluster backend and
+every worker receives the *popped* stack (``threads`` level), any deeper
+nesting defaulting to ``sequential`` — the paper's built-in protection
+against N² oversubscription.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Any, Sequence
+
+from .backends.base import Backend, BACKEND_REGISTRY
+
+
+# --------------------------------------------------------------------------
+# availableCores() — parallelly analogue
+# --------------------------------------------------------------------------
+
+_CORE_ENV_VARS = (
+    "REPRO_WORKERS",            # our own override
+    "SLURM_CPUS_PER_TASK",      # slurm
+    "NSLOTS",                   # SGE
+    "PBS_NUM_PPN",              # torque/PBS
+    "OMP_NUM_THREADS",
+)
+
+
+def available_cores() -> int:
+    """Respect scheduler/env limits instead of blindly using every core —
+    the paper's multi-tenant-friendly ``availableCores()`` (vs the
+    ``detectCores()`` anti-pattern)."""
+    for var in _CORE_ENV_VARS:
+        val = os.environ.get(var)
+        if val:
+            try:
+                n = int(val)
+                if n > 0:
+                    return n
+            except ValueError:
+                pass
+    return os.cpu_count() or 1
+
+
+# --------------------------------------------------------------------------
+# Backend specs & the plan stack
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """A picklable description of a backend level — shippable to workers so
+    nested levels can be instantiated remotely."""
+    name: str
+    kwargs: tuple[tuple[str, Any], ...] = ()
+
+    def instantiate(self) -> Backend:
+        cls = BACKEND_REGISTRY[self.name]
+        return cls(**dict(self.kwargs))
+
+    def __repr__(self):
+        kw = ", ".join(f"{k}={v!r}" for k, v in self.kwargs)
+        return f"{self.name}({kw})"
+
+
+def spec(name: str, **kwargs) -> BackendSpec:
+    if name not in BACKEND_REGISTRY:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"known: {sorted(BACKEND_REGISTRY)}")
+    return BackendSpec(name, tuple(sorted(kwargs.items())))
+
+
+def tweak(base: "BackendSpec | str", **kwargs) -> BackendSpec:
+    """paper: tweak(multisession, workers = 2)."""
+    if isinstance(base, str):
+        base = spec(base)
+    merged = dict(base.kwargs)
+    merged.update(kwargs)
+    return BackendSpec(base.name, tuple(sorted(merged.items())))
+
+
+_SEQUENTIAL = BackendSpec("sequential")
+
+
+class _PlanState(threading.local):
+    def __init__(self):
+        self.stack: tuple[BackendSpec, ...] | None = None  # thread override
+
+
+_TLS = _PlanState()
+_global_stack: tuple[BackendSpec, ...] = (_SEQUENTIAL,)
+_active_backend: Backend | None = None
+_active_spec: BackendSpec | None = None
+_lock = threading.RLock()
+
+
+def _normalize(levels) -> tuple[BackendSpec, ...]:
+    if isinstance(levels, (BackendSpec, str)):
+        levels = [levels]
+    out = []
+    for lv in levels:
+        out.append(spec(lv) if isinstance(lv, str) else lv)
+    return tuple(out) or (_SEQUENTIAL,)
+
+
+def plan(levels: "str | BackendSpec | Sequence[BackendSpec | str]" = "sequential",
+         **kwargs) -> tuple[BackendSpec, ...]:
+    """Set the plan stack; returns the previous stack (like R's plan()).
+
+    ``plan("threads", workers=4)`` is sugar for ``plan(spec("threads",
+    workers=4))``. Changing the plan tears down the previously active
+    backend (workers are shut down) — re-planning mid-run is how elastic
+    scaling is expressed.
+    """
+    global _global_stack, _active_backend, _active_spec
+    if kwargs:
+        if not isinstance(levels, (str, BackendSpec)):
+            raise ValueError("kwargs only allowed with a single backend level")
+        levels = tweak(levels if isinstance(levels, BackendSpec)
+                       else spec(levels), **kwargs)
+    new = _normalize(levels)
+    with _lock:
+        prev = _global_stack
+        if new != prev:
+            if _active_backend is not None:
+                _active_backend.shutdown()
+                _active_backend = None
+                _active_spec = None
+            _global_stack = new
+    return prev
+
+
+def current_stack() -> tuple[BackendSpec, ...]:
+    return _TLS.stack if _TLS.stack is not None else _global_stack
+
+
+def nested_stack() -> tuple[BackendSpec, ...]:
+    """The stack a worker of the current level must adopt (protection
+    against nested oversubscription: default tail = sequential)."""
+    stack = current_stack()
+    return stack[1:] if len(stack) > 1 else (_SEQUENTIAL,)
+
+
+class use_nested_stack:
+    """Context manager installed by backends around in-process evaluation so
+    any future created *inside* a future sees the popped stack."""
+
+    def __init__(self, stack: tuple[BackendSpec, ...] | None = None):
+        self.stack = stack if stack is not None else nested_stack()
+
+    def __enter__(self):
+        self._prev = _TLS.stack
+        _TLS.stack = self.stack
+        return self
+
+    def __exit__(self, *exc):
+        _TLS.stack = self._prev
+        return False
+
+
+def active_backend() -> Backend:
+    """Instantiate (lazily) the backend for the current stack head."""
+    global _active_backend, _active_spec
+    head = current_stack()[0]
+    if _TLS.stack is not None:
+        # Nested context: instantiate a private backend (not cached
+        # globally) — nested levels are short-lived and sequential by
+        # default, so this is cheap.
+        return head.instantiate()
+    with _lock:
+        if _active_spec != head or _active_backend is None:
+            if _active_backend is not None:
+                _active_backend.shutdown()
+            _active_backend = head.instantiate()
+            _active_spec = head
+        return _active_backend
+
+
+def shutdown() -> None:
+    global _active_backend, _active_spec
+    with _lock:
+        if _active_backend is not None:
+            _active_backend.shutdown()
+            _active_backend = None
+            _active_spec = None

@@ -1,0 +1,1 @@
+from .pipeline import Prefetcher, synth_batch  # noqa: F401

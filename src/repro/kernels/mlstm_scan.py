@@ -1,0 +1,126 @@
+"""Chunkwise-parallel mLSTM as a Pallas TPU kernel.
+
+The mLSTM recurrence C_t = f_t C_{t-1} + i_t v_t k_t^T admits a chunked
+form: within a chunk of size Cs the output is an attention-like matmul
+(MXU work), and across chunks only the (D x D) matrix memory, the (D,)
+normalizer and the running max are carried — they live in VMEM scratch over
+the sequential time-grid axis. This turns a sequential recurrence into
+O(S/Cs) MXU-dense steps (the TPU-native adaptation of the xLSTM paper's
+parallel training form).
+
+Stabilization follows the paper: all exponentials are taken relative to a
+running max ``m`` that is folded across chunks.
+
+Layout: q,k,v (B,H,S,D) fp32; gates i,f (B,H,S). Grid: (B,H,NS) sequential.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
+                  c_scr, n_scr, m_scr, *, cs: int, d: int):
+    isq = pl.program_id(2)
+
+    @pl.when(isq == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.zeros_like(m_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * (d ** -0.5)   # (cs, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (cs, d)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (cs, d)
+    i_raw = i_ref[0, 0].astype(jnp.float32)             # (cs,)
+    f_raw = f_ref[0, 0].astype(jnp.float32)
+
+    log_f = -jax.nn.softplus(-f_raw)                    # (cs,)
+    b = jnp.cumsum(log_f)                               # within-chunk cum f
+    b_total = b[-1]
+
+    m_prev = m_scr[0, 0]
+    C_prev = c_scr[...]
+    n_prev = n_scr[0]
+
+    # intra-chunk decay matrix D_ts = b_t - b_s + i_s  (s <= t)
+    dmat = b[:, None] - b[None, :] + i_raw[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    dmat = jnp.where(tri, dmat, -jnp.inf)
+
+    # stabilizer per row: max(inter decay, intra max)
+    inter_log = b + m_prev                              # (cs,)
+    m_row = jnp.maximum(jnp.max(dmat, axis=1), inter_log)
+    m_row = jnp.maximum(m_row, 0.0)
+
+    dexp = jnp.exp(dmat - m_row[:, None])               # (cs, cs)
+    inter_sc = jnp.exp(inter_log - m_row)               # (cs,)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * dexp                                   # (cs, cs)
+    intra = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    inter = jax.lax.dot_general(q, C_prev, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        * inter_sc[:, None]
+
+    n_t = jax.lax.dot_general(q, n_prev[None, :], (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)[:, 0] \
+        * inter_sc + jnp.sum(w, axis=1)
+    denom = jnp.maximum(jnp.abs(n_t), jnp.exp(-m_row))
+    h_ref[0, 0] = ((intra + inter) / denom[:, None]).astype(h_ref.dtype)
+
+    # -- state update for the next chunk --
+    m_new = jnp.maximum(b_total + m_prev, jnp.max(b_total - b + i_raw))
+    # decay applied to previous state
+    state_sc = jnp.exp(b_total + m_prev - m_new)
+    # per-step contribution weights exp(b_total - b_s + i_s - m_new)
+    contrib = jnp.exp(b_total - b + i_raw - m_new)      # (cs,)
+    kw = k * contrib[:, None]
+    c_scr[...] = state_sc * C_prev + jax.lax.dot_general(
+        v, kw, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).T
+    n_scr[0] = state_sc * n_prev + jnp.sum(kw, axis=0)
+    m_scr[0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("cs", "interpret"))
+def mlstm_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+               i_raw: jax.Array, f_raw: jax.Array, *,
+               cs: int = 128, interpret: bool = False) -> jax.Array:
+    """Chunkwise mLSTM. q,k,v: (B,H,S,D); i_raw,f_raw: (B,H,S).
+    Returns h: (B,H,S,D). Initial state is zero (training form)."""
+    b, h, s, d = q.shape
+    cs = min(cs, s)
+    assert s % cs == 0, "pad sequence to the chunk size"
+    ns = s // cs
+
+    return pl.pallas_call(
+        functools.partial(_mlstm_kernel, cs=cs, d=d),
+        grid=(b, h, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, cs, d), lambda ib, ih, isq: (ib, ih, isq, 0)),
+            pl.BlockSpec((1, 1, cs, d), lambda ib, ih, isq: (ib, ih, isq, 0)),
+            pl.BlockSpec((1, 1, cs, d), lambda ib, ih, isq: (ib, ih, isq, 0)),
+            pl.BlockSpec((1, 1, cs), lambda ib, ih, isq: (ib, ih, isq)),
+            pl.BlockSpec((1, 1, cs), lambda ib, ih, isq: (ib, ih, isq)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cs, d),
+                               lambda ib, ih, isq: (ib, ih, isq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),     # matrix memory C
+            pltpu.VMEM((1, d), jnp.float32),     # normalizer n
+            pltpu.VMEM((1, 1), jnp.float32),     # running max m
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, i_raw, f_raw)

@@ -1,0 +1,54 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work on the
+CPU dry-run host (kernel bodies execute in Python for correctness); on TPU
+backends the real Mosaic kernels compile. Model code selects these via
+``kernel_impl="pallas"``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention as _flash_attention
+from .mlstm_scan import mlstm_scan as _mlstm_scan
+from .rglru_scan import rglru_scan as _rglru_scan
+
+
+@functools.cache
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    bq=128, bk=128, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            bq=bq, bk=bk, interpret=interpret)
+
+
+def decode_attention(q, k, v, lengths, *, bs=512, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _decode_attention(q, k, v, lengths, bs=bs, interpret=interpret)
+
+
+def rglru_scan(x, a_gate, i_gate, lam, h0=None, *, cs=256, bw=512,
+               interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _rglru_scan(x, a_gate, i_gate, lam, h0, cs=cs, bw=bw,
+                       interpret=interpret)
+
+
+def mlstm_scan(q, k, v, i_raw, f_raw, *, cs=128, interpret=None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _mlstm_scan(q, k, v, i_raw, f_raw, cs=cs, interpret=interpret)
+
+
+def slstm_scan(z, i, f, o, rz, ri, rf, ro, *, cs=512, interpret=None):
+    from .slstm_scan import slstm_scan as _slstm_scan
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _slstm_scan(z, i, f, o, rz, ri, rf, ro, cs=cs,
+                       interpret=interpret)

@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematically transparent implementation the kernels
+must match (assert_allclose in tests/test_kernels.py, interpret=True).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: int | None = None) -> jax.Array:
+    """q: (B,H,Sq,D); k,v: (B,KV,Skv,D); H = KV*G. fp32 accumulation."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) * (d ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, vf)
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """One-token attention against a cache.
+    q: (B,H,D); k,v: (B,S,KV,D); lengths: (B,) valid cache length."""
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg,
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    valid = jnp.arange(s)[None, :] < lengths[:, None]         # (B,S)
+    logits = jnp.where(valid[:, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def rglru_scan_ref(x: jax.Array, a_gate: jax.Array, i_gate: jax.Array,
+                   lam: jax.Array, h0: jax.Array | None = None,
+                   c: float = 8.0) -> tuple[jax.Array, jax.Array]:
+    """RG-LRU over (B,S,W) fp32 inputs. Returns (y, final_state)."""
+    log_a = a_gate * (-c * jax.nn.softplus(-lam))
+    a = jnp.exp(log_a)
+    x_in = i_gate * x
+    x_sc = jnp.sqrt(jnp.maximum(1 - jnp.exp(2 * log_a), 1e-12)) * x_in
+    if h0 is not None:
+        x_sc = x_sc.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    ys = jax.lax.associative_scan(combine, (a, x_sc), axis=1)[1]
+    return ys, ys[:, -1]
+
+
+def mlstm_chunk_ref(q, k, v, i_raw, f_raw, state=None):
+    """Sequential-oracle mLSTM. q,k,v: (B,H,S,D) fp32; gates: (B,H,S).
+    state: optional dict(C,n,m). Returns (h, new_state)."""
+    b, h, s, d = q.shape
+    if state is None:
+        state = {"C": jnp.zeros((b, h, d, d), jnp.float32),
+                 "n": jnp.zeros((b, h, d), jnp.float32),
+                 "m": jnp.zeros((b, h), jnp.float32)}
+
+    def step(carry, t):
+        C, n, m = carry
+        qt, kt, vt, it, ft = t
+        log_f = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(log_f + m, it)
+        f_sc = jnp.exp(log_f + m - m_new)[..., None]
+        i_sc = jnp.exp(it - m_new)[..., None]
+        C = f_sc[..., None] * C + i_sc[..., None] * \
+            jnp.einsum("bhd,bhe->bhde", vt, kt)
+        n = f_sc * n + i_sc * kt
+        qs = qt * (d ** -0.5)
+        num = jnp.einsum("bhde,bhe->bhd", C, qs)
+        den = jnp.maximum(jnp.abs(jnp.sum(n * qs, -1)), jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), i_raw.transpose(2, 0, 1),
+          f_raw.transpose(2, 0, 1))
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]),
+                                 xs)
+    return hs.transpose(1, 2, 0, 3), {"C": C, "n": n, "m": m}
+
+
+def slstm_scan_ref(z, i, f, o, rz, ri, rf, ro):
+    """Sequential sLSTM oracle on pre-activations.
+    z,i,f,o: (B,NH,S,HD) fp32; r*: (NH,HD,HD). Returns h (B,NH,S,HD)."""
+    b, nh, s, hd = z.shape
+
+    def step(carry, t):
+        c, n, h, m = carry
+        zt, it, ft, ot = t
+        zz = jnp.tanh(zt + jnp.einsum("bhd,hde->bhe", h, rz))
+        i_log = it + jnp.einsum("bhd,hde->bhe", h, ri)
+        f_log = -jax.nn.softplus(-(ft + jnp.einsum("bhd,hde->bhe", h, rf)))
+        oo = jax.nn.sigmoid(ot + jnp.einsum("bhd,hde->bhe", h, ro))
+        m_new = jnp.maximum(f_log + m, i_log)
+        i_sc = jnp.exp(i_log - m_new)
+        f_sc = jnp.exp(f_log + m - m_new)
+        c = f_sc * c + i_sc * zz
+        n = jnp.maximum(f_sc * n + i_sc, jnp.exp(-m_new))
+        h_new = oo * (c / n)
+        return (c, n, h_new, m_new), h_new
+
+    zeros = jnp.zeros((b, nh, hd))
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (z, i, f, o))
+    _, hs = jax.lax.scan(step, (zeros,) * 4, xs)
+    return hs.transpose(1, 2, 0, 3)

@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, the multi-pod dry-run, the roofline
+analyzer, and the futures-based multi-pod training driver."""

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+
+Per cell this prints/records compiled.memory_analysis() (proves it fits),
+compiled.cost_analysis() (XLA's FLOPs view), and the HLO-text roofline
+terms (repro.launch.hlo_analysis — while-loop aware, collective bytes).
+"""
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import numpy as np  # noqa: E402
+
+from ..configs.base import SHAPES, all_archs, get_arch     # noqa: E402
+from . import hlo_analysis                                  # noqa: E402
+from .mesh import make_production_mesh                      # noqa: E402
+from .specs import build_dryrun, model_flops                # noqa: E402
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        return {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                ma, "generated_code_size_in_bytes", None),
+        }
+    except Exception as exc:                                # noqa: BLE001
+        return {"error": str(exc)}
+
+
+def _arg_bytes_per_device(spec) -> int:
+    """Bytes per device of all sharded inputs (params+opt+cache+batch)."""
+    total = 0
+    for arg, shd_tree in zip(spec.args, spec.in_shardings):
+        leaves = jax.tree_util.tree_leaves(arg)
+        shds = jax.tree_util.tree_leaves(
+            shd_tree, is_leaf=lambda x: hasattr(x, "spec"))
+        if len(shds) == 1 and len(leaves) > 1:
+            shds = shds * len(leaves)
+        for leaf, shd in zip(leaves, shds):
+            n = int(np.prod(leaf.shape)) if leaf.shape else 1
+            bytes_total = n * leaf.dtype.itemsize
+            try:
+                nshards = np.prod([
+                    dim for dim in shd.shard_shape(leaf.shape)]) \
+                    if leaf.shape else 1
+                per_dev = int(np.prod(shd.shard_shape(leaf.shape))) \
+                    * leaf.dtype.itemsize if leaf.shape else bytes_total
+            except Exception:                               # noqa: BLE001
+                per_dev = bytes_total
+            total += per_dev
+    return total
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             out_dir: str | None = None, save_hlo: bool = False,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "chips": chips, "status": "ok", "tag": tag,
+                    "overrides": overrides or {}}
+    try:
+        spec = build_dryrun(arch, shape_name, mesh, **(overrides or {}))
+        record["meta"] = spec.meta
+        jitted = jax.jit(spec.step_fn,
+                         in_shardings=spec.in_shardings,
+                         out_shardings=spec.out_shardings,
+                         donate_argnums=spec.donate_argnums)
+        lowered = jitted.lower(*spec.args)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+        mem = _mem_analysis(compiled)
+        print(f"[{arch} x {shape_name} x {mesh_kind}] memory_analysis:",
+              mem, flush=True)
+        try:
+            cost = compiled.cost_analysis() or {}
+        except Exception:                                   # noqa: BLE001
+            cost = {}
+        print(f"[{arch} x {shape_name} x {mesh_kind}] cost_analysis flops:",
+              cost.get("flops"), flush=True)
+
+        hlo_txt = compiled.as_text()
+        roof = hlo_analysis.analyze(hlo_txt)
+        mf = model_flops(get_arch(arch), SHAPES[shape_name])
+        secs = roof.seconds(chips)
+        dominant = max(secs, key=secs.get)
+
+        record.update({
+            "lower_s": round(t_lower - t0, 1),
+            "compile_s": round(t_compile - t_lower, 1),
+            "memory_analysis": mem,
+            "xla_cost_flops": cost.get("flops"),
+            "xla_cost_bytes": cost.get("bytes accessed"),
+            # per-device quantities from the HLO walk
+            "hlo_flops_per_device": roof.flops,
+            "hlo_bytes_per_device": roof.hbm_bytes,
+            "link_bytes_per_device": roof.link_bytes,
+            "collectives": roof.collectives,
+            "while_trips": roof.while_trips,
+            "arg_bytes_per_device": _arg_bytes_per_device(spec),
+            **secs,
+            "dominant": dominant,
+            "model_flops": mf["model_flops"],
+            "model_flops_dense": mf["dense_flops"],
+            "model_flops_attn": mf["attn_flops"],
+            "params_total": mf["params_total"],
+            # useful-compute ratio: MODEL_FLOPS / (HLO flops across chips)
+            "useful_ratio": mf["model_flops"] / max(roof.flops * chips, 1.0),
+            "hlo_chars": len(hlo_txt),
+        })
+        if save_hlo and out_dir:
+            suffix = f"_{tag}" if tag else ""
+            with open(os.path.join(
+                    out_dir, f"{arch}_{shape_name}_{mesh_kind}{suffix}.hlo"),
+                    "w") as f:
+                f.write(hlo_txt)
+    except Exception as exc:                                # noqa: BLE001
+        record["status"] = "error"
+        record["error"] = f"{type(exc).__name__}: {exc}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[{arch} x {shape_name} x {mesh_kind}] FAILED: {exc}",
+              flush=True)
+    record["total_s"] = round(time.time() - t0, 1)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(
+            out_dir, f"{arch}_{shape_name}_{mesh_kind}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    # hillclimb overrides (written under --tag so baselines are kept)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--pipeline", action="store_true")
+    ap.add_argument("--zero-grads", action="store_true")
+    ap.add_argument("--no-zero", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    args = ap.parse_args()
+    overrides: dict = {}
+    if args.pipeline:
+        overrides["pipeline"] = True
+    if args.zero_grads:
+        overrides["zero_grads"] = True
+    if args.no_zero:
+        overrides["zero"] = False
+    if args.microbatches is not None:
+        overrides["microbatches"] = args.microbatches
+    if args.remat is not None:
+        overrides["remat"] = args.remat
+
+    archs = all_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        cfg = get_arch(arch)
+        for shape_name in shapes:
+            ok, why = cfg.supports(SHAPES[shape_name])
+            if not ok:
+                print(f"[{arch} x {shape_name}] SKIP: {why}", flush=True)
+                continue
+            for mesh_kind in meshes:
+                out_json = os.path.join(
+                    args.out, f"{arch}_{shape_name}_{mesh_kind}.json")
+                if args.skip_existing and os.path.exists(out_json):
+                    prev = json.load(open(out_json))
+                    if prev.get("status") == "ok":
+                        print(f"[{arch} x {shape_name} x {mesh_kind}] "
+                              "cached", flush=True)
+                        continue
+                rec = run_cell(arch, shape_name, mesh_kind,
+                               out_dir=args.out, save_hlo=args.save_hlo,
+                               overrides=overrides, tag=args.tag)
+                results.append(rec)
+                status = rec["status"]
+                print(f"[{arch} x {shape_name} x {mesh_kind}] {status} "
+                      f"compile={rec.get('compile_s')}s "
+                      f"dominant={rec.get('dominant')}", flush=True)
+    bad = [r for r in results if r["status"] != "ok"]
+    print(f"\n== dry-run done: {len(results) - len(bad)} ok, "
+          f"{len(bad)} failed ==", flush=True)
+    if bad:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

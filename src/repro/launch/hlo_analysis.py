@@ -1,0 +1,401 @@
+"""Roofline analyzer over post-optimization HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes it
+useless for scan-over-layers models; and collective bytes are not reported
+at all. This module parses ``compiled.as_text()`` (post-SPMD, post-fusion
+HLO — shapes are PER-DEVICE) and computes:
+
+* dot/convolution FLOPs, multiplied through the call graph with while-loop
+  trip counts recovered from each loop's condition computation;
+* HBM traffic estimate: for every top-level op in every executed
+  computation, operand bytes + result bytes (post-fusion this approximates
+  "each op streams operands from HBM once");
+* per-collective link-byte totals with type multipliers
+  (all-reduce 2x — reduce-scatter + all-gather phases of a ring).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (1 link assumed per collective step — conservative).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (assume 1 link per hop)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class OpInfo:
+    kind: str
+    out_type: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: dict = dataclasses.field(default_factory=dict)      # %name -> OpInfo
+    order: list = dataclasses.field(default_factory=list)
+    is_fused: bool = False
+    is_entry: bool = False
+
+
+# type part matched lazily: tuple types may contain /*index=N*/ comments
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+|[\w\.\-]+)\s*=\s*(.*?)\s+"
+    r"([\w\-]+)\((.*)$")
+_CALLED = re.compile(
+    r"(?:to_apply|body|condition|branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_CALLS_FUSION = re.compile(r"(?:calls|fusion)=%?([\w\.\-]+)")
+
+
+def _comp_header(line: str) -> tuple[str, bool] | None:
+    """Computation headers look like
+    ``[ENTRY ]%name (params...) -> type {``  (params may nest parens)."""
+    s = line.strip()
+    if not s.endswith("{") or "->" not in s or s.startswith("//"):
+        return None
+    is_entry = s.startswith("ENTRY")
+    if is_entry:
+        s = s[len("ENTRY"):].lstrip()
+    if "=" in s.split("(")[0]:
+        return None                              # an op line, not a header
+    name = s.split("(")[0].strip().lstrip("%").strip()
+    if not name or " " in name:
+        return None
+    return name, is_entry
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        head = _comp_header(line)
+        if head is not None:
+            name, is_entry = head
+            cur = Computation(name=name, is_entry=is_entry)
+            cur.is_fused = "fused_computation" in name
+            comps[name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        op_name, out_type, kind, rest = m.groups()
+        info = OpInfo(kind=kind, out_type=out_type.strip(),
+                      operands=[], attrs=rest, line=line)
+        # operand types: resolve later by op-name lookup within computation
+        info.operands = re.findall(r"%([\w\.\-]+)", rest.split("),")[0])
+        cur.ops[op_name.lstrip("%")] = info
+        cur.order.append(op_name.lstrip("%"))
+    return comps
+
+
+def _dot_flops(info: OpInfo, comp: Computation) -> float:
+    """FLOPs of a dot given output dims and contracting dims of the lhs."""
+    out_dims = _shape_dims(info.out_type)
+    mctr = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", info.line)
+    lhs_name = info.operands[0] if info.operands else None
+    lhs = comp.ops.get(lhs_name) if lhs_name else None
+    contracted = 1
+    if mctr and lhs is not None:
+        lhs_dims = _shape_dims(lhs.out_type)
+        for ax in mctr.group(1).split(","):
+            if ax and int(ax) < len(lhs_dims):
+                contracted *= lhs_dims[int(ax)]
+    elif lhs is not None:
+        dims = _shape_dims(lhs.out_type)
+        contracted = dims[-1] if dims else 1
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * contracted
+
+
+def _conv_flops(info: OpInfo, comp: Computation) -> float:
+    out_dims = _shape_dims(info.out_type)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    rhs = comp.ops.get(info.operands[1]) if len(info.operands) > 1 else None
+    kernel_n = 1
+    if rhs is not None:
+        kd = _shape_dims(rhs.out_type)
+        for d in kd[:-1]:                       # all but output-feature dim
+            kernel_n *= d
+    return 2.0 * out_n * kernel_n
+
+
+def _operand_bytes(info: OpInfo, comp: Computation) -> int:
+    total = 0
+    for op in info.operands:
+        o = comp.ops.get(op)
+        if o is not None:
+            total += _shape_bytes(o.out_type)
+    return total
+
+
+def _sliced_op_bytes(info: OpInfo, comp: Computation) -> int | None:
+    """HBM bytes for ops that touch only a SLICE of their operands.
+
+    A dynamic-slice reads out_bytes, not the whole base tensor (the
+    scan-over-layers pattern slices one layer from the stacked params every
+    iteration — counting the full stack x trips would inflate the memory
+    term by ~n_layers). Likewise DUS/scatter write only the update region.
+    """
+    kind = info.kind
+    if kind in ("dynamic-slice", "gather"):
+        return 2 * _shape_bytes(info.out_type)
+    if kind == "dynamic-update-slice":
+        upd = comp.ops.get(info.operands[1]) if len(info.operands) > 1 \
+            else None
+        upd_b = _shape_bytes(upd.out_type) if upd else 0
+        return 2 * upd_b
+    if kind == "scatter":
+        upd = comp.ops.get(info.operands[-1]) if info.operands else None
+        upd_b = _shape_bytes(upd.out_type) if upd else 0
+        return 3 * upd_b
+    return None
+
+
+def _fusion_hbm_bytes(info: OpInfo, comp: Computation,
+                      comps: dict) -> int:
+    """Fusion op HBM traffic: parameters consumed ONLY by slicing ops
+    (dynamic-slice / gather / DUS-target) count at slice size, not full."""
+    out_b = _shape_bytes(info.out_type)
+    called = _CALLS_FUSION.search(info.line)
+    sub = comps.get(called.group(1)) if called else None
+    if sub is None:
+        return _operand_bytes(info, comp) + out_b
+
+    # map fusion operands -> fused-computation parameters by position
+    param_names = []
+    for sname in sub.order:
+        sinfo = sub.ops[sname]
+        if sinfo.kind == "parameter":
+            param_names.append(sname)
+    total = 0
+    for pos, op in enumerate(info.operands):
+        o = comp.ops.get(op)
+        if o is None:
+            continue
+        full = _shape_bytes(o.out_type)
+        pname = param_names[pos] if pos < len(param_names) else None
+        if pname is None:
+            total += full
+            continue
+        consumers = [sub.ops[s] for s in sub.order
+                     if pname in sub.ops[s].operands]
+        if consumers and all(
+                c.kind in ("dynamic-slice", "gather") or
+                (c.kind == "dynamic-update-slice"
+                 and c.operands and c.operands[0] == pname)
+                for c in consumers):
+            sliced = 0
+            for c in consumers:
+                if c.kind == "dynamic-update-slice":
+                    upd = sub.ops.get(c.operands[1]) \
+                        if len(c.operands) > 1 else None
+                    sliced += 2 * (_shape_bytes(upd.out_type) if upd else 0)
+                else:
+                    sliced += _shape_bytes(c.out_type)
+            total += min(sliced, full)
+        else:
+            total += full
+    return total + out_b
+
+
+def _trip_count(cond: Computation) -> int | None:
+    """Counted loops compare the induction var against a constant."""
+    best = None
+    for name in cond.order:
+        info = cond.ops[name]
+        if info.kind == "constant":
+            m = re.search(r"constant\((\d+)\)", info.line)
+            if m:
+                v = int(m.group(1))
+                best = v if best is None else max(best, v)
+    return best
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    link_bytes: float = 0.0
+    convert_bytes: float = 0.0    # pure dtype-cast fusions: XLA *CPU* wraps
+    # every dot in bf16->f32 converts; a TPU lowering does not. Reported
+    # separately so the roofline can project the TPU memory term.
+    collectives: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+
+    def seconds(self, chips: int) -> dict:
+        return {
+            "compute_s": self.flops / PEAK_FLOPS,
+            "memory_s": self.hbm_bytes / HBM_BW,
+            "memory_s_tpu": max(self.hbm_bytes - self.convert_bytes, 0.0)
+            / HBM_BW,
+            "collective_s": self.link_bytes / ICI_BW,
+        }
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def analyze(text: str, *, default_trip: int = 1) -> Roofline:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    memo: dict[str, Roofline] = {}
+
+    def walk(comp: Computation, depth: int = 0) -> Roofline:
+        if comp.name in memo:
+            return memo[comp.name]
+        r = Roofline()
+        memo[comp.name] = r                     # breaks cycles defensively
+        for name in comp.order:
+            info = comp.ops[name]
+            kind = info.kind
+            if kind == "while":
+                body_m = re.search(r"body=%?([\w\.\-]+)", info.line)
+                cond_m = re.search(r"condition=%?([\w\.\-]+)", info.line)
+                trips = default_trip
+                # XLA annotates counted loops explicitly:
+                tc = re.search(r'known_trip_count...\{"n":"(\d+)"\}',
+                               info.line)
+                if tc:
+                    trips = int(tc.group(1))
+                elif cond_m and cond_m.group(1) in comps:
+                    t = _trip_count(comps[cond_m.group(1)])
+                    if t:
+                        trips = t
+                r.while_trips[name] = trips
+                if body_m and body_m.group(1) in comps:
+                    sub = walk(comps[body_m.group(1)], depth + 1)
+                    r.flops += trips * sub.flops
+                    r.hbm_bytes += trips * sub.hbm_bytes
+                    r.link_bytes += trips * sub.link_bytes
+                    for k, v in sub.collectives.items():
+                        r.collectives[k] = r.collectives.get(k, 0) \
+                            + trips * v
+                    r.while_trips.update(sub.while_trips)
+                continue
+            if kind in ("call", "conditional", "custom-call"):
+                for m in _CALLED.finditer(info.line):
+                    for sub_name in re.split(r",\s*%?", m.group(1)):
+                        if sub_name in comps:
+                            sub = walk(comps[sub_name], depth + 1)
+                            r.flops += sub.flops
+                            r.hbm_bytes += sub.hbm_bytes
+                            r.link_bytes += sub.link_bytes
+                            for k, v in sub.collectives.items():
+                                r.collectives[k] = \
+                                    r.collectives.get(k, 0) + v
+                continue
+            if kind == "fusion":
+                called = _CALLS_FUSION.search(info.line)
+                pure_cast = False
+                # FLOPs inside the fused computation still execute
+                if called and called.group(1) in comps:
+                    sub_c = comps[called.group(1)]
+                    kinds = {sub_c.ops[s].kind for s in sub_c.order}
+                    pure_cast = kinds <= {"parameter", "convert", "bitcast",
+                                          "copy", "reshape", "transpose"} \
+                        and "convert" in kinds
+                    for sname in sub_c.order:
+                        sinfo = sub_c.ops[sname]
+                        if sinfo.kind == "dot":
+                            r.flops += _dot_flops(sinfo, sub_c)
+                        elif sinfo.kind.startswith("convolution"):
+                            r.flops += _conv_flops(sinfo, sub_c)
+                fb = _fusion_hbm_bytes(info, comp, comps)
+                r.hbm_bytes += fb
+                if pure_cast:
+                    r.convert_bytes += fb
+                continue
+            if kind == "dot":
+                r.flops += _dot_flops(info, comp)
+                r.hbm_bytes += _operand_bytes(info, comp) \
+                    + _shape_bytes(info.out_type)
+                continue
+            if kind.startswith("convolution"):
+                r.flops += _conv_flops(info, comp)
+                r.hbm_bytes += _operand_bytes(info, comp) \
+                    + _shape_bytes(info.out_type)
+                continue
+            if any(kind.startswith(c) for c in _COLLECTIVES):
+                in_b = _operand_bytes(info, comp)
+                out_b = _shape_bytes(info.out_type)
+                if kind.startswith("all-reduce"):
+                    link = 2 * in_b             # RS + AG phases of the ring
+                elif kind.startswith("all-gather"):
+                    link = out_b
+                elif kind.startswith("reduce-scatter"):
+                    link = in_b
+                else:                            # all-to-all / permute
+                    link = max(in_b, out_b)
+                r.link_bytes += link
+                r.collectives[kind] = r.collectives.get(kind, 0) + link
+                r.hbm_bytes += in_b + out_b
+                continue
+            if kind in _SKIP_BYTES or comp.is_fused:
+                continue
+            sliced = _sliced_op_bytes(info, comp)
+            if sliced is not None:
+                r.hbm_bytes += sliced
+                continue
+            # generic op at top level: counts toward memory traffic
+            b = _operand_bytes(info, comp) + _shape_bytes(info.out_type)
+            r.hbm_bytes += b
+            if kind == "convert":
+                r.convert_bytes += b
+        return r
+
+    # only walk from entry (called computations are reached transitively)
+    result = walk(entry)
+    return result

@@ -1,0 +1,292 @@
+"""Dry-run builders: ShapeDtypeStruct inputs + shardings per (arch, shape).
+
+``input_specs`` produces weak-type-correct, shardable stand-ins for every
+model input with NO device allocation; ``build_step`` returns the jitted
+step with in/out shardings for the given mesh, ready for
+``.lower(**specs).compile()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec, get_arch
+from ..models import sharding as shd
+from ..models.model import Model
+from ..optim import AdamWConfig
+from ..train.state import init_train_state, train_state_specs
+from ..train.step import (make_prefill_step, make_serve_step,
+                          make_train_step)
+from .mesh import data_axes
+
+# gradient-accumulation defaults so train_4k activations fit HBM
+MICROBATCHES = {
+    "nemotron-4-340b": 8,   # nem-4: mb=8 beats 16 (see EXPERIMENTS §Perf)
+    "qwen2-vl-72b": 8,
+    "yi-34b": 4,
+    "yi-9b": 2,
+    "recurrentgemma-9b": 2,
+    "minicpm3-4b": 2,
+    "hubert-xlarge": 2,
+}
+
+REMAT = {
+    "nemotron-4-340b": "full",
+    "qwen2-vl-72b": "full",
+    "yi-34b": "full",
+    "yi-9b": "full",
+    "recurrentgemma-9b": "full",
+    "minicpm3-4b": "full",
+    "hubert-xlarge": "full",
+    "qwen2-moe-a2.7b": "dots",
+    "deepseek-moe-16b": "dots",
+    "xlstm-125m": "none",
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_struct(cfg: ArchConfig, batch: int, seq: int,
+                 dtype=jnp.bfloat16) -> dict:
+    out: dict = {}
+    if cfg.frontend == "audio":
+        out["frames"] = _sds((batch, seq, cfg.frontend_dim), dtype)
+    else:
+        out["tokens"] = _sds((batch, seq), jnp.int32)
+    out["labels"] = _sds((batch, seq), jnp.int32)
+    if cfg.rope_kind == "mrope":
+        out["positions"] = _sds((3, batch, seq), jnp.int32)
+        out["vision_embeds"] = _sds((batch, min(64, seq), cfg.d_model), dtype)
+    return out
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    step_fn: Callable
+    args: tuple                 # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    meta: dict
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_dryrun(arch: str, shape_name: str, mesh, *,
+                 microbatches: int | None = None,
+                 remat: str | None = None,
+                 zero: bool = True,
+                 zero_grads: bool = False,
+                 pipeline: bool = False,
+                 param_dtype=jnp.bfloat16) -> DryRunSpec:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cfg.supports(shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} skipped: {why}")
+
+    remat = remat if remat is not None else REMAT.get(arch, "none")
+    model = Model(cfg, remat=remat if shape.kind == "train" else "none",
+                  mesh=mesh)
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    axis_sizes = dict(mesh.shape)
+
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: model.init(k, param_dtype), key)
+    pspecs = shd.param_specs(params_shape, axis_sizes)
+    params_shd = _named(mesh, pspecs)
+
+    meta = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+            "remat": remat, "mesh": dict(mesh.shape),
+            "param_dtype": str(param_dtype.__name__ if hasattr(
+                param_dtype, "__name__") else param_dtype)}
+
+    if pipeline:
+        if shape.kind != "train" or "pod" not in mesh.shape:
+            raise ValueError("pipeline mode needs a train shape and a "
+                             "multi-pod mesh")
+        return _build_pipeline_dryrun(cfg, shape, mesh, model, arch,
+                                      microbatches, axis_sizes, meta,
+                                      param_dtype)
+
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None \
+            else MICROBATCHES.get(arch, 1)
+        meta["microbatches"] = mb
+        meta["zero_grads"] = zero_grads
+        opt_cfg = AdamWConfig()
+        state_shape = jax.eval_shape(init_train_state, params_shape)
+        state_specs = train_state_specs(params_shape, zero=zero,
+                                        axis_sizes=axis_sizes)
+        gspecs = state_specs.opt["m"] if zero_grads else None
+        step = make_train_step(model, opt_cfg, microbatches=mb,
+                               grad_specs=gspecs, mesh=mesh)
+        state_shd = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), state_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        batch_shape = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        batch_shd = _named(mesh, shd.batch_specs(
+            batch_shape, batch_axes=dp, axis_sizes=axis_sizes))
+        metrics_shd = None      # let jit infer (scalars -> replicated)
+        return DryRunSpec(
+            step_fn=step,
+            args=(state_shape, batch_shape),
+            in_shardings=(state_shd, batch_shd),
+            out_shardings=(state_shd, metrics_shd),
+            donate_argnums=(0,),
+            meta=meta)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model)
+        batch_shape = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        batch_shd = _named(mesh, shd.batch_specs(
+            batch_shape, batch_axes=dp, axis_sizes=axis_sizes))
+        return DryRunSpec(
+            step_fn=step,
+            args=(params_shape, batch_shape),
+            in_shardings=(params_shd, batch_shd),
+            out_shardings=None,
+            donate_argnums=(),
+            meta=meta)
+
+    # decode / long_decode: one new token against a seq_len cache
+    step = make_serve_step(model)
+    b = shape.global_batch
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(b, shape.seq_len, jnp.bfloat16))
+    batch_replicated = b < dp_size
+    meta["cache_batch_replicated"] = batch_replicated
+    cache_specs_tree = shd.cache_specs(
+        cache_shape, batch_axes=dp, batch_replicated=batch_replicated,
+        axis_sizes=axis_sizes)
+    cache_shd = _named(mesh, cache_specs_tree)
+    tokens_shape = _sds((b, 1), jnp.int32)
+    tok_spec = P(None, None) if batch_replicated else \
+        P(dp if len(dp) > 1 else dp[0], None)
+    tokens_shd = NamedSharding(mesh, tok_spec)
+    return DryRunSpec(
+        step_fn=step,
+        args=(params_shape, cache_shape, tokens_shape),
+        in_shardings=(params_shd, cache_shd, tokens_shd),
+        out_shardings=(tokens_shd, cache_shd),
+        donate_argnums=(1,),
+        meta=meta)
+
+
+def _build_pipeline_dryrun(cfg, shape, mesh, model, arch, microbatches,
+                           axis_sizes, meta, param_dtype) -> DryRunSpec:
+    """Train-step dry-run with GPipe over the pod axis (beyond-paper
+    optimization for param-heavy models; see EXPERIMENTS.md §Perf)."""
+    from ..train.pipeline import (make_pipeline_train_step,
+                                  split_stage_params, stage_param_specs)
+    n_stages = mesh.shape["pod"]
+    mb = microbatches if microbatches is not None \
+        else max(MICROBATCHES.get(arch, 1), 2 * n_stages)
+    meta["microbatches"] = mb
+    meta["pipeline_stages"] = n_stages
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(
+        lambda k: split_stage_params(
+            Model(cfg).init(k, param_dtype), n_stages), key)
+    pspecs = stage_param_specs(
+        shd.param_specs(jax.eval_shape(
+            lambda k: Model(cfg).init(k, param_dtype), key), axis_sizes))
+    # structure check: specs tree must match the (P, L/P, ...) params tree
+    jax.tree_util.tree_map(lambda l, s: s, params_shape, pspecs)
+    state_shape = jax.eval_shape(init_train_state, params_shape)
+    # moments inherit the pod-sharded layout (params already sharded over
+    # pod, so per-device optimizer bytes shrink by n_stages without ZeRO)
+    from ..train.state import TrainState
+    state_specs = TrainState(params=pspecs,
+                             opt={"step": P(), "m": pspecs, "v": pspecs})
+    state_shd = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    batch_shape = batch_struct(cfg, shape.global_batch, shape.seq_len)
+    # pipeline ingests the full batch on stage 0; DP only over 'data'
+    batch_shd = _named(mesh, shd.batch_specs(
+        batch_shape, batch_axes=("data",), axis_sizes=axis_sizes))
+    step = make_pipeline_train_step(model, AdamWConfig(), mesh,
+                                    microbatches=mb,
+                                    remat=meta.get("remat", "full"))
+    return DryRunSpec(
+        step_fn=step,
+        args=(state_shape, batch_shape),
+        in_shardings=(state_shd, batch_shd),
+        out_shardings=(state_shd, None),
+        donate_argnums=(0,),
+        meta=meta)
+
+
+# --------------------------------------------------------------------------
+# Analytic model FLOPs (the "useful work" yardstick for §Roofline)
+# --------------------------------------------------------------------------
+
+def param_counts(cfg: ArchConfig) -> dict:
+    """Analytic parameter counts: total, embedding, routed-experts."""
+    model = Model(cfg)
+    shapes = jax.eval_shape(
+        lambda k: model.init(k, jnp.bfloat16), jax.random.PRNGKey(0))
+    total = emb = routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [str(getattr(p, "key", "")) for p in path]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "embed" in names or "unembed" in names:
+            emb += n
+        if "moe" in names and "shared" not in names and \
+                names[-1] in ("w_gate", "w_up", "w_down"):
+            routed += n
+    return {"total": total, "embedding": emb, "routed": routed}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active non-emb
+    params (MoE: shared + top_k/E of routed), plus the attention term the
+    6ND rule ignores (dominant at 32k)."""
+    pc = param_counts(cfg)
+    n_active = pc["total"] - pc["embedding"] - pc["routed"]
+    if cfg.moe is not None and pc["routed"]:
+        n_active += pc["routed"] * cfg.moe.top_k / cfg.moe.n_experts
+    # unembedding matmul is real compute: count it as params too
+    n_active += pc["embedding"] / (2 if not cfg.tie_embeddings else 1)
+
+    tokens = shape.global_batch * (1 if shape.kind in ("decode",
+                                                       "long_decode")
+                                   else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    dense = mult * n_active * tokens
+
+    # attention matmuls: 2 matmuls of (S x ctx x d_attn) each, causal ~ /2
+    d_attn = cfg.n_heads * cfg.head_dim
+    attn_layers = sum(1 for k in cfg.layer_pattern
+                      if k in ("attn", "moe", "dense", "mla"))
+    lattn_layers = sum(1 for k in cfg.layer_pattern if k == "lattn")
+    if shape.kind in ("decode", "long_decode"):
+        ctx = shape.seq_len
+        per_tok = 2 * 2 * d_attn * (
+            attn_layers * ctx
+            + lattn_layers * min(ctx, cfg.attn_window or ctx))
+        attn = (mult / 2) * shape.global_batch * per_tok
+    else:
+        s = shape.seq_len
+        causal_frac = 0.5 if cfg.causal else 1.0
+        attn = (mult / 2) * shape.global_batch * 2 * 2 * d_attn * (
+            attn_layers * s * s * causal_frac
+            + lattn_layers * s * min(s, cfg.attn_window or s))
+    return {"n_active": n_active, "dense_flops": dense,
+            "attn_flops": attn, "model_flops": dense + attn,
+            "params_total": pc["total"]}

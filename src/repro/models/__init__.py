@@ -1,0 +1,3 @@
+"""Model zoo: layers + assembly for all assigned architectures."""
+
+from .model import Model  # noqa: F401

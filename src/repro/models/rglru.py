@@ -1,0 +1,125 @@
+"""Griffin/RecurrentGemma recurrent block: conv1d + RG-LRU gated recurrence.
+
+RG-LRU (Real-Gated Linear Recurrent Unit, De et al. 2024):
+
+    r_t = sigmoid(W_a x_t + b_a)             recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)             input gate
+    a_t = a^(c * r_t)          with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear in h — O(S) and constant-state for decode, which is
+what makes `long_500k` feasible for this family. Training uses an
+associative-scan (log-depth) formulation; the Pallas kernel
+(repro.kernels.rglru_scan) implements the chunked sequential form for TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, _he
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUDims:
+    d_model: int
+    lru_width: int
+    conv_width: int = 4
+
+
+def rglru_block_init(key, dims: RGLRUDims, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    d, w = dims.d_model, dims.lru_width
+    s = d ** -0.5
+    # Lambda init so that a = sigmoid(Lambda) in [0.9, 0.999] (paper init)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "w_in": _he(ks[1], (d, w), s, dtype),           # x branch
+        "w_gate_in": _he(ks[2], (d, w), s, dtype),      # gate branch (GeGLU)
+        "conv_w": _he(ks[3], (dims.conv_width, w), dims.conv_width ** -0.5,
+                      dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "lambda": lam.astype(jnp.float32),
+        "w_a": _he(ks[4], (w, w), w ** -0.5, dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": _he(ks[5], (w, w), w ** -0.5, dtype),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        "w_out": _he(jax.random.fold_in(ks[0], 1), (w, d), w ** -0.5, dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                   state: jax.Array | None = None,
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B,S,W); w: (K,W); state: (B,K-1,W)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # (B,S+K-1,W)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else pad
+    return out, new_state
+
+
+def rglru_scan_ref(x: jax.Array, a_gate: jax.Array, i_gate: jax.Array,
+                   lam: jax.Array, h0: jax.Array | None = None,
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Associative-scan RG-LRU. x,(gates): (B,S,W) fp32. Returns (y, h_S)."""
+    log_a_base = -_C * jax.nn.softplus(-lam)                # log sigmoid(lam)
+    log_a = a_gate * log_a_base                              # (B,S,W), <= 0
+    a = jnp.exp(log_a)
+    gated_x = i_gate * x
+    scaled_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * gated_x
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    if h0 is not None:
+        scaled_x = scaled_x.at[:, 0].add(a[:, 0] * h0)
+    ys = jax.lax.associative_scan(combine, (a, scaled_x), axis=1)[1]
+    return ys, ys[:, -1]
+
+
+def rglru_block_apply(p: Params, x: jax.Array, dims: RGLRUDims, *,
+                      cache: Params | None = None,
+                      ) -> tuple[jax.Array, Params | None]:
+    """Full recurrent temporal-mixing block (Griffin):
+    two input branches -> (gate: GeLU) x (main: conv -> RG-LRU) -> out."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]))
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_in"])
+
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_state)
+
+    uf = u.astype(jnp.float32)
+    a_gate = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", uf, p["w_a"].astype(jnp.float32)) + p["b_a"])
+    i_gate = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", uf, p["w_x"].astype(jnp.float32)) + p["b_x"])
+
+    h0 = cache["h"].astype(jnp.float32) if cache is not None else None
+    y, h_last = rglru_scan_ref(uf, a_gate, i_gate, p["lambda"], h0)
+    y = y.astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_last.astype(cache["h"].dtype),
+                     "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def rglru_cache_init(batch: int, dims: RGLRUDims, dtype=jnp.float32) -> Params:
+    return {"h": jnp.zeros((batch, dims.lru_width), dtype),
+            "conv": jnp.zeros((batch, dims.conv_width - 1, dims.lru_width),
+                              dtype)}

@@ -1,0 +1,223 @@
+"""Parameter / activation partition specs (GSPMD) for every architecture.
+
+Scheme (baseline, see EXPERIMENTS.md §Perf for the hillclimbed variants):
+
+* TP over the ``model`` axis: attention q/o projections sharded on the head
+  dim, MLP on the FFN dim, embeddings on the vocab dim, MoE experts on the
+  expert dim (expert parallelism).
+* DP over the ``data`` axis (and ``pod`` axis when present): batch dim of
+  activations; ZeRO-style sharding adds ``data`` to optimizer-state specs.
+* Scanned stages carry a leading layer axis — specs get a leading None.
+
+Weight specs are keyed by leaf name (wq, w_up, table, ...) — uniform across
+architectures by construction of the layer libraries.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+# leaf-name -> spec for the *unstacked* (per-layer) shape
+_WEIGHT_RULES: dict[str, Any] = {
+    # embeddings: shard vocab over model (unembed matmul is TP'd)
+    "table": P("model", None),
+    # attention
+    "wq": P(None, "model"),
+    "wk": P(None, "model"),
+    "wv": P(None, "model"),
+    "wo": P("model", None),
+    # mlp
+    "w_gate": P(None, "model"),
+    "w_up": P(None, "model"),
+    "w_down": P("model", None),
+    # moe (leading expert dim -> expert parallelism)
+    "router": P(None, None),
+    # mla
+    "wq_a": P(None, None),
+    "wq_b": P(None, "model"),
+    "wkv_a": P(None, None),
+    "wkv_b": P(None, "model"),
+    # rglru
+    "w_in": P(None, "model"),
+    "w_gate_in": P(None, "model"),
+    "conv_w": P(None, "model"),
+    "conv_b": P("model"),
+    "lambda": P("model"),
+    "w_a": P(None, "model"),
+    "b_a": P("model"),
+    "w_x": P(None, "model"),
+    "b_x": P("model"),
+    "w_out": P("model", None),
+    # xlstm
+    "w_i": P(None, None),
+    "w_f": P(None, None),
+    "b_i": P(None),
+    "b_f": P(None),
+    "w_ff_up": P(None, "model"),
+    "w_ff_down": P("model", None),
+    # frontend
+    "proj": P(None, "model"),
+}
+
+_MOE_EXPERT_LEAVES = {"w_gate", "w_up", "w_down"}          # when ndim == 3
+
+
+# explicit jit in_shardings require exact divisibility; the launcher passes
+# the real mesh axis sizes so non-divisible dims fall back to replication.
+DEFAULT_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axis_len(ax, axis_sizes) -> int:
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= axis_sizes.get(a, 1)
+        return n
+    return axis_sizes.get(ax, 1)
+
+
+def _spec_for(path: tuple, leaf, axis_sizes=None) -> P:
+    axis_sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    names = [p.key for p in path if hasattr(p, "key")]
+    name = names[-1] if names else ""
+    ndim = len(leaf.shape)
+    in_moe = "moe" in names
+    in_shared = "shared" in names
+
+    if in_moe and not in_shared and name in _MOE_EXPERT_LEAVES and ndim >= 3:
+        spec: tuple = ("model",) + (None,) * (ndim - 1)     # EP on experts
+    elif name.startswith(("r_",)) and ndim == 3:            # slstm recurrent
+        spec = (None, None, None)
+    elif name in _WEIGHT_RULES:
+        base = tuple(_WEIGHT_RULES[name])
+        if len(base) < ndim:                                # stacked stage
+            spec = (None,) * (ndim - len(base)) + base
+        elif len(base) > ndim:
+            spec = base[-ndim:]
+        else:
+            spec = base
+    else:                                                   # norms, biases
+        spec = (None,) * ndim
+
+    # drop axes the dim cannot be divided over (replicate instead)
+    fixed = []
+    for size, ax in zip(leaf.shape, spec):
+        if ax is not None and (size < 8 or size % _axis_len(ax, axis_sizes)):
+            fixed.append(None)
+        else:
+            fixed.append(ax)
+    return P(*fixed)
+
+
+def param_specs(params_shape: Any, axis_sizes: dict | None = None) -> Any:
+    """PartitionSpec pytree matching a params (or shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for(p, l, axis_sizes), params_shape)
+
+
+def zero_specs(params_shape: Any, *, data_axis: str = "data",
+               min_size: int = 1024,
+               axis_sizes: dict | None = None) -> Any:
+    """Optimizer-state specs: param spec + ``data`` added to the first
+    unsharded dim divisible enough (ZeRO-style state sharding)."""
+    axis_sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    pspecs = param_specs(params_shape, axis_sizes)
+    dlen = _axis_len(data_axis, axis_sizes)
+
+    def add_data(leaf, spec):
+        if int(np.prod(leaf.shape)) < min_size:
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        for i, (size, ax) in enumerate(zip(leaf.shape, parts)):
+            if ax is None and size >= dlen and size % dlen == 0:
+                parts[i] = data_axis
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map(add_data, params_shape, pspecs)
+
+
+def batch_specs(batch_shape: Any, *, batch_axes: tuple = ("data",),
+                axis_sizes: dict | None = None) -> Any:
+    """Shard the leading (batch) dim of every input over the DP axes.
+    Inputs whose batch dim cannot divide over DP are replicated
+    (e.g. long_500k with global_batch=1)."""
+    axis_sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    dp = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    dlen = _axis_len(dp, axis_sizes)
+
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        if name == "positions" and len(leaf.shape) == 3:   # (3, B, S) mrope
+            ok = leaf.shape[1] % dlen == 0
+            return P(None, dp if ok else None, None)
+        if len(leaf.shape) == 0:
+            return P()
+        ok = leaf.shape[0] % dlen == 0
+        return P(dp if ok else None,
+                 *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_specs(cache_shape: Any, *, batch_axes: tuple = ("data",),
+                batch_replicated: bool = False,
+                axis_sizes: dict | None = None) -> Any:
+    """KV-cache/state specs: shard the batch dim over DP axes and, where a
+    head dim exists, the heads over 'model'. Cache leaves are recognized
+    structurally: k/v (.., S, KV, D), latents, recurrent states."""
+    axis_sizes = axis_sizes or DEFAULT_AXIS_SIZES
+    dp = None if batch_replicated else (
+        batch_axes if len(batch_axes) > 1 else batch_axes[0])
+
+    def spec(path, leaf):
+        names = [p.key for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        lead: tuple = ()
+        shape = leaf.shape
+        # stacked stage caches have a leading layer axis
+        if nd >= 1 and name != "pos" and nd > 2 and shape[0] <= 128 and \
+                names and any(n.startswith("b") for n in names[:-1]):
+            pass  # heuristic not needed; layer axis handled by None default
+        if name in ("k", "v"):      # (.., B, S, KV, D)
+            base = [None] * nd
+            if dp is not None and shape[-4] % _axis_len(dp, axis_sizes) == 0:
+                base[-4] = dp
+            tp = axis_sizes.get("model", 1)
+            if shape[-2] >= 8 and shape[-2] % tp == 0:
+                base[-2] = "model"
+            elif shape[-1] % tp == 0:
+                # GQA with kv_heads < TP: shard head_dim instead — the
+                # logits contraction partial-sums into a tiny all-reduce
+                # instead of all-gathering the whole cache (§Perf dec-1)
+                base[-1] = "model"
+            return P(*base)
+        if name in ("c_kv", "k_rope"):          # MLA latents (.., B, S, r)
+            base = [None] * nd
+            base[-3] = dp
+            return P(*base)
+        if name == "pos":
+            base = [None] * nd
+            base[-1] = dp
+            return P(*base)
+        if name in ("h", "conv"):               # rglru state (.., B, W)
+            base = [None] * nd
+            base[-2 if name == "h" else -3] = dp
+            if shape[-1] >= 1024:
+                base[-1] = "model"
+            return P(*base)
+        if name in ("C", "n", "m", "c", "hs"):  # xlstm states (unrolled:
+            base = [None] * nd                  # batch is always dim 0)
+            if dp is not None and shape[0] % _axis_len(dp, axis_sizes) == 0:
+                base[0] = dp
+            return P(*base)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

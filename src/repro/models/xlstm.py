@@ -1,0 +1,339 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential) with exponential gating.
+
+mLSTM recurrence (per head, d = head_dim):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (d x d matrix memory)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with exponential input gate i = exp(i_raw), sigmoid-ish forget gate in
+log-space, stabilized by the running max m_t (paper eq. 15-19). Training
+uses the quadratic "parallel" form within the sequence (like attention with
+a decay mask); decode keeps (C, n, m) as state. The Pallas kernel
+(repro.kernels.mlstm_scan) implements the chunked form.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, _he, layernorm, layernorm_init, rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMDims:
+    d_model: int
+    n_heads: int
+    conv_width: int = 4
+    proj_factor: float = 2.0       # mLSTM pre-up-projection
+    ff_factor: float = 4.0 / 3.0   # sLSTM post-MLP (exact 4/3 -> 1024@768)
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def mlstm_block_init(key, dims: XLSTMDims, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di = dims.d_model, dims.d_inner
+    s, si = d ** -0.5, di ** -0.5
+    return {
+        "w_up": _he(ks[0], (d, 2 * di), s, dtype),       # [main, gate]
+        "conv_w": _he(ks[1], (dims.conv_width, di), dims.conv_width ** -0.5,
+                      dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": _he(ks[2], (di, di), si, dtype),
+        "wk": _he(ks[3], (di, di), si, dtype),
+        "wv": _he(ks[4], (di, di), si, dtype),
+        "w_i": _he(ks[5], (di, dims.n_heads), si, jnp.float32),
+        "b_i": jnp.zeros((dims.n_heads,), jnp.float32),
+        "w_f": _he(ks[6], (di, dims.n_heads), si, jnp.float32),
+        "b_f": jnp.full((dims.n_heads,), 3.0, jnp.float32),   # forget ~ 1
+        "out_norm": rmsnorm_init(dims.head_dim, dtype),
+        "w_down": _he(ks[7], (di, d), si, dtype),
+    }
+
+
+def mlstm_parallel_ref(q, k, v, i_raw, f_raw):
+    """Parallel (training) form. q,k,v: (B,H,S,D) fp32; i_raw,f_raw: (B,H,S).
+
+    D_ts = exp(cum_f_t - cum_f_s + i_s) for s <= t (stabilized); h = (D*QK^T)V
+    normalized by max(|row-sum|, 1) — the mLSTM paper's attention-like form.
+    """
+    b, h, s, d = q.shape
+    log_f = -jax.nn.softplus(-f_raw)                         # log sigmoid(f)
+    cum_f = jnp.cumsum(log_f, axis=-1)                       # (B,H,S)
+    dmat = cum_f[..., :, None] - cum_f[..., None, :] + i_raw[..., None, :]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(mask, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)                # (B,H,S,1)
+    m = jnp.maximum(m, 0.0)
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) * (d ** -0.5)
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, -1, keepdims=True)),
+                       jnp.exp(-m))
+    return jnp.einsum("bhst,bhtd->bhsd", w / norm, v)
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, *, cs: int = 256):
+    """Chunkwise-parallel mLSTM (same math as kernels/mlstm_scan, pure jnp).
+
+    Scans over S/cs chunks carrying the (C, n, m) state; within a chunk the
+    output is the attention-like parallel form. Peak memory is
+    O(B*H*cs^2 + B*H*D^2) instead of the O(B*H*S^2) of the fully-parallel
+    form — the §Perf iteration xlstm-1 fix that makes 4k-32k sequences
+    tractable. q,k,v: (B,H,S,D) fp32; gates: (B,H,S). Returns (B,H,S,D).
+    """
+    b, h, s, d = q.shape
+    cs = min(cs, s)
+    assert s % cs == 0, "pad sequence to the chunk size"
+    ns = s // cs
+    scale = d ** -0.5
+    tri = jnp.tril(jnp.ones((cs, cs), bool))
+
+    def chunk(carry, xs):
+        C_prev, n_prev, m_prev = carry
+        qc, kc, vc, ic, fc = xs                    # (B,H,cs,D) / (B,H,cs)
+        log_f = -jax.nn.softplus(-fc)
+        bb = jnp.cumsum(log_f, axis=-1)            # (B,H,cs)
+        b_tot = bb[..., -1:]
+
+        dmat = bb[..., :, None] - bb[..., None, :] + ic[..., None, :]
+        dmat = jnp.where(tri, dmat, -jnp.inf)
+        inter_log = bb + m_prev[..., None]         # (B,H,cs)
+        m_row = jnp.maximum(jnp.max(dmat, -1), inter_log)
+        m_row = jnp.maximum(m_row, 0.0)
+
+        dexp = jnp.exp(dmat - m_row[..., None])
+        inter_sc = jnp.exp(inter_log - m_row)
+
+        qs = qc * scale
+        w = jnp.einsum("bhsd,bhtd->bhst", qs, kc) * dexp
+        intra = jnp.einsum("bhst,bhtd->bhsd", w, vc)
+        inter = jnp.einsum("bhsd,bhde->bhse", qs, C_prev) \
+            * inter_sc[..., None]
+        n_t = jnp.einsum("bhsd,bhd->bhs", qs, n_prev) * inter_sc \
+            + jnp.sum(w, -1)
+        denom = jnp.maximum(jnp.abs(n_t), jnp.exp(-m_row))
+        hc = (intra + inter) / denom[..., None]
+
+        # state update for the next chunk
+        m_new = jnp.maximum(b_tot[..., 0] + m_prev,
+                            jnp.max(b_tot - bb + ic, -1))
+        state_sc = jnp.exp(b_tot[..., 0] + m_prev - m_new)
+        contrib = jnp.exp(b_tot - bb + ic - m_new[..., None])
+        kw = kc * contrib[..., None]
+        C_new = state_sc[..., None, None] * C_prev + \
+            jnp.einsum("bhtd,bhte->bhde", kw, vc)   # index [k_dim, v_dim]
+        n_new = state_sc[..., None] * n_prev + jnp.sum(kw, -2)
+        return (C_new, n_new, m_new), hc
+
+    split = lambda t: t.reshape(*t.shape[:2], ns, cs, *t.shape[3:]) \
+        .swapaxes(0, 2).swapaxes(1, 2)             # noqa: E731 (NS,B,H,cs,..)
+    xs = tuple(split(t) for t in (q, k, v, i_raw, f_raw))
+    C0 = jnp.zeros((b, h, d, d), jnp.float32)
+    n0 = jnp.zeros((b, h, d), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    _, hs = jax.lax.scan(chunk, (C0, n0, m0), xs)
+    return hs.swapaxes(1, 2).swapaxes(0, 2).reshape(b, h, s, d)
+
+
+def mlstm_decode_step(state, q, k, v, i_raw, f_raw):
+    """One step. state: dict(C:(B,H,D,D), n:(B,H,D), m:(B,H)).
+    q,k,v: (B,H,D) fp32; i_raw,f_raw: (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    log_f = -jax.nn.softplus(-f_raw)
+    m_new = jnp.maximum(log_f + m, i_raw)
+    f_sc = jnp.exp(log_f + m - m_new)[..., None]
+    i_sc = jnp.exp(i_raw - m_new)[..., None]
+    d = q.shape[-1]
+    C = f_sc[..., None] * C + i_sc[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", v, k)
+    n = f_sc * n + i_sc * k
+    qs = q * (d ** -0.5)
+    num = jnp.einsum("bhde,bhe->bhd", C, qs)
+    den = jnp.maximum(jnp.abs(jnp.sum(n * qs, -1)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def _dw_conv(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def mlstm_block_apply(p: Params, x: jax.Array, dims: XLSTMDims, *,
+                      cache: Params | None = None,
+                      ) -> tuple[jax.Array, Params | None]:
+    b, s, _ = x.shape
+    di, nh, hd = dims.d_inner, dims.n_heads, dims.head_dim
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    main, gate = up[..., :di], up[..., di:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    cmain, new_conv = _dw_conv(main, p["conv_w"], p["conv_b"], conv_state)
+
+    q = jnp.einsum("bse,ef->bsf", cmain, p["wq"]).reshape(b, s, nh, hd)
+    k = jnp.einsum("bse,ef->bsf", cmain, p["wk"]).reshape(b, s, nh, hd)
+    v = jnp.einsum("bse,ef->bsf", main, p["wv"]).reshape(b, s, nh, hd)
+    cf = cmain.astype(jnp.float32)
+    i_raw = jnp.einsum("bse,eh->bsh", cf, p["w_i"]) + p["b_i"]
+    f_raw = jnp.einsum("bse,eh->bsh", cf, p["w_f"]) + p["b_f"]
+
+    qf = q.transpose(0, 2, 1, 3).astype(jnp.float32)
+    kf = k.transpose(0, 2, 1, 3).astype(jnp.float32)
+    vf = v.transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    if cache is not None:
+        state = {"C": cache["C"].astype(jnp.float32),
+                 "n": cache["n"].astype(jnp.float32),
+                 "m": cache["m"].astype(jnp.float32)}
+        new_state, h = mlstm_decode_step(
+            state, qf[:, :, 0], kf[:, :, 0], vf[:, :, 0],
+            i_raw.transpose(0, 2, 1)[:, :, 0], f_raw.transpose(0, 2, 1)[:, :, 0])
+        h = h[:, :, None]                                   # (B,H,1,D)
+        new_cache = {"C": new_state["C"], "n": new_state["n"],
+                     "m": new_state["m"], "conv": new_conv}
+    else:
+        ir = i_raw.transpose(0, 2, 1)
+        fr = f_raw.transpose(0, 2, 1)
+        if s >= 512 and s % 256 == 0:
+            # chunkwise form: O(cs^2) not O(S^2) memory (§Perf xlstm-1)
+            h = mlstm_chunkwise(qf, kf, vf, ir, fr, cs=256)
+        else:
+            h = mlstm_parallel_ref(qf, kf, vf, ir, fr)       # (B,H,S,D)
+        new_cache = None
+
+    h = rmsnorm(p["out_norm"], h.astype(x.dtype))
+    h = h.transpose(0, 2, 1, 3).reshape(b, s, di)
+    y = h * jax.nn.silu(gate)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return out, new_cache
+
+
+def mlstm_cache_init(batch: int, dims: XLSTMDims, dtype=jnp.float32) -> Params:
+    nh, hd = dims.n_heads, dims.head_dim
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), dtype),
+        "n": jnp.zeros((batch, nh, hd), dtype),
+        "m": jnp.zeros((batch, nh), dtype),
+        "conv": jnp.zeros((batch, dims.conv_width - 1, dims.d_inner), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def slstm_block_init(key, dims: XLSTMDims, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 10)
+    d = dims.d_model
+    nh = dims.n_heads
+    hd = d // nh
+    s = d ** -0.5
+    dff = int(d * dims.ff_factor)
+    p = {"norm": layernorm_init(d, dtype),
+         "out_norm": rmsnorm_init(hd, dtype),
+         "w_ff_up": _he(ks[8], (d, 2 * dff), s, dtype),
+         "w_ff_down": _he(ks[9], (dff, d), dff ** -0.5, dtype)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = _he(ks[i], (d, d), s, dtype)
+        p[f"r_{g}"] = _he(ks[4 + i], (nh, hd, hd), hd ** -0.5, dtype)
+        p[f"b_{g}"] = (jnp.full((d,), 3.0, jnp.float32) if g == "f"
+                       else jnp.zeros((d,), jnp.float32))
+    return p
+
+
+def slstm_scan(p: Params, x: jax.Array, nh: int,
+               state: Params | None = None) -> tuple[jax.Array, Params]:
+    """Sequential sLSTM over time via lax.scan (true recurrence: the
+    recurrent weight R makes it non-parallelizable — the paper's point).
+    x: (B,S,d) -> (B,S,d)."""
+    b, s, d = x.shape
+    hd = d // nh
+    wz = jnp.einsum("bsd,de->bse", x, p["w_z"]).astype(jnp.float32) + p["b_z"]
+    wi = jnp.einsum("bsd,de->bse", x, p["w_i"]).astype(jnp.float32) + p["b_i"]
+    wf = jnp.einsum("bsd,de->bse", x, p["w_f"]).astype(jnp.float32) + p["b_f"]
+    wo = jnp.einsum("bsd,de->bse", x, p["w_o"]).astype(jnp.float32) + p["b_o"]
+    pre = jnp.stack([wz, wi, wf, wo], 0).reshape(4, b, s, nh, hd)
+
+    if state is None:
+        zeros = jnp.zeros((b, nh, hd), jnp.float32)
+        state = {"c": zeros, "n": zeros, "h": zeros,
+                 "m": jnp.zeros((b, nh, hd), jnp.float32)}
+
+    rz = p["r_z"].astype(jnp.float32)
+    ri = p["r_i"].astype(jnp.float32)
+    rf = p["r_f"].astype(jnp.float32)
+    ro = p["r_o"].astype(jnp.float32)
+
+    def step(carry, t):
+        c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+        z_t, i_t, f_t, o_t = t                                # (B,NH,HD) each
+        z = jnp.tanh(z_t + jnp.einsum("bhd,hde->bhe", h, rz))
+        i_log = i_t + jnp.einsum("bhd,hde->bhe", h, ri)
+        f_log = -jax.nn.softplus(-(f_t + jnp.einsum("bhd,hde->bhe", h, rf)))
+        o = jax.nn.sigmoid(o_t + jnp.einsum("bhd,hde->bhe", h, ro))
+        m_new = jnp.maximum(f_log + m, i_log)
+        i_sc = jnp.exp(i_log - m_new)
+        f_sc = jnp.exp(f_log + m - m_new)
+        c = f_sc * c + i_sc * z
+        n = jnp.maximum(f_sc * n + i_sc, jnp.exp(-m_new))
+        h_new = o * (c / n)
+        return ({"c": c, "n": n, "h": h_new, "m": m_new}, h_new)
+
+    xs = pre.transpose(2, 0, 1, 3, 4)                         # (S,4,B,NH,HD)
+    final, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3).reshape(b, s, d), final
+
+
+def slstm_block_apply(p: Params, x: jax.Array, dims: XLSTMDims, *,
+                      cache: Params | None = None,
+                      ) -> tuple[jax.Array, Params | None]:
+    b, s, d = x.shape
+    nh = dims.n_heads
+    hd = d // nh
+    xin = layernorm(p["norm"], x)
+    state = None
+    if cache is not None:
+        state = {"c": cache["c"].astype(jnp.float32),
+                 "n": cache["n"].astype(jnp.float32),
+                 "h": cache["hs"].astype(jnp.float32),
+                 "m": cache["m"].astype(jnp.float32)}
+    h, final = slstm_scan(p, xin, nh, state)
+    h = rmsnorm(p["out_norm"], h.reshape(b, s, nh, hd).astype(x.dtype)) \
+        .reshape(b, s, d)
+    # gated feed-forward (post-up-projection, factor 4/3, GeGLU)
+    up = jnp.einsum("bsd,de->bse", h, p["w_ff_up"])
+    dff = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :dff]) * up[..., dff:]
+    out = jnp.einsum("bsf,fd->bsd", y, p["w_ff_down"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": final["c"], "n": final["n"],
+                     "hs": final["h"], "m": final["m"]}
+    return out, new_cache
+
+
+def slstm_cache_init(batch: int, dims: XLSTMDims, dtype=jnp.float32) -> Params:
+    nh = dims.n_heads
+    hd = dims.d_model // nh
+    z = jnp.zeros((batch, nh, hd), dtype)
+    return {"c": z, "n": z, "hs": z, "m": z}

@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, apply_updates, global_norm, init_state, schedule  # noqa: F401
+from . import compression  # noqa: F401

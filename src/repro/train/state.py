@@ -1,0 +1,47 @@
+"""TrainState: params + optimizer state, with sharding-spec companions."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from ..models import sharding as shd
+from ..optim import adamw
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+
+    def tree_flatten(self):
+        return (self.params, self.opt), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda aux, ch: TrainState(*ch),
+)
+
+
+def init_train_state(params: Any) -> TrainState:
+    return TrainState(params=params, opt=adamw.init_state(params))
+
+
+def train_state_specs(params_shape: Any, *, zero: bool = True,
+                      axis_sizes: dict | None = None) -> TrainState:
+    """Sharding specs for a TrainState. ``zero=True`` spreads optimizer
+    moments over the data axis too (ZeRO-1)."""
+    from jax.sharding import PartitionSpec as P
+    pspec = shd.param_specs(params_shape, axis_sizes)
+    mspec = shd.zero_specs(params_shape, axis_sizes=axis_sizes) \
+        if zero else pspec
+    return TrainState(params=pspec,
+                      opt={"step": P(), "m": mspec, "v": mspec})

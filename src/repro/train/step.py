@@ -1,0 +1,115 @@
+"""train_step / serve_step builders (the functions the launcher jits).
+
+``make_train_step`` supports gradient accumulation (microbatch scan) and
+returns a pure (state, batch) -> (state, metrics) function; remat policy is
+set on the Model. ``make_serve_step`` performs one greedy decode step for a
+whole request batch against the KV/state cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..optim import adamw
+from .state import TrainState
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig, *,
+                    microbatches: int = 1,
+                    grad_specs: Any = None,
+                    mesh=None) -> Callable:
+    """``grad_specs``: optional PartitionSpec pytree to constrain gradients
+    to (ZeRO-1 flow: reduce-scatter grads onto the optimizer-state sharding
+    so moment updates are local and only bf16 params are re-gathered)."""
+    def loss_fn(params, batch):
+        total, metrics = model.loss(params, batch)
+        return total, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain(grads):
+        if grad_specs is None:
+            return grads
+        from jax.sharding import NamedSharding
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, s) if mesh is not None else s),
+            grads, grad_specs)
+
+    def train_step(state: TrainState, batch: dict
+                   ) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+            grads = constrain(grads)
+        else:
+            def split(x):
+                b = x.shape[0] if x.ndim else 0
+                # mrope positions are (3, B, S): split on axis 1
+                if x.ndim == 3 and x.shape[0] == 3:
+                    return x.reshape(3, microbatches, -1, *x.shape[2:]) \
+                            .transpose(1, 0, 2, *range(3, x.ndim + 1))
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(state.params, mb)
+                grads = constrain(grads)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            zeros = constrain(zeros)
+            (grads, loss), _ = jax.lax.scan(acc_body,
+                                            (zeros, jnp.zeros(())), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model) -> Callable:
+    def eval_step(params, batch) -> dict:
+        loss, metrics = model.loss(params, batch)
+        return {"loss": loss, **metrics}
+    return eval_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """One decode step for a batch of requests: greedy argmax sampling.
+    (serve_state = (cache, last_tokens)) -> (serve_state, new_tokens)."""
+
+    def serve_step(params, cache: Any, tokens: jax.Array
+                   ) -> tuple[jax.Array, Any]:
+        logits, new_cache = model.decode_step(params, cache, tokens)
+        next_tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    """Prefill: full forward over the prompt (logits for the last position
+    feed the first decode step). Cache-filling prefill is modeled as the
+    forward pass itself for roofline purposes."""
+
+    def prefill_step(params, batch: dict) -> jax.Array:
+        logits, _ = model.apply(params, batch)
+        return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+    return prefill_step

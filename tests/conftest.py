@@ -1,0 +1,17 @@
+"""Shared fixtures. NOTE: XLA_FLAGS / fake devices are deliberately NOT set
+here — smoke tests and benches must see 1 real device. Sharding tests that
+need many devices spawn subprocesses with their own XLA_FLAGS."""
+
+import pytest
+
+import repro.core as rc
+
+
+@pytest.fixture(autouse=True)
+def _reset_plan():
+    """Every test starts and ends on the default sequential plan."""
+    rc.plan("sequential")
+    rc.set_session_seed(0)
+    yield
+    rc.shutdown()
+    rc.plan("sequential")

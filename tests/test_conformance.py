@@ -1,0 +1,106 @@
+"""Future API conformance suite (the paper's future.tests analogue).
+
+Every backend must produce the same values, the same relayed output and
+conditions, the same exceptions, and the same RNG streams. This file is
+parametrized over all registered backends; a new backend is conformance-
+tested by merely existing in the registry.
+"""
+
+import os
+import warnings
+
+import pytest
+
+import repro.core as rc
+from repro.core import future, future_map, value
+
+BACKENDS = [
+    ("sequential", {}),
+    ("threads", {"workers": 2}),
+    ("processes", {"workers": 2}),
+    ("cluster", {"workers": 2}),
+    ("jax_async", {}),
+]
+
+IDS = [b[0] for b in BACKENDS]
+
+
+@pytest.fixture(params=BACKENDS, ids=IDS)
+def backend(request):
+    name, kw = request.param
+    rc.plan(name, **kw)
+    yield name
+    rc.shutdown()
+
+
+def test_same_value(backend):
+    x = 11
+    assert value(future(lambda: x * 3)) == 33
+
+
+def test_snapshot_semantics(backend):
+    x = 1
+    f = future(lambda: x + 100)
+    x = 2  # noqa: F841
+    assert value(f) == 101
+
+
+def test_exception_relayed_as_is(backend):
+    f = future(lambda: int("not-a-number"))
+    with pytest.raises(ValueError):
+        value(f)
+
+
+def test_stdout_relay(backend, capsys):
+    f = future(lambda: print("from-the-future") or 1)
+    assert value(f) == 1
+    assert "from-the-future" in capsys.readouterr().out
+
+
+def test_warning_relay(backend):
+    def body():
+        warnings.warn("relayed-warning")
+        return 2
+
+    f = future(body)
+    with warnings.catch_warnings(record=True) as wlist:
+        warnings.simplefilter("always")
+        assert value(f) == 2
+    assert any("relayed-warning" in str(w.message) for w in wlist)
+
+
+def test_rng_stream_invariance(backend):
+    """seed=: same stream regardless of backend — compare against the
+    sequential reference computed with the same session seed."""
+    import jax
+    rc.set_session_seed(1234)
+    f = future(lambda key: float(jax.random.normal(key, ())), seed=True)
+    got = value(f)
+    expected = float(jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(1234), 0), ()))
+    assert got == pytest.approx(expected)
+
+
+def test_map_matches_sequential(backend):
+    xs = list(range(7))
+    assert future_map(lambda v: v * v, xs) == [v * v for v in xs]
+
+
+def test_nested_parallelism_protection(backend):
+    """A future created inside a future must default to the sequential
+    (popped) stack — no N^2 explosion (paper §Nested parallelism)."""
+    def outer():
+        from repro.core import active_backend
+        inner = future(lambda: 1)
+        return (type(active_backend()).__name__, value(inner))
+
+    name, v = value(future(outer))
+    assert v == 1
+    assert name == "SequentialBackend"
+
+
+def test_worker_isolation_processes():
+    """Process-family backends really do run elsewhere."""
+    rc.plan("processes", workers=1)
+    assert value(future(lambda: os.getpid())) != os.getpid()
+    rc.shutdown()

@@ -1,0 +1,111 @@
+"""Fault tolerance: node failures, retry, speculative execution, elasticity.
+
+The paper's §Future-work names restart(f)/retry on FutureError and a
+future_either construct; these are first-class here because they are the
+substrate of the multi-pod launcher's failure handling.
+"""
+
+import os
+import time
+
+import pytest
+
+import repro.core as rc
+from repro.core import future, future_either, future_map, retry, value
+
+
+@pytest.fixture
+def pool():
+    rc.plan("processes", workers=2)
+    yield
+    rc.shutdown()
+
+
+def _die():
+    os._exit(23)
+
+
+def test_worker_death_is_future_error(pool):
+    f = future(_die)
+    with pytest.raises(rc.WorkerDiedError):
+        value(f)
+
+
+def test_pool_self_heals_after_death(pool):
+    with pytest.raises(rc.WorkerDiedError):
+        value(future(_die))
+    # both workers must still be usable afterwards
+    assert future_map(lambda x: x + 1, [1, 2, 3, 4]) == [2, 3, 4, 5]
+
+
+def test_retry_gives_up_after_n(pool):
+    with pytest.raises(rc.WorkerDiedError):
+        retry(_die, times=2)
+
+
+def test_retry_succeeds_on_flaky(pool, tmp_path):
+    marker = str(tmp_path / "flaky-ran")
+
+    def flaky():
+        import os as _os
+        if not _os.path.exists(marker):
+            open(marker, "w").close()
+            _os._exit(9)               # first attempt: simulated node failure
+        return "recovered"
+
+    assert retry(flaky, times=3) == "recovered"
+
+
+def test_evaluation_errors_do_not_retry(pool):
+    calls = []
+
+    def bad():
+        calls.append(1)
+        raise ValueError("deterministic bug")
+
+    with pytest.raises(ValueError):
+        retry(bad, times=3)
+
+
+def test_future_either_prefers_fast(pool):
+    t0 = time.time()
+    v = future_either(
+        lambda: (time.sleep(5.0), "straggler")[1],
+        lambda: (time.sleep(0.05), "healthy")[1],
+    )
+    assert v == "healthy"
+    assert time.time() - t0 < 4.0      # did not wait for the straggler
+
+
+def test_future_map_retries_dead_chunks(pool, tmp_path):
+    marker = str(tmp_path / "chunk-died")
+
+    def elem(x):
+        import os as _os
+        if x == 3 and not _os.path.exists(marker):
+            open(marker, "w").close()
+            _os._exit(7)
+        return x * 2
+
+    out = future_map(elem, [1, 2, 3, 4], chunks=4, retries=2)
+    assert out == [2, 4, 6, 8]
+
+
+def test_elastic_resize(pool):
+    backend = rc.active_backend()
+    backend.resize(4)
+    assert backend.workers == 4
+    assert future_map(lambda x: x, list(range(8))) == list(range(8))
+    backend.resize(1)
+    assert backend.workers == 1
+    assert value(future(lambda: "still-alive")) == "still-alive"
+
+
+def test_cancel_running_task(pool):
+    f = future(lambda: time.sleep(30))
+    time.sleep(0.1)
+    assert f.cancel()
+    with pytest.raises(rc.FutureError):
+        value(f)
+    # pool healed
+    assert value(future(lambda: 1)) == 1

@@ -1,0 +1,135 @@
+"""Unit tests for the three Future constructs and creation semantics."""
+
+import time
+import warnings
+
+import pytest
+
+import repro.core as rc
+from repro.core import Future, future, merge, resolved, value
+
+
+def test_value_of_simple_future():
+    f = future(lambda: 21 * 2)
+    assert value(f) == 42
+    assert resolved(f) is True
+
+
+def test_snapshot_at_creation_globals():
+    # paper: x <- 1; f <- future(slow_fcn(x)); x <- 2; value(f) uses x == 1
+    global _snap_x
+    _snap_x = 1
+    f = future(lambda: _snap_x * 10)
+    _snap_x = 2
+    assert value(f) == 10
+
+
+def test_snapshot_at_creation_closure():
+    x = 1
+    f = future(lambda: x * 10)
+    x = 2  # noqa: F841 — rebinding must not affect the future
+    assert value(f) == 10
+
+
+def test_snapshot_copies_mutable_containers():
+    xs = [1, 2, 3]
+    f = future(lambda: sum(xs))
+    xs.append(100)                      # mutation after creation is invisible
+    assert value(f) == 6
+
+
+def test_error_relayed_as_is_and_on_every_value():
+    f = future(lambda: [0][3])
+    with pytest.raises(IndexError):
+        value(f)
+    with pytest.raises(IndexError):     # errors re-raised every call
+        value(f)
+
+
+def test_stdout_and_warning_relay_order(capsys):
+    def body():
+        print("line-1")
+        warnings.warn("warn-1")
+        print("line-2")
+        return 5
+
+    f = future(body)
+    with warnings.catch_warnings(record=True) as wlist:
+        warnings.simplefilter("always")
+        assert value(f) == 5
+    out = capsys.readouterr().out
+    # all stdout relayed (before conditions), in order
+    assert out.index("line-1") < out.index("line-2")
+    assert [str(w.message) for w in wlist] == ["warn-1"]
+    # relayed only once
+    value(f)
+    assert "line-1" not in capsys.readouterr().out
+
+
+def test_resolved_is_nonblocking():
+    rc.plan("threads", workers=1)
+    f = future(lambda: (time.sleep(0.3), "done")[1])
+    t0 = time.time()
+    r = resolved(f)
+    assert time.time() - t0 < 0.2
+    assert r is False
+    assert value(f) == "done"
+
+
+def test_creation_blocks_when_no_worker_free():
+    rc.plan("threads", workers=1)
+    future(lambda: time.sleep(0.25))
+    t0 = time.time()
+    f2 = future(lambda: "second")
+    assert time.time() - t0 >= 0.2      # blocked for the busy worker
+    assert value(f2) == "second"
+
+
+def test_lazy_future_defers_until_touched():
+    trace = []
+    f = future(lambda: trace.append("ran") or 1, lazy=True)
+    time.sleep(0.05)
+    assert trace == []                  # not launched yet
+    assert value(f) == 1
+
+
+def test_merge_of_lazy_futures():
+    fs = [future(lambda i=i: i * i, lazy=True) for i in range(5)]
+    m1 = merge(fs[:3])
+    m2 = merge(fs[3:])
+    assert value(m1) == [0, 1, 4]
+    assert value([m1, m2]) == [0, 1, 4, 9, 16]   # flattened like c(value..)
+
+
+def test_merge_rejects_launched_futures():
+    f = future(lambda: 1)
+    with pytest.raises(rc.GlobalsError):
+        merge([f])
+
+
+def test_value_generic_containers():
+    fs = {"a": future(lambda: 1), "b": [future(lambda: 2), 3]}
+    assert value(fs) == {"a": 1, "b": [2, 3]}
+
+
+def test_explicit_globals_argument():
+    # paper: future(get("k"), globals = "k") — dynamic lookups need a hint
+    def body():
+        return globals()["k"]           # invisible to static analysis
+    f = future(body, globals={"k": 42})
+    assert value(f) == 42
+
+
+def test_listenv_promise_container():
+    env = rc.ListEnv()
+    for i in range(4):
+        env[i] = future(lambda i=i: i + 100)
+    assert env.as_list() == [100, 101, 102, 103]
+
+
+def test_cancel_unlaunched():
+    rc.plan("threads", workers=1)
+    blocker = future(lambda: time.sleep(0.3))
+    f = future(lambda: "x", lazy=True)
+    assert f.cancel() is False          # lazy/not submitted: nothing to cancel
+    value(blocker)

@@ -1,0 +1,160 @@
+"""Launch layer units: HLO analyzer, sharding specs, analytic FLOPs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, all_archs, get_arch
+from repro.launch.hlo_analysis import (Roofline, _shape_bytes, analyze,
+                                       parse_hlo)
+from repro.launch.specs import model_flops, param_counts
+from repro.models import sharding as shd
+from repro.models.model import Model
+
+AX = {"data": 16, "model": 16}
+
+
+_FIXTURE = """
+HloModule test
+
+%add.clone (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %sum = f32[] add(%x, %y)
+}
+
+%body (param: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+  %param = (s32[], f32[8,64]) parameter(0)
+  %i = s32[] get-tuple-element(%param), index=0
+  %w = f32[8,64]{1,0} get-tuple-element(%param), index=1
+  %d = f32[8,8]{1,0} dot(%w, %w), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add.clone
+  ROOT %t = (s32[], f32[8,64]) tuple(%i, %w)
+}
+
+%cond (param: (s32[], f32[8,64])) -> pred[] {
+  %param = (s32[], f32[8,64]) parameter(0)
+  %i = s32[] get-tuple-element(%param), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (p0: f32[8,64]) -> f32[8,64] {
+  %p0 = f32[8,64]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,64]) tuple(%zero, %p0)
+  %w = (s32[], f32[8,64]) while(%tup), condition=%cond, body=%body
+  ROOT %out = f32[8,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,64]{1,0}") == 8 * 64 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(s32[], f32[4,4])") == 4 + 64
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_analyze_fixture_trips_and_flops():
+    r = analyze(_FIXTURE)
+    # dot: 2 * 8*8 * 64 flops, x12 trips
+    assert r.flops == pytest.approx(12 * 2 * 8 * 8 * 64)
+    assert list(r.while_trips.values()) == [12]
+    # all-reduce of 8x8 f32: 2x multiplier, x12
+    assert r.collectives["all-reduce"] == 12 * 2 * 8 * 8 * 4
+
+
+def test_analyze_real_jit_scan():
+    def f(w, xs):
+        def body(c, x):
+            return jnp.tanh(x @ w) + c, ()
+        c, _ = jax.lax.scan(body, jnp.zeros((4, 16)), xs)
+        return c.sum()
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((7, 4, 16), jnp.float32)).compile().as_text()
+    r = analyze(txt)
+    assert r.flops == pytest.approx(7 * 2 * 4 * 16 * 16, rel=0.05)
+    assert 7 in r.while_trips.values()
+
+
+def test_param_specs_divisibility():
+    cfg = get_arch("minicpm3-4b")           # vocab 73448 NOT /16
+    model = Model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, jnp.bfloat16),
+                            jax.random.PRNGKey(0))
+    specs = shd.param_specs(shapes, AX)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    shape_flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for (path, spec), (_, leaf) in zip(flat, shape_flat):
+        for size, ax in zip(leaf.shape, tuple(spec)):
+            if ax is not None:
+                n = AX.get(ax, 1) if not isinstance(ax, tuple) else \
+                    int(np.prod([AX.get(a, 1) for a in ax]))
+                assert size % n == 0, (path, leaf.shape, spec)
+
+
+def test_param_specs_shard_big_weights():
+    cfg = get_arch("yi-9b")
+    model = Model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, jnp.bfloat16),
+                            jax.random.PRNGKey(0))
+    specs = shd.param_specs(shapes, AX)
+    # embedding sharded over model
+    assert tuple(specs["embed"]["table"]) == ("model", None)
+    # scanned stage weights: leading layer axis unsharded, ffn dim sharded
+    stage = specs["stages"][0]
+    assert tuple(stage["b0"]["mlp"]["w_up"]) == (None, None, "model")
+    assert tuple(stage["b0"]["mlp"]["w_down"]) == (None, "model", None)
+
+
+def test_zero_specs_add_data_axis():
+    cfg = get_arch("yi-9b")
+    model = Model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k, jnp.bfloat16),
+                            jax.random.PRNGKey(0))
+    zspecs = shd.zero_specs(shapes, axis_sizes=AX)
+    stage = zspecs["stages"][0]
+    spec = tuple(stage["b0"]["mlp"]["w_up"])
+    assert "data" in spec and "model" in spec
+
+
+def test_batch_specs_replicate_tiny_batch():
+    batch = {"tokens": jax.ShapeDtypeStruct((1, 1024), jnp.int32)}
+    specs = shd.batch_specs(batch, batch_axes=("data",), axis_sizes=AX)
+    assert tuple(specs["tokens"]) == (None, None)
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 1024), jnp.int32)}
+    specs = shd.batch_specs(batch, batch_axes=("data",), axis_sizes=AX)
+    assert tuple(specs["tokens"]) == ("data", None)
+
+
+def test_model_flops_sane():
+    cfg = get_arch("yi-9b")
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    # yi-9b ~ 8.8e9 params; 6*N*D with D = 1M tokens ~ 5e16
+    assert 8e9 < mf["params_total"] < 10e9
+    assert 3e16 < mf["dense_flops"] < 8e16
+    assert mf["attn_flops"] > 0
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_arch("qwen2-moe-a2.7b")
+    pc = param_counts(cfg)
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    assert 13e9 < pc["total"] < 16e9           # ~14.3B total
+    assert mf["n_active"] < 0.35 * pc["total"]  # A2.7B active (+unembed)
+
+
+def test_cell_skip_reasons():
+    cfg = get_arch("hubert-xlarge")
+    ok, why = cfg.supports(SHAPES["decode_32k"])
+    assert not ok and "decode" in why
+    cfg = get_arch("yi-34b")
+    ok, why = cfg.supports(SHAPES["long_500k"])
+    assert not ok and "quadratic" in why
+    cfg = get_arch("recurrentgemma-9b")
+    assert cfg.supports(SHAPES["long_500k"])[0]

@@ -1,0 +1,79 @@
+"""Map-reduce layer: chunking/load balancing, ordering, RNG invariance."""
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as rc
+from repro.core import (future_map, future_map_chunked_lazy, future_lapply)
+from repro.core.mapreduce import _chunk_slices
+
+
+def test_chunk_slices_partition_exactly():
+    for n in (0, 1, 7, 10, 64):
+        for c in (1, 2, 3, 10, 100):
+            sl = _chunk_slices(n, c) if n else []
+            flat = [i for r in sl for i in r]
+            assert flat == list(range(n))
+
+
+@given(n=st.integers(0, 40), chunks=st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_map_equals_list_comprehension(n, chunks):
+    xs = list(range(n))
+    assert future_map(lambda v: v * 3 + 1, xs, chunks=chunks) \
+        == [v * 3 + 1 for v in xs]
+
+
+def test_results_ordered_despite_uneven_runtimes():
+    rc.plan("threads", workers=3)
+    import time
+
+    def slow_for_small(x):
+        time.sleep(0.05 if x < 2 else 0.0)
+        return x
+
+    assert future_map(slow_for_small, list(range(6)), chunks=6) \
+        == list(range(6))
+
+
+def test_rng_invariant_to_chunking_and_backend():
+    def draw(x, key):
+        return float(jax.random.normal(key, ()))
+
+    rc.set_session_seed(7)
+    ref = future_map(draw, [0] * 6, seed=True, chunks=1)
+
+    for backend, kw in [("threads", {"workers": 2}),
+                        ("processes", {"workers": 2})]:
+        rc.plan(backend, **kw)
+        rc.set_session_seed(7)
+        for chunks in (1, 2, 6):
+            got = future_map(draw, [0] * 6, seed=True, chunks=chunks)
+            assert got == ref, (backend, chunks)
+        rc.shutdown()
+
+
+def test_lazy_merge_construction_matches():
+    xs = list(range(9))
+    assert future_map_chunked_lazy(lambda v: v - 1, xs, chunks=2) \
+        == [v - 1 for v in xs]
+
+
+def test_lapply_argument_order():
+    assert future_lapply([1, 2], lambda v: v * 10) == [10, 20]
+
+
+def test_empty_input():
+    assert future_map(lambda v: v, []) == []
+
+
+def test_rng_misuse_warning():
+    """Undeclared RNG use inside a future warns (paper §parallel RNG)."""
+    from repro.core import rng
+
+    def draws_without_seed():
+        return float(rng.normal(jax.random.PRNGKey(0), ()))
+
+    with pytest.warns(rc.RNGMisuseWarning):
+        rc.value(rc.future(draws_without_seed))

@@ -1,0 +1,41 @@
+"""Regression: stdout capture must be thread-aware — the main thread's
+prints must NOT be swallowed while a threads-backend future is running
+(found by examples/quickstart.py)."""
+
+import time
+
+import repro.core as rc
+from repro.core import future, value
+
+
+def test_main_thread_prints_not_swallowed(capsys):
+    rc.plan("threads", workers=2)
+    f = future(lambda: (time.sleep(0.3), print("from-future"), 7)[2])
+    time.sleep(0.05)
+    print("from-main-thread")            # emitted while the future runs
+    assert value(f) == 7
+    out = capsys.readouterr().out
+    assert "from-main-thread" in out
+    assert "from-future" in out          # relayed at value()
+    rc.shutdown()
+
+
+def test_nested_capture_on_same_thread(capsys):
+    """sequential-inside-sequential: inner future's stdout must relay into
+    the outer future's capture, then out to the caller."""
+    def outer():
+        print("outer-line")
+        v = value(future(lambda: print("inner-line") or 5))
+        return v
+
+    assert value(future(outer)) == 5
+    out = capsys.readouterr().out
+    assert "outer-line" in out and "inner-line" in out
+
+
+def test_router_uninstalls_cleanly(capsys):
+    import sys
+    from repro.core.conditions import _StdoutRouter
+    value(future(lambda: print("x")))
+    capsys.readouterr()
+    assert not isinstance(sys.stdout, _StdoutRouter)

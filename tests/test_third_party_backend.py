@@ -1,0 +1,83 @@
+"""Third-party backend extensibility (paper §Third-party future backends).
+
+A new backend only has to subclass Backend and register itself; the
+conformance expectations then hold automatically. This test defines a
+'throttled' backend out-of-tree (think future.callr / future.batchtools)
+and runs the same assertions the built-ins pass — the future.tests story.
+"""
+
+import time
+import warnings
+
+import pytest
+
+import repro.core as rc
+from repro.core.backends.base import BACKEND_REGISTRY, register_backend
+from repro.core.backends.sequential import SequentialBackend
+from repro.core import future, value
+
+
+@register_backend("throttled")
+class ThrottledBackend(SequentialBackend):
+    """A deliberately silly third-party backend: resolves sequentially
+    after a tiny delay (models a job-scheduler queue like batchtools)."""
+
+    def __init__(self, delay_s: float = 0.01, workers: int = 1):
+        self._delay = float(delay_s)
+        self._n = int(workers)
+
+    def submit(self, task):
+        time.sleep(self._delay)
+        return super().submit(task)
+
+    @property
+    def workers(self):
+        return self._n
+
+
+@pytest.fixture(autouse=True)
+def _plan():
+    rc.plan("throttled", delay_s=0.001)
+    yield
+    rc.plan("sequential")
+
+
+def test_registered():
+    assert "throttled" in BACKEND_REGISTRY
+
+
+def test_value_and_snapshot():
+    x = 5
+    f = future(lambda: x * 2)
+    x = 6  # noqa: F841
+    assert value(f) == 10
+
+
+def test_error_relay():
+    with pytest.raises(ZeroDivisionError):
+        value(future(lambda: 1 / 0))
+
+
+def test_condition_relay():
+    def body():
+        warnings.warn("from-third-party-backend")
+        return 3
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert value(future(body)) == 3
+    assert any("from-third-party-backend" in str(x.message) for x in w)
+
+
+def test_map_reduce_works_unchanged():
+    assert rc.future_map(lambda v: v + 1, range(5)) == [1, 2, 3, 4, 5]
+
+
+def test_rng_invariance_vs_sequential():
+    import jax
+    rc.set_session_seed(99)
+    f = future(lambda key: float(jax.random.normal(key, ())), seed=True)
+    got = value(f)
+    expected = float(jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(99), 0), ()))
+    assert got == pytest.approx(expected)
