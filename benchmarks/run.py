@@ -37,6 +37,10 @@ def _row(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
+#: rows destined for the BENCH_cluster.json artifact (perf trajectory)
+_CLUSTER_JSON: dict = {}
+
+
 # --------------------------------------------------------------------------
 # paper §Overhead: per-future overhead by backend
 # --------------------------------------------------------------------------
@@ -106,6 +110,74 @@ def bench_chunking(quick: bool = False) -> None:
              f"us/element over {n_items} items")
     rc.shutdown()
     rc.plan("sequential")
+
+
+# --------------------------------------------------------------------------
+# cluster transport + event-driven wait (perf trajectory: BENCH_cluster.json)
+# --------------------------------------------------------------------------
+
+def bench_cluster_overhead(quick: bool = False) -> None:
+    """Per-future overhead over the real TCP socket transport, vs the
+    pipe-based processes backend (paper §Overhead, extended to the
+    makeClusterPSOCK analogue)."""
+    n = 8 if quick else 30
+    rows = {}
+    for name in ("processes", "cluster"):
+        rc.plan(name, workers=2)
+        us = _timeit(lambda: rc.value(rc.future(lambda: 42)), n, warmup=2)
+        _row(f"overhead/{name}", us, "future()+value()")
+        rows[name] = us
+        rc.shutdown()
+    rc.plan("sequential")
+    rows["tcp_penalty_us"] = rows["cluster"] - rows["processes"]
+    _row("overhead/cluster_vs_processes", rows["tcp_penalty_us"],
+         "TCP framing + select loop vs mp.Pipe")
+    _CLUSTER_JSON["bench_cluster_overhead"] = {
+        "us_per_future": rows, "workers": 2, "n": n}
+
+
+def bench_wait_vs_poll(quick: bool = False) -> None:
+    """Event-driven resolve() vs the pre-PR 1ms sleep-poll loop: collection
+    latency for a batch of short futures (Chappe et al.'s point that future
+    overhead hides in the resolution flow)."""
+    rc.plan("threads", workers=4)
+    n_futs, sleep_s = 8, (0.01 if quick else 0.02)
+    reps = 3 if quick else 6
+
+    def batch():
+        return [rc.future(lambda: time.sleep(sleep_s) or 1)
+                for _ in range(n_futs)]
+
+    us_wait = _timeit(lambda: rc.resolve(batch()), reps, warmup=1)
+
+    def poll_loop():                      # the old collection strategy
+        fs = batch()
+        while not all(f.resolved() for f in fs):
+            time.sleep(0.001)
+
+    us_poll = _timeit(poll_loop, reps, warmup=1)
+    ideal_us = sleep_s * 2 * 1e6          # 8 futures / 4 workers = 2 waves
+    _row("wait/event_driven", us_wait, f"resolve() on {n_futs} futures")
+    _row("wait/sleep_poll", us_poll,
+         f"saves {us_poll - us_wait:.0f}us vs poll "
+         f"(ideal {ideal_us:.0f}us)")
+    rc.shutdown()
+    rc.plan("sequential")
+    _CLUSTER_JSON["bench_wait_vs_poll"] = {
+        "us_event_driven": us_wait, "us_sleep_poll": us_poll,
+        "us_ideal": ideal_us, "n_futures": n_futs, "sleep_s": sleep_s}
+
+
+def _write_cluster_artifact(quick: bool) -> None:
+    if not _CLUSTER_JSON:
+        return
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_cluster.json")
+    _CLUSTER_JSON["meta"] = {"quick": quick}
+    with open(path, "w") as fh:
+        json.dump(_CLUSTER_JSON, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    print(f"# wrote {os.path.abspath(path)}", flush=True)
 
 
 # --------------------------------------------------------------------------
@@ -180,7 +252,8 @@ def bench_roofline(quick: bool = False) -> None:
 
 
 BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
-           bench_chunking, bench_compression, bench_kernels, bench_roofline]
+           bench_chunking, bench_cluster_overhead, bench_wait_vs_poll,
+           bench_compression, bench_kernels, bench_roofline]
 
 
 def main() -> None:
@@ -193,6 +266,10 @@ def main() -> None:
         if args.only and args.only not in bench.__name__:
             continue
         bench(quick=args.quick)
+    if not args.only:
+        # only full runs update the tracked perf-trajectory artifact —
+        # a filtered run would silently clobber it with partial data
+        _write_cluster_artifact(args.quick)
 
 
 if __name__ == "__main__":

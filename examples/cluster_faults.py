@@ -1,9 +1,10 @@
 """Multi-pod training under failures: the paper's fault-tolerance story.
 
-Runs the real multi-pod driver (cluster backend = worker processes) while
-injecting: (1) a hard node failure mid-round, (2) a straggler pod raced by
-a speculative duplicate, (3) an elastic resize between rounds. The run
-must finish with a decreasing loss despite all three.
+Runs the real multi-pod driver — each pod a worker process connected to the
+TCP socket cluster backend — while injecting: (1) a hard node failure
+mid-round, (2) a straggler pod raced by a speculative duplicate, (3) an
+elastic resize between rounds. The run must finish with a decreasing loss
+despite all three.
 
 Run: PYTHONPATH=src python examples/cluster_faults.py
 """

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Reproducible tier-1 signal: install dev deps (best effort — the suite
+# still collects without them via tests/_hypothesis_shim.py), run the suite.
+#
+#   ./scripts/ci.sh             # full tier-1 run
+#   ./scripts/ci.sh tests/test_conformance.py   # pass-through pytest args
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -r requirements-dev.txt \
+    || echo "warning: dev-dep install failed (offline?); running with what's available"
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -1,0 +1,46 @@
+"""Cross-version JAX API shims.
+
+The repo targets the jax.shard_map / pltpu.CompilerParams spellings; older
+installations (e.g. jax 0.4.x) expose the same machinery under
+``jax.experimental.shard_map`` with ``check_rep``/``auto`` instead of
+``check_vma``/``axis_names``. Route through here so model/train code reads
+like the current API regardless of the installed release.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` context on new jax; a no-op context on releases
+    without it (where code passes the mesh explicitly, e.g. via
+    ``shard_map(mesh=...)``, and needs no ambient mesh)."""
+    fn = getattr(jax, "set_mesh", None)
+    return fn(mesh) if fn is not None else contextlib.nullcontext()
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = True):
+    """``jax.shard_map`` with the new-API signature on any jax version.
+
+    ``axis_names`` is the set of *manual* mesh axes (others stay auto/GSPMD);
+    on old jax that maps to ``auto = mesh.axis_names - axis_names`` and
+    ``check_vma`` maps to ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, **kw)

@@ -16,6 +16,7 @@ from .backends import base as _base                          # noqa: F401
 from .backends import sequential as _sequential              # noqa: F401
 from .backends import threads as _threads                    # noqa: F401
 from .backends import processes as _processes                # noqa: F401
+from .backends import cluster as _cluster                    # noqa: F401
 from .backends import jax_async as _jax_async                # noqa: F401
 from .conditions import (CapturedRun, ImmediateCondition, message,  # noqa: F401
                          signal_progress)
@@ -23,7 +24,8 @@ from .containers import ListEnv                              # noqa: F401
 from .errors import (ChannelError, FutureCancelledError, FutureError,  # noqa: F401
                      GlobalsError, NonExportableObjectError,
                      RNGMisuseWarning, WorkerDiedError)
-from .future import Future, future, merge, resolved, value   # noqa: F401
+from .future import (Future, as_completed, future, merge, resolve,  # noqa: F401
+                     resolved, value, wait_any)
 from .mapreduce import (future_either, future_lapply, future_map,  # noqa: F401
                         future_map_chunked_lazy, retry)
 from .planning import (available_cores, plan, shutdown, spec, tweak,  # noqa: F401
@@ -31,7 +33,8 @@ from .planning import (available_cores, plan, shutdown, spec, tweak,  # noqa: F4
 from .rng import set_session_seed                            # noqa: F401
 
 __all__ = [
-    "future", "value", "resolved", "merge", "Future",
+    "future", "value", "resolved", "resolve", "as_completed", "wait_any",
+    "merge", "Future",
     "plan", "spec", "tweak", "shutdown", "available_cores", "active_backend",
     "future_map", "future_lapply", "future_either", "retry",
     "future_map_chunked_lazy",

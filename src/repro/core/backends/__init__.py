@@ -1,1 +1,14 @@
-"""Future backends: sequential | threads | processes | cluster | jax_async."""
+"""Future backends: sequential | threads | processes | cluster | jax_async.
+
+* ``sequential`` — eager, in-process; the conformance reference.
+* ``threads`` — in-process thread pool (shared memory, zero-copy globals).
+* ``processes`` — local worker-process pool over multiprocessing pipes.
+* ``cluster`` — real TCP sockets: a select-driven driver plus connect-back
+  workers (``cluster.py`` / ``cluster_worker.py``), spawnable locally or
+  launched standalone on other machines — the paper's ``makeClusterPSOCK``.
+* ``jax_async`` — JAX's own asynchronous dispatch surfaced as futures.
+
+All five implement the event-driven ``Backend.wait()`` primitive (see
+``base.py``) so ``resolve()`` / ``as_completed()`` / ``future_map`` block on
+socket selects and condition variables instead of sleep-polling.
+"""

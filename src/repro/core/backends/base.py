@@ -11,7 +11,9 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Any, Callable
+import threading
+import time
+from typing import Any, Callable, Sequence
 
 from ..conditions import CapturedRun, ImmediateCondition
 
@@ -56,6 +58,33 @@ class Backend(abc.ABC):
         Infrastructure failures raise FutureError; evaluation errors are
         *inside* the CapturedRun (relayed by the Future at value())."""
 
+    def wait(self, handles: Sequence[Any], timeout: "float | None" = None
+             ) -> list[Any]:
+        """Block until at least one handle is resolved; return the resolved
+        subset (possibly empty iff ``timeout`` elapsed first).
+
+        This is the event-driven primitive that ``resolve()`` /
+        ``as_completed()`` / ``future_map`` build on instead of sleep-polling
+        ``poll()``. Built-in backends override it with a real event wait
+        (socket ``select`` for cluster, a completion condition variable for
+        threads/processes, immediacy for sequential/jax_async).
+
+        The default is for third-party backends that predate ``wait()``: if
+        nothing polls ready it blocks on ``collect()`` of the first handle,
+        which is exact for synchronous backends (everything resolved at
+        submit) but may overshoot ``timeout`` on asynchronous ones — those
+        should override.
+        """
+        handles = list(handles)
+        ready = [h for h in handles if self.poll(h)]
+        if ready or not handles or timeout == 0:
+            return ready
+        try:
+            self.collect(handles[0])
+        except Exception:                    # noqa: BLE001 — errored == resolved
+            pass
+        return [h for h in handles if self.poll(h)]
+
     def drain_immediate(self, handle: Any) -> list[ImmediateCondition]:
         """Immediate conditions produced since the last drain (may be [])."""
         return []
@@ -70,6 +99,43 @@ class Backend(abc.ABC):
     @property
     def workers(self) -> int:
         return 1
+
+
+class EventWaitMixin:
+    """``wait()`` for backends whose handles carry a ``done``
+    :class:`threading.Event` completed by some notifier thread.
+
+    The backend calls :meth:`_init_wait` in ``__init__`` and
+    :meth:`_notify_done` (from the completing thread, *after*
+    ``handle.done.set()``); waiters then observe completions through one
+    shared condition variable — no sleep loops anywhere.
+    """
+
+    def _init_wait(self) -> None:
+        self._done_cv = threading.Condition()
+
+    def _notify_done(self) -> None:
+        with self._done_cv:
+            self._done_cv.notify_all()
+
+    def wait(self, handles: Sequence[Any], timeout: "float | None" = None
+             ) -> list[Any]:
+        handles = list(handles)
+        if not handles:
+            return []
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._done_cv:
+            while True:
+                ready = [h for h in handles if h.done.is_set()]
+                if ready:
+                    return ready
+                if deadline is None:
+                    self._done_cv.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return []
+                    self._done_cv.wait(remaining)
 
 
 BACKEND_REGISTRY: dict[str, type] = {}

@@ -1,0 +1,568 @@
+"""plan("cluster"): resolve futures on workers connected over TCP sockets.
+
+The paper's ``makeClusterPSOCK`` analogue, for real: a driver that listens on
+a TCP socket and a fleet of worker processes that dial in — spawned locally
+by the backend (the single-host/test path), or launched by hand anywhere
+with network reach::
+
+    python -m repro.core.backends.cluster_worker DRIVER_HOST:PORT
+
+Spec kwargs (``plan("cluster", ...)`` / ``spec("cluster", ...)``):
+
+* ``workers=N`` — spawn N local worker processes that connect back over
+  127.0.0.1 (default: ``available_cores()``).
+* ``hosts=N`` or ``hosts=("nodeA", "nodeB")`` — spawn nothing; expect that
+  many externally-launched workers to connect. ``backend.address`` is the
+  ``(host, port)`` to hand them; ``wait_for_workers()`` blocks until they
+  arrive.
+* ``bind="0.0.0.0"``, ``port=0`` — listener address (loopback + ephemeral
+  port by default; bind ``0.0.0.0`` for real multi-host runs).
+* ``connect_timeout=60`` — seconds to wait for the expected worker count.
+* ``heartbeat_interval=1.0`` / ``heartbeat_timeout=10.0`` — liveness:
+  workers push a heartbeat frame every interval; one silent for longer than
+  the timeout is declared dead (set ``heartbeat_timeout=0`` to disable).
+
+Fault model: EOF / reset / heartbeat loss on a busy worker surfaces as
+:class:`WorkerDiedError` on that future and the pool **self-heals** by
+spawning a replacement (locally-spawned workers; externally-launched
+capacity just shrinks until the operator relaunches). Everything is
+select-driven — one driver thread multiplexes every worker socket — so
+``Backend.wait()`` is a genuine event wait, never a poll loop.
+"""
+
+from __future__ import annotations
+
+import itertools
+import os
+import pickle
+import selectors
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Any
+
+from ..conditions import CapturedRun, ImmediateCondition
+from ..errors import ChannelError, FutureCancelledError, WorkerDiedError
+from .. import planning as plan_mod
+from .base import Backend, EventWaitMixin, TaskSpec, register_backend
+from .transport import FrameReader, send_frame
+
+
+class _Handle:
+    def __init__(self, task: TaskSpec):
+        self.task = task
+        self.done = threading.Event()
+        self.run: CapturedRun | None = None
+        self.error: Exception | None = None          # infrastructure error
+        self.immediate: list[ImmediateCondition] = []
+        self.ilock = threading.Lock()
+        self.worker: "_SockWorker | None" = None
+        self.cancelled = False
+
+
+class _SockWorker:
+    """Driver-side state for one connected worker socket."""
+
+    def __init__(self, wid: int, sock: socket.socket, addr):
+        self.wid = wid
+        self.sock: socket.socket | None = sock
+        self.addr = addr
+        self.reader = FrameReader(sock)
+        self.send_lock = threading.Lock()
+        self.busy: _Handle | None = None
+        self.ready = False                 # hello received
+        self.retired = False               # deliberate down-scale, not a death
+        self.meta: dict = {}
+        self.proc: subprocess.Popen | None = None    # locally-spawned only
+        self.last_seen = time.monotonic()
+
+    def describe(self) -> str:
+        host = self.meta.get("host", self.addr[0] if self.addr else "?")
+        return f"worker {self.wid} ({host} pid={self.meta.get('pid', '?')})"
+
+    def close(self) -> None:
+        sock, self.sock = self.sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+
+@register_backend("cluster")
+class ClusterBackend(EventWaitMixin, Backend):
+    """TCP socket cluster: select-driven driver + connect-back workers."""
+
+    supports_immediate = True
+
+    def __init__(self, workers: int | None = None,
+                 hosts: "int | tuple | list | None" = None,
+                 bind: str = "127.0.0.1", port: int = 0,
+                 connect_timeout: float = 60.0,
+                 heartbeat_interval: float = 1.0,
+                 heartbeat_timeout: float = 10.0):
+        self._hb_interval = float(heartbeat_interval or 0.0)
+        # no heartbeats flowing -> a liveness deadline would falsely kill
+        # every quiet worker; either knob at 0 disables the check
+        self._hb_timeout = float(heartbeat_timeout or 0.0) \
+            if self._hb_interval else 0.0
+        self._connect_timeout = float(connect_timeout)
+        if hosts is None:
+            self._n = int(workers) if workers else plan_mod.available_cores()
+            self._external = 0
+        else:
+            self._external = hosts if isinstance(hosts, int) else len(hosts)
+            self._n = self._external
+        self._nested_blob = pickle.dumps(plan_mod.nested_stack())
+        from .. import rng as rng_mod
+        self._session_seed = rng_mod._session_seed
+
+        self._pool_cv = threading.Condition()
+        self._init_wait()
+        self._all: list[_SockWorker] = []      # connected workers (pool_cv)
+        self._idle: list[_SockWorker] = []
+        self._spawning: list[subprocess.Popen] = []  # launched, not yet hello
+        self._capacity = self._n               # live-or-expected worker count
+        self._shrink_debt = 0
+        self._open = True
+        self._cleaned = False
+        self._cleanup_lock = threading.Lock()
+        self._wid = itertools.count()
+
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((bind, int(port)))
+        self._listener.listen(128)
+        #: (host, port) that workers dial; hand this to cluster_worker
+        self.address = self._listener.getsockname()[:2]
+        self._connect_back = ("127.0.0.1" if bind in ("0.0.0.0", "")
+                              else bind, self.address[1])
+
+        self._wake_r, self._wake_w = os.pipe()
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(self._listener, selectors.EVENT_READ, "listen")
+        self._sel.register(self._wake_r, selectors.EVENT_READ, "wake")
+        self._loop_thread = threading.Thread(
+            target=self._loop, name="cluster-driver", daemon=True)
+        self._loop_thread.start()
+
+        if self._external == 0:
+            for _ in range(self._n):
+                self._spawn_local()
+            self.wait_for_workers(self._n, timeout=self._connect_timeout)
+
+    # -- pool management ----------------------------------------------------
+
+    def _spawn_local(self) -> None:
+        """Launch one connect-back worker process on this machine."""
+        src_root = os.path.abspath(os.path.join(
+            os.path.dirname(__file__), "..", "..", ".."))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else src_root)
+        env.setdefault("OMP_NUM_THREADS", "1")
+        env.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+        host, port = self._connect_back
+        cmd = [sys.executable, "-m", "repro.core.backends.cluster_worker",
+               f"{host}:{port}"]
+        try:
+            proc = subprocess.Popen(cmd, env=env)
+        except OSError:
+            with self._pool_cv:
+                self._capacity -= 1
+                self._pool_cv.notify_all()
+            return
+        with self._pool_cv:
+            self._spawning.append(proc)
+
+    def wait_for_workers(self, n: "int | None" = None,
+                         timeout: "float | None" = None) -> None:
+        """Block until ``n`` workers (default: all expected) are connected
+        and handshaken; raise ChannelError on timeout or startup failure."""
+        n = self._n if n is None else n
+        timeout = self._connect_timeout if timeout is None else timeout
+        deadline = time.monotonic() + timeout
+        with self._pool_cv:
+            while True:
+                ready = sum(1 for w in self._all
+                            if w.ready and w.sock is not None)
+                if ready >= n:
+                    return
+                if self._capacity < n:
+                    break
+                if time.monotonic() > deadline:
+                    break
+                self._pool_cv.wait(0.1)
+        self.shutdown()
+        raise ChannelError(
+            f"cluster startup failed: {ready}/{n} workers connected "
+            f"within {timeout}s (capacity={self._capacity})")
+
+    def _checkout(self) -> _SockWorker:
+        """Blocking acquire of an idle worker (paper: future() blocks until
+        a worker frees up)."""
+        with self._pool_cv:
+            while True:
+                while self._idle:
+                    w = self._idle.pop()
+                    if w.sock is not None:
+                        return w
+                if not self._open:
+                    raise ChannelError("cluster backend is shut down")
+                if self._capacity <= 0:
+                    raise ChannelError(
+                        "no live cluster workers (all died and none were "
+                        "respawnable)")
+                self._pool_cv.wait(0.5)
+
+    def resize(self, workers: int) -> None:
+        """Elastic scaling: grow by spawning connect-back workers, shrink by
+        retiring idle ones (busy workers retire as they finish)."""
+        with self._pool_cv:
+            delta = workers - self._n
+            self._n = workers
+            if delta > 0:
+                self._capacity += delta
+            else:
+                self._shrink_debt += -delta
+            to_retire = []
+            while self._shrink_debt > 0 and self._idle:
+                to_retire.append(self._idle.pop())
+                self._shrink_debt -= 1
+        for _ in range(max(delta, 0)):
+            self._spawn_local()
+        for w in to_retire:
+            self._retire(w)
+        # Growth is best-effort: new workers join the idle pool as they
+        # connect, and submit() blocks until then. Deliberately NOT
+        # wait_for_workers() here — its timeout path tears down the whole
+        # backend, which would turn one slow replacement into total loss
+        # of the in-flight work.
+
+    def _retire(self, w: _SockWorker) -> None:
+        """Deliberately shed one worker (down-scale, not a fault)."""
+        w.retired = True
+        with self._pool_cv:
+            self._capacity -= 1
+        try:
+            if w.sock is not None:
+                send_frame(w.sock, ("stop",), w.send_lock)
+                w.sock.shutdown(socket.SHUT_RDWR)   # loop reaps it via EOF
+        except OSError:
+            pass
+
+    # -- select-driven driver loop -----------------------------------------
+
+    def _loop(self) -> None:
+        tick = max(0.05, min(self._hb_timeout / 4.0, 1.0)) \
+            if self._hb_timeout else 1.0
+        while True:
+            try:
+                events = self._sel.select(timeout=tick)
+                if not self._open:
+                    break
+                for key, _mask in events:
+                    data = key.data
+                    if data == "listen":
+                        self._accept()
+                    elif data == "wake":
+                        try:
+                            os.read(self._wake_r, 4096)
+                        except OSError:
+                            pass
+                    else:
+                        self._pump(data)
+                self._reap_and_check()
+            except Exception:                        # noqa: BLE001
+                # The driver thread is a singleton: an escaped exception
+                # here would wedge every pending future with no error.
+                # Report and keep multiplexing.
+                import traceback
+                traceback.print_exc()
+        self._cleanup()
+
+    def _accept(self) -> None:
+        try:
+            conn, addr = self._listener.accept()
+        except OSError:
+            return
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        w = _SockWorker(next(self._wid), conn, addr)
+        try:
+            send_frame(conn, ("init", self._nested_blob, self._session_seed,
+                              self._hb_interval), w.send_lock)
+        except OSError:
+            w.close()
+            return
+        self._sel.register(conn, selectors.EVENT_READ, w)
+        with self._pool_cv:
+            self._all.append(w)
+
+    def _pump(self, w: _SockWorker) -> None:
+        try:
+            frames = w.reader.feed()
+        except Exception as exc:                     # noqa: BLE001
+            # EOF/reset, truncated frame, or an undecodable pickle (e.g. a
+            # result type importable on the worker but not here): the
+            # channel is unusable either way — treat it as worker death.
+            self._on_dead(w, repr(exc))
+            return
+        w.last_seen = time.monotonic()
+        for frame in frames:
+            tag = frame[0]
+            if tag == "hello":
+                w.meta = frame[1]
+                with self._pool_cv:
+                    for proc in self._spawning:
+                        if proc.pid == w.meta.get("pid"):
+                            w.proc = proc
+                            self._spawning.remove(proc)
+                            break
+                    w.ready = True
+                    self._idle.append(w)
+                    self._pool_cv.notify_all()
+            elif tag == "hb":
+                pass                                  # last_seen updated above
+            elif tag == "progress":
+                h = w.busy
+                if h is not None:
+                    with h.ilock:
+                        h.immediate.append(frame[2])
+            elif tag == "result":
+                h = w.busy
+                if h is not None and frame[1] == h.task.task_id:
+                    if h.done.is_set():
+                        # soft-cancelled future (external worker): discard
+                        # the late result, worker rejoins the pool healthy
+                        w.busy = None
+                        with self._pool_cv:
+                            self._idle.append(w)
+                            self._pool_cv.notify_all()
+                    else:
+                        h.run = frame[2]
+                        self._finish(w, h)
+
+    def _finish(self, w: _SockWorker, h: _Handle) -> None:
+        w.busy = None
+        if h.cancelled:
+            # cancel() already began killing this worker; don't reuse it.
+            # Full death bookkeeping (busy already detached, so the handle
+            # keeps its result): removes it from the pool and self-heals,
+            # instead of leaking the slot.
+            self._on_dead(w, "worker killed by cancel()")
+        else:
+            with self._pool_cv:
+                if self._shrink_debt > 0:
+                    self._shrink_debt -= 1
+                    retire = True
+                else:
+                    self._idle.append(w)
+                    retire = False
+                self._pool_cv.notify_all()
+            if retire:
+                self._retire(w)
+        h.done.set()
+        self._notify_done()
+
+    def _retire_dead_worker(self, w: _SockWorker) -> None:
+        """Remove a worker without the death/self-heal bookkeeping."""
+        try:
+            if w.sock is not None:
+                self._sel.unregister(w.sock)
+        except (KeyError, ValueError, OSError):
+            pass
+        w.close()
+        if w.proc is not None:
+            try:
+                w.proc.kill()
+            except OSError:
+                pass
+
+    def _on_dead(self, w: _SockWorker, reason: str) -> None:
+        self._retire_dead_worker(w)
+        h, w.busy = w.busy, None
+        respawn = False
+        with self._pool_cv:
+            if w in self._idle:
+                self._idle.remove(w)
+            if w in self._all:
+                self._all.remove(w)
+            if self._open and not w.retired:
+                if w.proc is not None:
+                    respawn = True                   # self-heal, same capacity
+                elif w.ready:
+                    self._capacity -= 1              # external: shrink
+            self._pool_cv.notify_all()
+        if respawn:
+            self._spawn_local()
+        if h is not None and not h.done.is_set():
+            if h.cancelled:
+                h.error = FutureCancelledError(
+                    f"future {h.task.label!r} cancelled; {w.describe()} "
+                    f"was terminated", future_label=h.task.label, worker=w.wid)
+            else:
+                h.error = WorkerDiedError(
+                    f"{w.describe()} died while resolving future "
+                    f"{h.task.label or h.task.task_id!r}: {reason}",
+                    future_label=h.task.label, worker=w.wid)
+            h.done.set()
+            self._notify_done()
+
+    def _reap_and_check(self) -> None:
+        with self._pool_cv:
+            spawning = list(self._spawning)
+        for proc in spawning:
+            if proc.poll() is not None:      # died before ever saying hello
+                with self._pool_cv:
+                    if proc in self._spawning:
+                        self._spawning.remove(proc)
+                        self._capacity -= 1
+                        self._pool_cv.notify_all()
+        if not self._hb_timeout:
+            return
+        now = time.monotonic()
+        with self._pool_cv:
+            stale = [w for w in self._all
+                     if w.sock is not None and w.ready
+                     and now - w.last_seen > self._hb_timeout]
+        for w in stale:
+            self._on_dead(w, f"heartbeat timeout ({self._hb_timeout}s)")
+
+    # -- Backend API ---------------------------------------------------------
+
+    def submit(self, task: TaskSpec) -> _Handle:
+        handle = _Handle(task)
+        blob = task.shipped
+        assert blob is not None, "cluster backend requires a shipped fn"
+        worker = self._checkout()
+        worker.busy = handle
+        handle.worker = worker
+        try:
+            send_frame(worker.sock, ("task", task.task_id, blob),
+                       worker.send_lock)
+        except (OSError, AttributeError):
+            worker.busy = None
+            handle.error = WorkerDiedError(
+                f"{worker.describe()} died at dispatch of future "
+                f"{task.label or task.task_id!r}",
+                future_label=task.label, worker=worker.wid)
+            handle.done.set()
+            self._notify_done()
+        return handle
+
+    def poll(self, handle: _Handle) -> bool:
+        return handle.done.is_set()
+
+    def collect(self, handle: _Handle) -> CapturedRun:
+        handle.done.wait()
+        if handle.error is not None:
+            raise handle.error
+        assert handle.run is not None
+        return handle.run
+
+    def drain_immediate(self, handle: _Handle) -> list[ImmediateCondition]:
+        with handle.ilock:
+            out = handle.immediate[:]
+            handle.immediate.clear()
+        return out
+
+    def cancel(self, handle: _Handle) -> bool:
+        handle.cancelled = True
+        if handle.done.is_set():
+            return False
+        w = handle.worker
+        if w is not None:
+            if w.proc is not None:
+                # locally spawned: hard-cancel — kill the worker; the driver
+                # loop sees EOF, fails the handle with FutureCancelledError,
+                # and self-heals with a replacement.
+                try:
+                    w.proc.kill()
+                except OSError:
+                    pass
+                try:
+                    if w.sock is not None:
+                        w.sock.shutdown(socket.SHUT_RDWR)
+                except OSError:
+                    pass
+            else:
+                # externally launched: soft-cancel — killing it would
+                # permanently drain hand-launched capacity (nothing can
+                # respawn it). Fail the future now; the worker finishes its
+                # task, the late result is discarded, and it rejoins idle.
+                handle.error = FutureCancelledError(
+                    f"future {handle.task.label!r} cancelled "
+                    f"(soft: external {w.describe()} keeps running)",
+                    future_label=handle.task.label, worker=w.wid)
+                handle.done.set()
+                self._notify_done()
+        return True
+
+    def shutdown(self) -> None:
+        with self._pool_cv:
+            if not self._open and self._cleaned:
+                return
+            self._open = False
+            self._pool_cv.notify_all()
+        try:
+            os.write(self._wake_w, b"x")
+        except OSError:
+            pass
+        self._loop_thread.join(timeout=10)
+        self._cleanup()
+
+    def _cleanup(self) -> None:
+        with self._cleanup_lock:
+            if self._cleaned:
+                return
+            self._cleaned = True
+        with self._pool_cv:
+            workers = list(self._all)
+            self._all, self._idle = [], []
+            spawning, self._spawning = list(self._spawning), []
+        for w in workers:
+            try:
+                if w.sock is not None:
+                    send_frame(w.sock, ("stop",), w.send_lock)
+            except OSError:
+                pass
+            self._retire_dead_worker(w)
+            h, w.busy = w.busy, None
+            if h is not None and not h.done.is_set():
+                h.error = ChannelError(
+                    f"cluster backend shut down while future "
+                    f"{h.task.label!r} was in flight",
+                    future_label=h.task.label, worker=w.wid)
+                h.done.set()
+        self._notify_done()
+        for proc in spawning:
+            try:
+                proc.kill()
+            except OSError:
+                pass
+        for fd_obj in (self._listener,):
+            try:
+                fd_obj.close()
+            except OSError:
+                pass
+        for fd in (self._wake_r, self._wake_w):
+            try:
+                os.close(fd)
+            except OSError:
+                pass
+        try:
+            self._sel.close()
+        except (OSError, RuntimeError):
+            pass
+
+    @property
+    def workers(self) -> int:
+        return self._n
+
+    def worker_pids(self) -> list:
+        """PIDs of the currently-connected workers (diagnostics/tests)."""
+        with self._pool_cv:
+            return [w.meta.get("pid") for w in self._all
+                    if w.ready and w.sock is not None]

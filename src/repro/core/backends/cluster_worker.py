@@ -1,0 +1,124 @@
+"""Standalone TCP cluster worker.
+
+Run one of these on any machine with network reach to a ``ClusterBackend``
+driver::
+
+    python -m repro.core.backends.cluster_worker DRIVER_HOST:PORT
+
+This is the paper's ad-hoc ``makeClusterPSOCK`` topology: the driver listens,
+workers dial in, futures are shipped as pickled blobs and resolved remotely.
+The backend also spawns these locally (over 127.0.0.1) when given
+``workers=N`` — same code path, so single-host tests exercise the real
+multi-host transport. SSH bootstrap of remote workers is a ROADMAP item; for
+now you launch them by hand (or via your scheduler).
+
+Protocol (see transport.py): the driver sends ``init`` (nested plan stack,
+session seed, heartbeat interval) immediately on accept; the worker replies
+``hello`` and from then on pushes a heartbeat frame every interval from a
+side thread so the driver can tell a wedged/partitioned worker from a slow
+task. Tasks arrive as ``("task", id, blob)`` and are answered with
+``("progress", id, cond)`` streams and one ``("result", id, run)``.
+
+Tip for hand-launched workers: export ``OMP_NUM_THREADS=1`` (and friends)
+before launching several per machine — by the time this module runs, numeric
+libraries may already be imported.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import socket
+import threading
+
+from ..errors import ChannelError
+from .transport import recv_frame, send_frame
+
+
+def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
+    """Connect to the driver and resolve shipped futures until told to stop
+    or the connection drops (either way: exit, let the driver self-heal)."""
+    os.environ.setdefault("OMP_NUM_THREADS", "1")
+    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+    sock = socket.create_connection((host, port), timeout=connect_timeout)
+    sock.settimeout(None)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    send_lock = threading.Lock()
+
+    msg = recv_frame(sock)
+    if not msg or msg[0] != "init":
+        raise ChannelError(f"expected init frame from driver, got {msg!r}")
+    _, nested_blob, session_seed, hb_interval = msg
+
+    stop = threading.Event()
+    if hb_interval:
+        def _beat():
+            while not stop.wait(hb_interval):
+                try:
+                    send_frame(sock, ("hb",), send_lock)
+                except OSError:
+                    return
+        threading.Thread(target=_beat, name="cluster-hb", daemon=True).start()
+
+    from .. import planning as plan_mod
+    from .. import rng as rng_mod
+
+    # Workers see the *popped* plan stack (nested-parallelism protection)
+    # and the driver's session seed (RNG-stream invariance across backends).
+    plan_mod._TLS.stack = tuple(pickle.loads(nested_blob))
+    rng_mod.set_session_seed(session_seed)
+
+    send_frame(sock, ("hello", {"pid": os.getpid(),
+                                "host": socket.gethostname()}), send_lock)
+
+    from .worker import execute_shipped
+
+    try:
+        while True:
+            try:
+                msg = recv_frame(sock)
+            except (EOFError, ChannelError, OSError):
+                return
+            if msg[0] == "stop":
+                return
+            if msg[0] != "task":
+                continue
+            _, task_id, blob = msg
+
+            def emit(cond, _tid=task_id):
+                try:
+                    send_frame(sock, ("progress", _tid, cond), send_lock)
+                except OSError:
+                    pass
+
+            run = execute_shipped(blob, emit)
+            try:
+                send_frame(sock, ("result", task_id, run), send_lock)
+            except OSError:
+                return
+    finally:
+        stop.set()
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="repro cluster worker: connect to a ClusterBackend "
+                    "driver and resolve futures over TCP")
+    ap.add_argument("address", help="driver HOST:PORT to connect to")
+    ap.add_argument("--connect-timeout", type=float, default=30.0)
+    args = ap.parse_args(argv)
+    host, _, port = args.address.rpartition(":")
+    if not port.isdigit():
+        ap.error(f"address must be HOST:PORT, got {args.address!r}")
+    run_worker(host or "127.0.0.1", int(port),
+               connect_timeout=args.connect_timeout)
+
+
+if __name__ == "__main__":
+    main()

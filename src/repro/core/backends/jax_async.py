@@ -56,3 +56,29 @@ class JaxAsyncBackend(Backend):
             for leaf in _leaves(handle.value):
                 leaf.block_until_ready()
         return handle
+
+    def wait(self, handles, timeout=None):
+        # Python-level work already ran at submit; only device computation
+        # is outstanding. Untimed wait blocks on collect() of the first
+        # handle (device errors stay inside collect(), surfacing at value()
+        # like every other backend). XLA exposes no *timed* multi-wait, so a
+        # finite timeout falls back to a bounded device-readiness poll —
+        # confined here so multi-backend wait_any() slices stay bounded.
+        import time
+        handles = list(handles)
+        ready = [h for h in handles if self.poll(h)]
+        if ready or not handles or timeout == 0:
+            return ready
+        if timeout is None:
+            try:
+                self.collect(handles[0])
+            except Exception:               # noqa: BLE001 — errored == resolved
+                pass
+            return [h for h in handles if self.poll(h)]
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            ready = [h for h in handles if self.poll(h)]
+            if ready:
+                return ready
+            time.sleep(min(0.001, max(0.0, deadline - time.monotonic())))
+        return [h for h in handles if self.poll(h)]

@@ -1,10 +1,11 @@
-"""plan(processes) / plan(cluster): resolve futures on worker processes.
+"""plan(processes): resolve futures on local worker processes.
 
-The analogue of the paper's ``multisession`` / PSOCK ``cluster`` backends: a
-pool of background interpreter processes, functions + snapshotted globals
-shipped over pipes (serialization — the paper's §Known limitations apply:
-non-picklable globals raise NonExportableObjectError *at creation*, not at
-some far-away crash on the worker).
+The analogue of the paper's ``multisession`` backend: a pool of background
+interpreter processes, functions + snapshotted globals shipped over pipes
+(serialization — the paper's §Known limitations apply: non-picklable globals
+raise NonExportableObjectError *at creation*, not at some far-away crash on
+the worker). The multi-host PSOCK ``cluster`` analogue lives in
+``cluster.py`` and speaks the same shipped-blob protocol over TCP sockets.
 
 This backend is the substrate for fault tolerance:
 
@@ -29,7 +30,7 @@ from ..conditions import CapturedRun, ImmediateCondition
 from ..errors import WorkerDiedError
 from ..globals_capture import ship_function
 from .. import planning as plan_mod
-from .base import Backend, TaskSpec, register_backend
+from .base import Backend, EventWaitMixin, TaskSpec, register_backend
 
 
 class _Worker:
@@ -79,7 +80,7 @@ class _Handle:
 
 
 @register_backend("processes")
-class ProcessBackend(Backend):
+class ProcessBackend(EventWaitMixin, Backend):
     """Pool of persistent worker processes with fault detection/restart."""
 
     supports_immediate = True
@@ -95,6 +96,7 @@ class ProcessBackend(Backend):
         self._session_seed = rng_mod._session_seed
         self._wid = itertools.count()
         self._lock = threading.Lock()
+        self._init_wait()
         # start all workers first, then handshake (parallel startup)
         self._idle: list[_Worker] = [self._spawn(defer=True)
                                      for _ in range(self._n)]
@@ -198,6 +200,7 @@ class ProcessBackend(Backend):
                 self._checkin(worker, healthy and not handle.cancelled)
         finally:
             handle.done.set()
+            self._notify_done()
             self._slots.release()
 
     def poll(self, handle: _Handle) -> bool:
@@ -239,13 +242,3 @@ class ProcessBackend(Backend):
     @property
     def workers(self) -> int:
         return self._n
-
-
-@register_backend("cluster")
-class ClusterBackend(ProcessBackend):
-    """Multi-node flavour: identical protocol, one worker per 'node' (pod).
-
-    On real deployments the Pipe transport is replaced by the launcher's
-    gRPC/TCP channels; the Future API above it is unchanged — that is the
-    paper's point. ``workers`` here is the number of pods.
-    """

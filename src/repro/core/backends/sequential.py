@@ -33,3 +33,7 @@ class SequentialBackend(Backend):
 
     def collect(self, handle: CapturedRun) -> CapturedRun:
         return handle
+
+    def wait(self, handles, timeout=None):
+        # Everything resolved eagerly at submit: wait() is immediate.
+        return list(handles)

@@ -20,7 +20,7 @@ from ..conditions import CapturedRun, ImmediateCondition, capture_run
 from ..errors import FutureCancelledError
 from .. import planning as plan_mod
 from ..rng import rng_scope
-from .base import Backend, TaskSpec, register_backend
+from .base import Backend, EventWaitMixin, TaskSpec, register_backend
 
 
 class _Handle:
@@ -33,7 +33,7 @@ class _Handle:
 
 
 @register_backend("threads")
-class ThreadBackend(Backend):
+class ThreadBackend(EventWaitMixin, Backend):
     supports_immediate = True
 
     def __init__(self, workers: int | None = None):
@@ -41,6 +41,7 @@ class ThreadBackend(Backend):
         self._n = int(workers) if workers else available_cores()
         self._slots = threading.Semaphore(self._n)
         self._nested = plan_mod.nested_stack()
+        self._init_wait()
         self._open = True
 
     def submit(self, task: TaskSpec) -> _Handle:
@@ -70,6 +71,7 @@ class ThreadBackend(Backend):
             handle.run = run
         finally:
             handle.done.set()
+            self._notify_done()
             self._slots.release()
 
     def poll(self, handle: _Handle) -> bool:

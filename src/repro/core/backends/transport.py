@@ -1,0 +1,111 @@
+"""Length-prefixed pickle framing over sockets (the cluster wire protocol).
+
+Frame layout: 8-byte big-endian unsigned length, then a pickle of a tuple
+``(tag, *payload)``. Tags in use:
+
+  worker -> driver : ("hello", meta)       handshake; meta = {"pid", "host"}
+                     ("hb",)               heartbeat (liveness only)
+                     ("progress", task_id, cond)    live ImmediateCondition
+                     ("result", task_id, run)       CapturedRun (sanitized)
+  driver -> worker : ("init", nested_blob, session_seed, hb_interval_s)
+                     ("task", task_id, blob)        shipped function payload
+                     ("stop",)
+
+Two read paths:
+
+* :func:`recv_frame` — blocking; used by the worker main loop, which only
+  ever waits on one socket.
+* :class:`FrameReader` — incremental; used by the driver's select loop. One
+  ``recv()`` per readiness event (guaranteed not to block after ``select``
+  reports the socket readable), returning however many complete frames the
+  buffer now holds.
+
+Connection loss maps to ``EOFError`` (clean close between frames) or
+:class:`ChannelError` (close mid-frame); the driver translates either into
+``WorkerDiedError`` for the future that was resolving there.
+"""
+
+from __future__ import annotations
+
+import pickle
+import struct
+import threading
+from typing import Any
+
+from ..errors import ChannelError
+
+_LEN = struct.Struct("!Q")
+_CHUNK = 1 << 20
+#: sanity bound against a corrupted length prefix (1 TiB)
+MAX_FRAME = 1 << 40
+
+
+def encode_frame(obj: Any) -> bytes:
+    blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    return _LEN.pack(len(blob)) + blob
+
+
+def send_frame(sock, obj: Any, lock: "threading.Lock | None" = None) -> None:
+    """Serialize and send one frame; ``lock`` serializes concurrent senders
+    (e.g. a worker's heartbeat thread vs its result path)."""
+    data = encode_frame(obj)
+    if lock is None:
+        sock.sendall(data)
+    else:
+        with lock:
+            sock.sendall(data)
+
+
+def _recv_exact(sock, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(min(n - len(buf), _CHUNK))
+        if not chunk:
+            if buf:
+                raise ChannelError(
+                    f"connection closed mid-frame ({len(buf)}/{n} bytes)")
+            raise EOFError("connection closed")
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_frame(sock) -> Any:
+    """Blocking read of exactly one frame."""
+    (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    if n > MAX_FRAME:
+        raise ChannelError(f"oversized frame: {n} bytes")
+    return pickle.loads(_recv_exact(sock, n))
+
+
+class FrameReader:
+    """Select-driven incremental frame parser for one socket."""
+
+    def __init__(self, sock):
+        self._sock = sock
+        self._buf = bytearray()
+
+    def feed(self) -> list:
+        """Do one ``recv()`` and return every complete frame now buffered.
+
+        Raises ``EOFError`` on clean close, :class:`ChannelError` if the peer
+        closed with a partial frame buffered (truncated frame).
+        """
+        chunk = self._sock.recv(_CHUNK)
+        if not chunk:
+            if self._buf:
+                raise ChannelError(
+                    f"connection closed mid-frame "
+                    f"({len(self._buf)} buffered bytes)")
+            raise EOFError("connection closed")
+        self._buf += chunk
+        frames = []
+        while len(self._buf) >= _LEN.size:
+            (n,) = _LEN.unpack(self._buf[:_LEN.size])
+            if n > MAX_FRAME:
+                raise ChannelError(f"oversized frame: {n} bytes")
+            end = _LEN.size + n
+            if len(self._buf) < end:
+                break
+            frames.append(pickle.loads(bytes(self._buf[_LEN.size:end])))
+            del self._buf[:end]
+        return frames

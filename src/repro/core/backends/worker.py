@@ -41,6 +41,26 @@ def _sanitize_run(run) -> Any:
     return run
 
 
+def execute_shipped(blob: bytes, emit) -> Any:
+    """Resolve one shipped task blob: unship the function, evaluate under
+    capture_run, sanitize for the trip home. Shared by the pipe (processes)
+    and socket (cluster) workers so relay/error behaviour is identical."""
+    from ..conditions import capture_run
+    from ..globals_capture import unship_function
+    from ..rng import rng_scope
+
+    payload = pickle.loads(blob)
+    fn = unship_function(payload["fn"])
+    with rng_scope(payload["seed_declared"]):
+        run = capture_run(
+            lambda: fn(*payload["args"], **payload["kwargs"]),
+            capture_stdout=payload["capture_stdout"],
+            capture_conditions=payload["capture_conditions"],
+            immediate_emit=emit,
+        )
+    return _sanitize_run(run)
+
+
 def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
     """Entry point of a spawned worker process."""
     # Workers must see a *popped* plan stack (nested-parallelism protection)
@@ -48,11 +68,8 @@ def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
     os.environ.setdefault("OMP_NUM_THREADS", "1")
     os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
 
-    from ..conditions import capture_run
-    from ..globals_capture import unship_function
     from .. import planning as plan_mod
     from .. import rng as rng_mod
-    from ..rng import rng_scope
 
     nested = pickle.loads(nested_stack_blob)
     plan_mod._TLS.stack = tuple(nested)         # worker-local plan stack
@@ -67,10 +84,6 @@ def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
         if msg[0] == "stop":
             return
         _, task_id, blob = msg
-        payload = pickle.loads(blob)
-        fn = unship_function(payload["fn"])
-        args = payload["args"]
-        kwargs = payload["kwargs"]
 
         def emit(cond, _tid=task_id):
             try:
@@ -78,14 +91,7 @@ def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
             except (OSError, ValueError):
                 pass
 
-        with rng_scope(payload["seed_declared"]):
-            run = capture_run(
-                lambda: fn(*args, **kwargs),
-                capture_stdout=payload["capture_stdout"],
-                capture_conditions=payload["capture_conditions"],
-                immediate_emit=emit,
-            )
-        run = _sanitize_run(run)
+        run = execute_shipped(blob, emit)
         try:
             conn.send(("result", task_id, run))
         except (OSError, ValueError):

@@ -18,6 +18,11 @@ Semantics reproduced from the paper:
   into a single chunked future (the paper's §Future-work load balancing);
 * **seed** — ``seed=True`` gives the body a deterministic per-future RNG
   stream key, invariant to the backend and worker count.
+
+Collection is **event-driven**: :func:`resolve` blocks until a set of
+futures is resolved and :func:`as_completed` yields them in completion
+order, both built on ``Backend.wait()`` (socket select / condition
+variables) rather than sleep-polling ``resolved()``.
 """
 
 from __future__ import annotations
@@ -25,7 +30,8 @@ from __future__ import annotations
 import inspect
 import itertools
 import threading
-from typing import Any, Callable, Iterable, Sequence
+import time
+from typing import Any, Callable, Iterable, Iterator, Sequence
 
 from . import planning as plan_mod
 from .backends.base import Backend, TaskSpec
@@ -233,6 +239,100 @@ def value(f: "Future | Sequence | dict") -> Any:
     return f
 
 
+def _flatten_futures(fs) -> list[Future]:
+    if isinstance(fs, Future):
+        return [fs]
+    if isinstance(fs, dict):
+        fs = fs.values()
+    out = []
+    for f in fs:
+        if isinstance(f, Future):
+            out.append(f)
+    return out
+
+
+def wait_any(fs: Sequence[Future], timeout: "float | None" = None
+             ) -> list[Future]:
+    """Block until at least one of ``fs`` is resolved (launching lazy
+    futures); return the resolved subset — empty only if ``timeout`` elapsed.
+
+    This is the event-driven kernel under :func:`resolve`,
+    :func:`as_completed`, ``future_map`` and the multi-pod launcher: futures
+    are grouped by backend and handed to ``Backend.wait()``, so the caller
+    sleeps on a socket select / condition variable instead of poll-looping.
+    Futures spread over *several* backends are waited on round-robin in
+    bounded slices (still no busy-sleep: each slice blocks in the backend).
+    """
+    fs = list(fs)
+    ready = [f for f in fs if f.resolved()]
+    if ready or not fs:
+        return ready
+    groups: "dict[int, tuple[Backend, list[Future]]]" = {}
+    for f in fs:
+        groups.setdefault(id(f._backend), (f._backend, []))[1].append(f)
+    if len(groups) == 1:
+        backend, group = next(iter(groups.values()))
+        backend.wait([f._handle for f in group], timeout=timeout)
+        return [f for f in fs if f.resolved()]
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while True:
+        for backend, group in groups.values():
+            slice_t = 0.05
+            if deadline is not None:
+                slice_t = min(slice_t, max(0.0, deadline - time.monotonic()))
+            backend.wait([f._handle for f in group], timeout=slice_t)
+            ready = [f for f in fs if f.resolved()]
+            if ready:
+                return ready
+            if deadline is not None and time.monotonic() >= deadline:
+                return []
+
+
+def resolve(fs, timeout: "float | None" = None):
+    """Block until every future in ``fs`` is resolved (R's ``resolve()``).
+
+    Accepts a single future, an iterable, or a dict of futures; lazy futures
+    are launched. Values are *not* collected and nothing is relayed — use
+    ``value()`` for that. With ``timeout=``, returns once the deadline
+    passes even if some futures are still pending. Returns ``fs``.
+    """
+    pending = _flatten_futures(fs)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while True:
+        pending = [f for f in pending if not f.resolved()]
+        if not pending:
+            return fs
+        remaining = None
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return fs
+        wait_any(pending, timeout=remaining)
+
+
+def as_completed(fs, timeout: "float | None" = None) -> Iterator[Future]:
+    """Yield futures from ``fs`` in completion order (the
+    ``concurrent.futures.as_completed`` analogue, built on
+    ``Backend.wait()``). Raises ``TimeoutError`` if ``timeout`` elapses with
+    futures still pending."""
+    pending = _flatten_futures(fs)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while pending:
+        ready = [f for f in pending if f.resolved()]
+        if not ready:
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"{len(pending)} futures unresolved after {timeout}s")
+            wait_any(pending, timeout=remaining)
+            continue
+        for f in ready:
+            pending.remove(f)
+            yield f
+
+
 def merge(futures: Sequence[Future], *, label: str | None = None) -> Future:
     """Merge *lazy* futures into one future resolving them sequentially in a
     single task (paper §Future work): the chunking primitive that the
@@ -257,4 +357,5 @@ def merge(futures: Sequence[Future], *, label: str | None = None) -> Future:
     return merged
 
 
-__all__ = ["Future", "future", "value", "resolved", "merge", "FutureError"]
+__all__ = ["Future", "future", "value", "resolved", "resolve",
+           "as_completed", "wait_any", "merge", "FutureError"]

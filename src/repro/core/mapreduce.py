@@ -22,7 +22,7 @@ from typing import Any, Callable, Iterable, Sequence
 
 from . import planning as plan_mod
 from .errors import FutureError
-from .future import Future, future, merge, value
+from .future import Future, future, merge, value, wait_any
 from . import rng as rng_mod
 
 
@@ -88,31 +88,28 @@ def future_map(fn: Callable, xs: Sequence, *,
     attempts = {id(f): 0 for f in fs}
     # as-completed collection (paper: collect resolved futures first to free
     # workers / lower relay latency), with FutureError-driven re-dispatch.
+    # Blocks on Backend.wait() between completions — no sleep-polling.
     while pending:
-        progressed = False
-        for key in list(pending):
-            f, idx = pending[key]
-            if not f.resolved():
-                continue
-            progressed = True
-            del pending[key]
+        ready = [key for key, (f, _) in pending.items() if f.resolved()]
+        if not ready:
+            wait_any([f for f, _ in pending.values()])
+            continue
+        for key in ready:
+            f, idx = pending.pop(key)
             try:
                 vals = f.value()
             except FutureError:
                 if attempts[key] >= retries:
                     raise
-                attempts[key] += 1
                 items = [xs[i] for i in idx]
                 nf = future(run_chunk, idx, items,
                             seed=seed if seed_declared else None,
                             label=f"{label or 'map'}-retry")
                 pending[id(nf)] = (nf, idx)
-                attempts[id(nf)] = attempts[key]
+                attempts[id(nf)] = attempts[key] + 1
                 continue
             for i, v in zip(idx, vals):
                 results[i] = v
-        if pending and not progressed:
-            time.sleep(0.001)
     return results
 
 
@@ -133,13 +130,13 @@ def future_either(*thunks: Callable, label: str | None = None) -> Any:
     fs = [future(t, label=f"{label or 'either'}[{i}]")
           for i, t in enumerate(thunks)]
     while True:
-        for f in fs:
-            if f.resolved():
-                for other in fs:
-                    if other is not f:
-                        other.cancel()
-                return f.value()
-        time.sleep(0.001)
+        done = wait_any(fs)           # event wait: first resolution wakes us
+        if done:
+            f = done[0]
+            for other in fs:
+                if other is not f:
+                    other.cancel()
+            return f.value()
 
 
 def retry(fn: Callable, *, times: int = 3, backoff_s: float = 0.0,

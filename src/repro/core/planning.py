@@ -11,6 +11,14 @@ runs at most 2×3 tasks: the first level resolves on the cluster backend and
 every worker receives the *popped* stack (``threads`` level), any deeper
 nesting defaulting to ``sequential`` — the paper's built-in protection
 against N² oversubscription.
+
+Backend kwargs are passed through ``spec()`` to the backend constructor.
+Notable ones for the TCP ``cluster`` backend: ``workers=N`` (spawn N local
+connect-back workers), ``hosts=N`` or ``hosts=("a", "b")`` (wait for that
+many externally-launched ``cluster_worker`` processes instead),
+``bind=``/``port=`` (listener address), ``connect_timeout=``, and
+``heartbeat_interval=``/``heartbeat_timeout=`` (liveness detection) — see
+``backends/cluster.py``.
 """
 
 from __future__ import annotations

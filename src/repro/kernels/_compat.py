@@ -1,0 +1,11 @@
+"""Pallas-TPU API compatibility.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+releases; resolve whichever this installation provides so the kernels run on
+both sides of the rename.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

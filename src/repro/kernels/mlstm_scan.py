@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import _compat
+
 
 def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
                   c_scr, n_scr, m_scr, *, cs: int, d: int):
@@ -120,7 +122,7 @@ def mlstm_scan(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((1, d), jnp.float32),     # normalizer n
             pltpu.VMEM((1, 1), jnp.float32),     # running max m
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, i_raw, f_raw)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import _compat
+
 
 def _rglru_kernel(a_ref, xs_ref, h0_ref, y_ref, h_scr, *,
                   cs: int):
@@ -76,7 +78,7 @@ def rglru_scan(x: jax.Array, a_gate: jax.Array, i_gate: jax.Array,
         out_specs=pl.BlockSpec((1, cs, bw), lambda ib, iw, isq: (ib, isq, iw)),
         out_shape=jax.ShapeDtypeStruct((b, s, w), x.dtype),
         scratch_shapes=[pltpu.VMEM((1, bw), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, xs, h0[:, None, :])

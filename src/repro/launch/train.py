@@ -8,7 +8,9 @@ that replaces a per-step gradient all-reduce with one delta exchange per
 round, matching slow inter-pod links), then returns its parameter delta.
 
 The driver:
-  * collects pod futures as they resolve (``resolved()`` polling);
+  * collects pod futures as they resolve, blocking on the backend's
+    event-driven ``wait_any()`` (socket select under the cluster backend)
+    instead of polling ``resolved()`` in a sleep loop;
   * re-dispatches on FutureError (node failure -> restart; the pod pool
     self-heals underneath);
   * optionally races a speculative duplicate of the slowest pod
@@ -32,7 +34,7 @@ from typing import Any
 
 import numpy as np
 
-from ..core import (FutureError, future, plan, resolved, value)
+from ..core import (FutureError, future, plan, resolved, value, wait_any)
 from ..optim.compression import ErrorFeedback, dequantize_tree, quantize_tree
 
 
@@ -198,8 +200,18 @@ class MultiPodDriver:
                         cands.append(self._dispatch(pod, rnd,
                                                     speculative=True))
                 speculated = True
-            if not progress:
-                time.sleep(0.005)
+            if not progress and len(results) < c.pods:
+                # Event wait on every outstanding candidate. Before the
+                # speculation deadline, cap the wait so the straggler check
+                # above still fires on time; after it, block until a pod
+                # actually resolves.
+                outstanding = [f for pod, cands in fs.items()
+                               if pod not in results for f in cands]
+                timeout = None
+                if c.straggler_timeout_s and not speculated:
+                    timeout = max(0.0, c.straggler_timeout_s
+                                  - (time.time() - t0))
+                wait_any(outstanding, timeout=timeout)
 
         # -- compressed delta averaging (int8 + EF), then outer Nesterov --
         deltas = []

@@ -1,0 +1,101 @@
+"""Import-or-shim for hypothesis, so tier-1 collection never breaks.
+
+When hypothesis is installed (``pip install -r requirements-dev.txt``) the
+real library is used and the full property sweeps run. Where it is not
+available, a minimal deterministic fallback keeps the suite collecting and
+running: ``@given`` draws a small number of pseudo-random samples from the
+declared strategies with a fixed seed — a smoke-level sweep, not a
+replacement for hypothesis's shrinking/coverage.
+
+Usage in test modules::
+
+    from _hypothesis_shim import given, settings, st
+
+The shim caps examples at ``REPRO_SHIM_EXAMPLES`` (default 3) regardless of
+``max_examples`` to keep the fallback suite fast; real hypothesis honours
+the declared counts.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import os
+    import random
+
+    _SEED = 0xC0FFEE
+    _CAP = int(os.environ.get("REPRO_SHIM_EXAMPLES", "3"))
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class _DataObject:
+        """Stand-in for hypothesis's ``data()`` draw handle."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.draw(self._rng)
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elements.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+        @staticmethod
+        def data():
+            return _Strategy(lambda rng: _DataObject(rng))
+
+    st = _St()
+
+    def settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def run(*args, **kwargs):
+                declared = getattr(run, "_shim_max_examples",
+                                   getattr(fn, "_shim_max_examples", 10))
+                rng = random.Random(_SEED)
+                for _ in range(min(declared, _CAP)):
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+            # deliberately NOT functools.wraps: copying __wrapped__ would
+            # make pytest see the original signature and demand the strategy
+            # parameters as fixtures.
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return deco

@@ -1,0 +1,238 @@
+"""TCP cluster transport: framing, handshake, heartbeats, death, self-heal,
+and the event-driven ``resolve()`` / ``as_completed()`` semantics.
+
+This extends the ``test_faults.py`` scenarios (which run over the
+multiprocessing-pipe ``processes`` backend) to the real socket transport:
+kill a TCP worker mid-task and the future must fail with
+``WorkerDiedError`` while the pool self-heals underneath.
+"""
+
+import os
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+import pytest
+
+import repro.core as rc
+from repro.core import as_completed, future, future_map, resolve, value
+from repro.core.backends import transport
+from repro.core.backends.cluster import ClusterBackend
+from repro.core.errors import ChannelError
+
+
+@pytest.fixture
+def cluster():
+    rc.plan("cluster", workers=2)
+    yield rc.active_backend()
+    rc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# framing
+# --------------------------------------------------------------------------
+
+def test_framing_roundtrip():
+    a, b = socket.socketpair()
+    frames = [("hello", {"pid": 1, "host": "x"}),
+              ("task", 7, b"\x00" * 100_000),
+              ("hb",)]
+    for f in frames:
+        transport.send_frame(a, f)
+    assert [transport.recv_frame(b) for _ in frames] == frames
+    a.close()
+    b.close()
+
+
+def test_frame_reader_reassembles_partial_delivery():
+    a, b = socket.socketpair()
+    blob = transport.encode_frame(("task", 1, b"y" * 5000))
+    reader = transport.FrameReader(b)
+    out = []
+    for i in range(0, len(blob), 997):         # drip-feed odd-sized chunks
+        a.sendall(blob[i:i + 997])
+        out += reader.feed()
+    assert out == [("task", 1, b"y" * 5000)]
+    a.close()
+    b.close()
+
+
+def test_truncated_frame_is_channel_error():
+    a, b = socket.socketpair()
+    blob = transport.encode_frame(("result", 1, "x"))
+    a.sendall(blob[:-2])
+    a.close()
+    reader = transport.FrameReader(b)
+    with pytest.raises(ChannelError):
+        while True:
+            reader.feed()
+    b.close()
+
+
+def test_clean_close_is_eof():
+    a, b = socket.socketpair()
+    a.close()
+    with pytest.raises(EOFError):
+        transport.FrameReader(b).feed()
+    b.close()
+
+
+# --------------------------------------------------------------------------
+# handshake / topology
+# --------------------------------------------------------------------------
+
+def test_workers_are_remote_processes_over_tcp(cluster):
+    """The backend is a real socket cluster, not a processes alias."""
+    from repro.core.backends.processes import ProcessBackend
+    assert not isinstance(cluster, ProcessBackend)
+    host, port = cluster.address
+    assert port > 0
+    pids = cluster.worker_pids()
+    assert len(pids) == 2
+    assert os.getpid() not in pids
+    assert value(future(lambda: os.getpid())) in pids
+
+
+def test_standalone_worker_connects_and_resolves():
+    """`python -m repro.core.backends.cluster_worker HOST:PORT` — the
+    multi-host path: the driver waits, the worker dials in."""
+    backend = ClusterBackend(hosts=1, connect_timeout=120)
+    proc = None
+    try:
+        host, port = backend.address
+        src_root = os.path.join(os.path.dirname(__file__), "..", "src")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.abspath(src_root)
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.core.backends.cluster_worker",
+             f"{host}:{port}"], env=env)
+        backend.wait_for_workers()
+        pid = value(future(lambda: os.getpid(), backend=backend))
+        assert pid == proc.pid
+    finally:
+        backend.shutdown()
+        if proc is not None:
+            proc.wait(timeout=30)
+            assert proc.returncode == 0     # stop frame -> clean exit
+
+
+# --------------------------------------------------------------------------
+# death detection + self-heal (test_faults.py over sockets)
+# --------------------------------------------------------------------------
+
+def test_tcp_worker_kill_is_worker_died_error(cluster):
+    with pytest.raises(rc.WorkerDiedError):
+        value(future(lambda: os._exit(31)))
+
+
+def test_pool_self_heals_after_tcp_death(cluster):
+    with pytest.raises(rc.WorkerDiedError):
+        value(future(lambda: os._exit(31)))
+    assert future_map(lambda x: x + 1, [1, 2, 3, 4]) == [2, 3, 4, 5]
+
+
+def test_sigkill_mid_task(cluster):
+    f = future(lambda: time.sleep(60))
+    victim = None
+    deadline = time.time() + 10
+    while victim is None and time.time() < deadline:
+        busy = [w for w in cluster._all if w.busy is not None]
+        if busy:
+            victim = busy[0].meta.get("pid")
+    assert victim is not None
+    os.kill(victim, signal.SIGKILL)
+    with pytest.raises(rc.WorkerDiedError):
+        value(f)
+    assert value(future(lambda: "healed")) == "healed"
+
+
+def test_heartbeat_timeout_detects_frozen_worker():
+    """A worker that stops heartbeating (SIGSTOP: alive socket, wedged
+    process) is declared dead within heartbeat_timeout, not task-duration."""
+    backend = ClusterBackend(workers=1, heartbeat_interval=0.1,
+                             heartbeat_timeout=1.0)
+    pid = None
+    try:
+        f = future(lambda: time.sleep(60), backend=backend)
+        pid = backend.worker_pids()[0]
+        os.kill(pid, signal.SIGSTOP)
+        t0 = time.time()
+        with pytest.raises(rc.WorkerDiedError, match="heartbeat"):
+            value(f)
+        assert time.time() - t0 < 10.0
+    finally:
+        if pid is not None:
+            try:
+                os.kill(pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+        backend.shutdown()
+
+
+def test_cancel_kills_and_heals(cluster):
+    f = future(lambda: time.sleep(60))
+    time.sleep(0.2)
+    assert f.cancel()
+    with pytest.raises(rc.FutureError):
+        value(f)
+    assert value(future(lambda: 1)) == 1
+
+
+# --------------------------------------------------------------------------
+# resolve() / as_completed() semantics
+# --------------------------------------------------------------------------
+
+def test_as_completed_yields_in_completion_order(cluster):
+    fs = [future(lambda s=s: (time.sleep(s), s)[1]) for s in (0.6, 0.05)]
+    assert [value(f) for f in as_completed(fs)] == [0.05, 0.6]
+
+
+def test_as_completed_threads_order():
+    rc.plan("threads", workers=3)
+    fs = [future(lambda s=s: (time.sleep(s), s)[1])
+          for s in (0.3, 0.02, 0.12)]
+    assert [value(f) for f in as_completed(fs)] == [0.02, 0.12, 0.3]
+
+
+def test_resolve_blocks_until_all(cluster):
+    fs = [future(lambda s=s: time.sleep(s)) for s in (0.05, 0.25)]
+    out = resolve(fs)
+    assert out is fs
+    assert all(f.resolved() for f in fs)
+
+
+def test_resolve_timeout_returns_early():
+    rc.plan("threads", workers=2)
+    f = future(lambda: time.sleep(5.0))
+    t0 = time.time()
+    resolve([f], timeout=0.1)
+    assert time.time() - t0 < 2.0
+    assert not f.resolved()
+
+
+def test_as_completed_timeout_raises():
+    rc.plan("threads", workers=2)
+    f = future(lambda: time.sleep(5.0))
+    with pytest.raises(TimeoutError):
+        list(as_completed([f], timeout=0.1))
+
+
+def test_resolve_launches_lazy_futures():
+    fs = [future(lambda i=i: i * 2, lazy=True) for i in range(3)]
+    resolve(fs)
+    assert [value(f) for f in fs] == [0, 2, 4]
+
+
+def test_no_sleep_polling_in_collection_paths():
+    """The acceptance criterion, mechanically: no time.sleep-based polling
+    left in the future_map / future_either / resolve collection loops."""
+    import importlib
+    import inspect
+    future_mod = importlib.import_module("repro.core.future")
+    from repro.core import mapreduce
+    for fn in (mapreduce.future_map, mapreduce.future_either,
+               future_mod.resolve, future_mod.as_completed,
+               future_mod.wait_any):
+        assert "time.sleep" not in inspect.getsource(fn), fn.__name__

@@ -99,8 +99,21 @@ def test_nested_parallelism_protection(backend):
     assert name == "SequentialBackend"
 
 
-def test_worker_isolation_processes():
-    """Process-family backends really do run elsewhere."""
-    rc.plan("processes", workers=1)
+@pytest.mark.parametrize("name", ["processes", "cluster"])
+def test_worker_isolation(name):
+    """Process-family backends really do run elsewhere — including the TCP
+    cluster backend (workers are separate interpreters behind sockets)."""
+    rc.plan(name, workers=1)
     assert value(future(lambda: os.getpid())) != os.getpid()
+    rc.shutdown()
+
+
+def test_cluster_worker_death_self_heal_in_matrix():
+    """The conformance story includes fault behaviour: a dying TCP worker
+    surfaces as WorkerDiedError and the pool self-heals (same contract the
+    processes backend honours in test_faults.py)."""
+    rc.plan("cluster", workers=2)
+    with pytest.raises(rc.WorkerDiedError):
+        value(future(lambda: os._exit(41)))
+    assert future_map(lambda x: x * 10, [1, 2, 3]) == [10, 20, 30]
     rc.shutdown()

@@ -2,7 +2,7 @@
 
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 import repro.core as rc
 from repro.core import (future_map, future_map_chunked_lazy, future_lapply)

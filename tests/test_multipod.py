@@ -1,7 +1,8 @@
 """Multi-pod driver: convergence, node failure, stragglers, elasticity.
 
-These run the REAL driver (cluster backend = worker processes) on reduced
-configs — the CPU-scale simulation of the 1000-node story.
+These run the REAL driver — pods are worker processes attached to the TCP
+socket cluster backend — on reduced configs: the CPU-scale simulation of
+the 1000-node story, now over the same transport a real deployment uses.
 """
 
 import pytest
