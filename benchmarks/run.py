@@ -119,7 +119,11 @@ def bench_chunking(quick: bool = False) -> None:
 def bench_cluster_overhead(quick: bool = False) -> None:
     """Per-future overhead over the real TCP socket transport, vs the
     pipe-based processes backend (paper §Overhead, extended to the
-    makeClusterPSOCK analogue)."""
+    makeClusterPSOCK analogue), plus the wire-compression effect on
+    large frames (zlib at the transport layer, threshold ~64 KiB)."""
+    import pickle
+    from repro.core.backends import transport
+
     n = 8 if quick else 30
     rows = {}
     for name in ("processes", "cluster"):
@@ -132,8 +136,32 @@ def bench_cluster_overhead(quick: bool = False) -> None:
     rows["tcp_penalty_us"] = rows["cluster"] - rows["processes"]
     _row("overhead/cluster_vs_processes", rows["tcp_penalty_us"],
          "TCP framing + select loop vs mp.Pipe")
+
+    # wire compression: one frame shaped like a result carrying a parameter
+    # blob (structured float32 -> compressible, like real weight deltas)
+    blob = np.sin(np.arange(1 << (16 if quick else 18), dtype=np.float32))
+    frame_obj = ("result", 1, blob)
+    raw_len = len(pickle.dumps(frame_obj, pickle.HIGHEST_PROTOCOL))
+    wire_len = len(transport.encode_frame(frame_obj)) - transport._LEN.size - 1
+    us_encode = _timeit(lambda: transport.encode_frame(frame_obj),
+                        5 if quick else 20, warmup=1)
+    us_raw = _timeit(
+        lambda: pickle.dumps(frame_obj, pickle.HIGHEST_PROTOCOL),
+        5 if quick else 20, warmup=1)
+    ratio = raw_len / max(wire_len, 1)
+    _row("transport/compression", us_encode,
+         f"{raw_len}B -> {wire_len}B ({ratio:.2f}x) vs pickle-only "
+         f"{us_raw:.0f}us (zlib level {transport.COMPRESS_LEVEL}, "
+         f"threshold {transport.COMPRESS_THRESHOLD}B)")
+    rows_comp = {
+        "payload_bytes": raw_len, "wire_bytes": wire_len,
+        "ratio": ratio, "encode_us": us_encode, "pickle_only_us": us_raw,
+        "threshold_bytes": transport.COMPRESS_THRESHOLD,
+        "level": transport.COMPRESS_LEVEL,
+    }
     _CLUSTER_JSON["bench_cluster_overhead"] = {
-        "us_per_future": rows, "workers": 2, "n": n}
+        "us_per_future": rows, "workers": 2, "n": n,
+        "compression": rows_comp}
 
 
 def bench_wait_vs_poll(quick: bool = False) -> None:
@@ -166,6 +194,62 @@ def bench_wait_vs_poll(quick: bool = False) -> None:
     _CLUSTER_JSON["bench_wait_vs_poll"] = {
         "us_event_driven": us_wait, "us_sleep_poll": us_poll,
         "us_ideal": ideal_us, "n_futures": n_futs, "sleep_s": sleep_s}
+
+
+def bench_callback_latency(quick: bool = False) -> None:
+    """The continuation kernel's push latency (PR 2): (a) completion ->
+    ``add_done_callback`` fire on one backend; (b) cross-backend
+    ``wait_any`` wake-up (threads + cluster through one Waiter), which
+    replaced the retired 0.05s round-robin ``Backend.wait()`` slices."""
+    import threading
+
+    reps = 5 if quick else 15
+    sleep_s = 0.01
+
+    rc.plan("threads", workers=2)
+    lats = []
+    for _ in range(reps):
+        fired = threading.Event()
+        stamp = {}
+        f = rc.future(lambda: (time.sleep(sleep_s), time.perf_counter())[1])
+        f._backend.add_done_callback(
+            f._handle,
+            lambda h: (stamp.setdefault("t", time.perf_counter()),
+                       fired.set()))
+        fired.wait(10)
+        done_t = rc.value(f)             # perf_counter at body end
+        lats.append((stamp["t"] - done_t) * 1e6)
+    us_push = sum(lats) / len(lats)
+    _row("callback/push_latency", us_push,
+         f"body-end -> done-callback fire, threads backend, {reps} reps")
+    rc.shutdown()
+
+    from repro.core.backends.base import BACKEND_REGISTRY
+    tb = BACKEND_REGISTRY["threads"](workers=1)
+    cb = BACKEND_REGISTRY["cluster"](workers=1)
+    fast_s, slow_s = 0.05, 0.15
+    wakes = []
+    try:
+        for _ in range(3 if quick else 6):
+            slow = rc.future(lambda s=slow_s: time.sleep(s), backend=cb)
+            t0 = time.perf_counter()
+            fast = rc.future(lambda s=fast_s: time.sleep(s) or 1,
+                             backend=tb)
+            rc.wait_any([slow, fast])
+            wakes.append((time.perf_counter() - t0 - fast_s) * 1e6)
+            rc.value(slow)               # drain the cluster worker
+    finally:
+        cb.shutdown()
+        tb.shutdown()
+        rc.plan("sequential")
+    us_wake = sum(wakes) / len(wakes)
+    _row("callback/cross_backend_wake", us_wake,
+         "wait_any(threads+cluster) wake-up past the fast future's sleep "
+         "(retired round-robin slice: 50000us)")
+    _CLUSTER_JSON["bench_callback_latency"] = {
+        "us_push": us_push, "us_cross_backend_wake": us_wake,
+        "us_retired_round_robin_slice": 50_000.0, "sleep_s": sleep_s,
+        "reps": reps}
 
 
 def _write_cluster_artifact(quick: bool) -> None:
@@ -253,22 +337,32 @@ def bench_roofline(quick: bool = False) -> None:
 
 BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_chunking, bench_cluster_overhead, bench_wait_vs_poll,
-           bench_compression, bench_kernels, bench_roofline]
+           bench_callback_latency, bench_compression, bench_kernels,
+           bench_roofline]
+
+#: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
+#: exactly these, so CI can re-emit the perf-trajectory artifact cheaply
+CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
+                   bench_callback_latency]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--cluster", action="store_true",
+                    help="run only the cluster/wait/callback benches and "
+                         "re-emit BENCH_cluster.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for bench in BENCHES:
+    benches = CLUSTER_BENCHES if args.cluster else BENCHES
+    for bench in benches:
         if args.only and args.only not in bench.__name__:
             continue
         bench(quick=args.quick)
     if not args.only:
-        # only full runs update the tracked perf-trajectory artifact —
-        # a filtered run would silently clobber it with partial data
+        # only unfiltered runs update the tracked perf-trajectory artifact —
+        # an --only run would silently clobber it with partial data
         _write_cluster_artifact(args.quick)
 
 

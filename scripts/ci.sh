@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
 # Reproducible tier-1 signal: install dev deps (best effort — the suite
-# still collects without them via tests/_hypothesis_shim.py), run the suite.
+# still collects without them via tests/_hypothesis_shim.py), run the suite,
+# then re-emit the BENCH_cluster.json perf-trajectory artifact (per-future
+# TCP overhead + wire compression, wait-vs-poll, callback push latency) so
+# regressions in the completion kernel show up in review diffs.
 #
-#   ./scripts/ci.sh             # full tier-1 run
+#   ./scripts/ci.sh             # full tier-1 run + bench artifact
 #   ./scripts/ci.sh tests/test_conformance.py   # pass-through pytest args
+#                                               # (skips the bench re-emit)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -11,3 +15,8 @@ python -m pip install -r requirements-dev.txt \
     || echo "warning: dev-dep install failed (offline?); running with what's available"
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+if [ "$#" -eq 0 ]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.run --quick --cluster
+fi

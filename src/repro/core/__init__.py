@@ -24,7 +24,8 @@ from .containers import ListEnv                              # noqa: F401
 from .errors import (ChannelError, FutureCancelledError, FutureError,  # noqa: F401
                      GlobalsError, NonExportableObjectError,
                      RNGMisuseWarning, WorkerDiedError)
-from .future import (Future, as_completed, future, merge, resolve,  # noqa: F401
+from .future import (Future, Waiter, as_completed, first,  # noqa: F401
+                     first_successful, future, gather, merge, resolve,
                      resolved, value, wait_any)
 from .mapreduce import (future_either, future_lapply, future_map,  # noqa: F401
                         future_map_chunked_lazy, retry)
@@ -34,7 +35,7 @@ from .rng import set_session_seed                            # noqa: F401
 
 __all__ = [
     "future", "value", "resolved", "resolve", "as_completed", "wait_any",
-    "merge", "Future",
+    "merge", "Future", "Waiter", "gather", "first", "first_successful",
     "plan", "spec", "tweak", "shutdown", "available_cores", "active_backend",
     "future_map", "future_lapply", "future_either", "retry",
     "future_map_chunked_lazy",

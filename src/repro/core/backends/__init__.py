@@ -8,7 +8,12 @@
   launched standalone on other machines — the paper's ``makeClusterPSOCK``.
 * ``jax_async`` — JAX's own asynchronous dispatch surfaced as futures.
 
-All five implement the event-driven ``Backend.wait()`` primitive (see
-``base.py``) so ``resolve()`` / ``as_completed()`` / ``future_map`` block on
-socket selects and condition variables instead of sleep-polling.
+All five implement the push completion kernel (see ``base.py``):
+``Backend.add_done_callback(handle, cb)`` fires exactly once from the
+completing thread (worker/I-O thread, the cluster driver's select loop, a
+jax watcher), which powers the continuation combinators (``then`` / ``map``
+/ ``recover`` / ``gather`` / ``first`` …) and the cross-backend ``Waiter``
+under ``resolve()`` / ``as_completed()`` / ``wait_any()`` / ``future_map``
+— completions are pushed, never sleep-polled. ``Backend.wait()`` remains
+the pull-shaped event wait for direct per-backend use.
 """

@@ -69,21 +69,65 @@ class Backend(abc.ABC):
         (socket ``select`` for cluster, a completion condition variable for
         threads/processes, immediacy for sequential/jax_async).
 
-        The default is for third-party backends that predate ``wait()``: if
-        nothing polls ready it blocks on ``collect()`` of the first handle,
-        which is exact for synchronous backends (everything resolved at
-        submit) but may overshoot ``timeout`` on asynchronous ones — those
-        should override.
+        The default is for third-party backends that predate ``wait()``.
+        Untimed, it blocks on ``collect()`` of the first handle — exact for
+        synchronous backends (everything resolved at submit). With a finite
+        ``timeout`` it must *not* do that (``collect()`` could overshoot the
+        deadline by the whole task duration), so it falls back to a bounded
+        ``poll()`` loop that honours the deadline.
         """
         handles = list(handles)
         ready = [h for h in handles if self.poll(h)]
         if ready or not handles or timeout == 0:
             return ready
-        try:
-            self.collect(handles[0])
-        except Exception:                    # noqa: BLE001 — errored == resolved
-            pass
-        return [h for h in handles if self.poll(h)]
+        if timeout is None:
+            try:
+                self.collect(handles[0])
+            except Exception:                # noqa: BLE001 — errored == resolved
+                pass
+            return [h for h in handles if self.poll(h)]
+        deadline = time.monotonic() + timeout
+        while True:
+            ready = [h for h in handles if self.poll(h)]
+            remaining = deadline - time.monotonic()
+            if ready or remaining <= 0:
+                return ready
+            time.sleep(min(0.005, remaining))
+
+    def add_done_callback(self, handle: Any, cb: Callable[[Any], None]
+                          ) -> None:
+        """Register ``cb(handle)`` to fire **exactly once** when ``handle``
+        resolves (value, error, or cancellation alike).
+
+        This is the push primitive the continuation layer (``Future.then``
+        and friends, the cross-backend ``Waiter``) is built on. Contract:
+
+        * if the handle is already resolved, ``cb`` fires synchronously in
+          the calling thread before this method returns;
+        * otherwise it fires from whatever thread completes the handle (the
+          worker thread for ``threads``/``processes``, the select loop for
+          ``cluster``) — callbacks must therefore be cheap and non-blocking;
+          heavy continuations bounce to their own thread (the Future layer
+          does this for user code);
+        * multiple callbacks on one handle each fire exactly once.
+
+        The default suits third-party backends that predate the callback
+        kernel: it fires inline when ``poll()`` is already true and otherwise
+        parks a watcher thread in ``collect()``.
+        """
+        if self.poll(handle):
+            cb(handle)
+            return
+
+        def _watch():
+            try:
+                self.collect(handle)
+            except Exception:                # noqa: BLE001 — errored == resolved
+                pass
+            cb(handle)
+
+        threading.Thread(target=_watch, name="future-done-watch",
+                         daemon=True).start()
 
     def drain_immediate(self, handle: Any) -> list[ImmediateCondition]:
         """Immediate conditions produced since the last drain (may be [])."""
@@ -101,14 +145,27 @@ class Backend(abc.ABC):
         return 1
 
 
+class CompletionHandle:
+    """Base for backend handles resolved by a push event: a ``done``
+    :class:`threading.Event` plus the completion-callback slot that
+    :class:`EventWaitMixin` drains exactly once at completion."""
+
+    def __init__(self):
+        self.done = threading.Event()
+        self._cbs: list[Callable[[Any], None]] = []
+        self._cb_lock = threading.Lock()
+
+
 class EventWaitMixin:
-    """``wait()`` for backends whose handles carry a ``done``
-    :class:`threading.Event` completed by some notifier thread.
+    """Completion kernel for backends whose handles are
+    :class:`CompletionHandle` s finished by some notifier thread.
 
     The backend calls :meth:`_init_wait` in ``__init__`` and
-    :meth:`_notify_done` (from the completing thread, *after*
-    ``handle.done.set()``); waiters then observe completions through one
-    shared condition variable — no sleep loops anywhere.
+    :meth:`_complete` from the completing thread *after* storing the
+    handle's result/error. ``_complete`` sets ``handle.done``, fires the
+    handle's registered done-callbacks (push delivery, exactly once), and
+    wakes every ``wait()``er through one shared condition variable — no
+    sleep loops anywhere.
     """
 
     def _init_wait(self) -> None:
@@ -117,6 +174,31 @@ class EventWaitMixin:
     def _notify_done(self) -> None:
         with self._done_cv:
             self._done_cv.notify_all()
+
+    def _complete(self, handle: CompletionHandle) -> None:
+        """Mark ``handle`` resolved: fire its callbacks (from this thread)
+        and wake waiters. Idempotent — late/racing completions are no-ops."""
+        with handle._cb_lock:
+            if handle.done.is_set():
+                cbs: list = []
+            else:
+                handle.done.set()
+                cbs, handle._cbs = handle._cbs, []
+        for cb in cbs:
+            try:
+                cb(handle)
+            except Exception:                # noqa: BLE001
+                import traceback
+                traceback.print_exc()
+        self._notify_done()
+
+    def add_done_callback(self, handle: CompletionHandle,
+                          cb: Callable[[Any], None]) -> None:
+        with handle._cb_lock:
+            if not handle.done.is_set():
+                handle._cbs.append(cb)
+                return
+        cb(handle)                           # already resolved: fire inline
 
     def wait(self, handles: Sequence[Any], timeout: "float | None" = None
              ) -> list[Any]:

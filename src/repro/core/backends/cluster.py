@@ -27,7 +27,9 @@ Fault model: EOF / reset / heartbeat loss on a busy worker surfaces as
 spawning a replacement (locally-spawned workers; externally-launched
 capacity just shrinks until the operator relaunches). Everything is
 select-driven — one driver thread multiplexes every worker socket — so
-``Backend.wait()`` is a genuine event wait, never a poll loop.
+``Backend.wait()`` is a genuine event wait, never a poll loop, and
+completion is *pushed*: ``add_done_callback`` continuations fire straight
+from the select loop the moment a result frame lands.
 """
 
 from __future__ import annotations
@@ -46,14 +48,15 @@ from typing import Any
 from ..conditions import CapturedRun, ImmediateCondition
 from ..errors import ChannelError, FutureCancelledError, WorkerDiedError
 from .. import planning as plan_mod
-from .base import Backend, EventWaitMixin, TaskSpec, register_backend
+from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
+                   register_backend)
 from .transport import FrameReader, send_frame
 
 
-class _Handle:
+class _Handle(CompletionHandle):
     def __init__(self, task: TaskSpec):
+        super().__init__()
         self.task = task
-        self.done = threading.Event()
         self.run: CapturedRun | None = None
         self.error: Exception | None = None          # infrastructure error
         self.immediate: list[ImmediateCondition] = []
@@ -363,8 +366,9 @@ class ClusterBackend(EventWaitMixin, Backend):
                 self._pool_cv.notify_all()
             if retire:
                 self._retire(w)
-        h.done.set()
-        self._notify_done()
+        # push completion from the select loop: done-callbacks (continuation
+        # dispatch, cross-backend Waiter wake-ups) fire here
+        self._complete(h)
 
     def _retire_dead_worker(self, w: _SockWorker) -> None:
         """Remove a worker without the death/self-heal bookkeeping."""
@@ -407,8 +411,7 @@ class ClusterBackend(EventWaitMixin, Backend):
                     f"{w.describe()} died while resolving future "
                     f"{h.task.label or h.task.task_id!r}: {reason}",
                     future_label=h.task.label, worker=w.wid)
-            h.done.set()
-            self._notify_done()
+            self._complete(h)
 
     def _reap_and_check(self) -> None:
         with self._pool_cv:
@@ -448,8 +451,7 @@ class ClusterBackend(EventWaitMixin, Backend):
                 f"{worker.describe()} died at dispatch of future "
                 f"{task.label or task.task_id!r}",
                 future_label=task.label, worker=worker.wid)
-            handle.done.set()
-            self._notify_done()
+            self._complete(handle)
         return handle
 
     def poll(self, handle: _Handle) -> bool:
@@ -496,8 +498,7 @@ class ClusterBackend(EventWaitMixin, Backend):
                     f"future {handle.task.label!r} cancelled "
                     f"(soft: external {w.describe()} keeps running)",
                     future_label=handle.task.label, worker=w.wid)
-                handle.done.set()
-                self._notify_done()
+                self._complete(handle)
         return True
 
     def shutdown(self) -> None:
@@ -535,7 +536,7 @@ class ClusterBackend(EventWaitMixin, Backend):
                     f"cluster backend shut down while future "
                     f"{h.task.label!r} was in flight",
                     future_label=h.task.label, worker=w.wid)
-                h.done.set()
+                self._complete(h)
         self._notify_done()
         for proc in spawning:
             try:

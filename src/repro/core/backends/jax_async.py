@@ -15,6 +15,7 @@ level, adapted to XLA.
 
 from __future__ import annotations
 
+import threading
 from typing import Any
 
 import jax
@@ -33,6 +34,9 @@ def _leaves(value: Any):
 @register_backend("jax_async")
 class JaxAsyncBackend(Backend):
     supports_immediate = True
+
+    def __init__(self):
+        self._cb_lock = threading.Lock()
 
     def submit(self, task: TaskSpec) -> CapturedRun:
         # Dispatch happens now (async); python-level errors are captured now,
@@ -56,6 +60,37 @@ class JaxAsyncBackend(Backend):
             for leaf in _leaves(handle.value):
                 leaf.block_until_ready()
         return handle
+
+    def add_done_callback(self, handle: CapturedRun, cb) -> None:
+        # Python-level work ran at submit; only device computation is
+        # outstanding. XLA has no host-side completion hook, so one watcher
+        # thread per handle parks in block_until_ready() and fans out to
+        # every registered callback exactly once.
+        fire = False
+        with self._cb_lock:
+            cbs = getattr(handle, "_done_cbs", None)
+            if cbs == "fired" or (cbs is None and self.poll(handle)):
+                fire = True
+            elif cbs is None:
+                handle._done_cbs = [cb]
+
+                def _watch():
+                    try:
+                        self.collect(handle)
+                    except Exception:       # noqa: BLE001 — errored == resolved
+                        pass
+                    with self._cb_lock:
+                        pending = handle._done_cbs
+                        handle._done_cbs = "fired"
+                    for fn in pending:
+                        fn(handle)
+
+                threading.Thread(target=_watch, name="jax-done-watch",
+                                 daemon=True).start()
+            else:
+                cbs.append(cb)
+        if fire:
+            cb(handle)
 
     def wait(self, handles, timeout=None):
         # Python-level work already ran at submit; only device computation

@@ -30,7 +30,8 @@ from ..conditions import CapturedRun, ImmediateCondition
 from ..errors import WorkerDiedError
 from ..globals_capture import ship_function
 from .. import planning as plan_mod
-from .base import Backend, EventWaitMixin, TaskSpec, register_backend
+from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
+                   register_backend)
 
 
 class _Worker:
@@ -67,10 +68,10 @@ class _Worker:
             pass
 
 
-class _Handle:
+class _Handle(CompletionHandle):
     def __init__(self, task: TaskSpec):
+        super().__init__()
         self.task = task
-        self.done = threading.Event()
         self.run: CapturedRun | None = None
         self.error: Exception | None = None          # infrastructure error
         self.immediate: list[ImmediateCondition] = []
@@ -199,9 +200,9 @@ class ProcessBackend(EventWaitMixin, Backend):
                 worker.busy_task = None
                 self._checkin(worker, healthy and not handle.cancelled)
         finally:
-            handle.done.set()
-            self._notify_done()
             self._slots.release()
+            # push completion: fires done-callbacks from this I/O thread
+            self._complete(handle)
 
     def poll(self, handle: _Handle) -> bool:
         return handle.done.is_set()

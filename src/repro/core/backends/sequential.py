@@ -37,3 +37,7 @@ class SequentialBackend(Backend):
     def wait(self, handles, timeout=None):
         # Everything resolved eagerly at submit: wait() is immediate.
         return list(handles)
+
+    def add_done_callback(self, handle, cb):
+        # Everything resolved eagerly at submit: fire synchronously.
+        cb(handle)

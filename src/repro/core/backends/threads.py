@@ -20,13 +20,14 @@ from ..conditions import CapturedRun, ImmediateCondition, capture_run
 from ..errors import FutureCancelledError
 from .. import planning as plan_mod
 from ..rng import rng_scope
-from .base import Backend, EventWaitMixin, TaskSpec, register_backend
+from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
+                   register_backend)
 
 
-class _Handle:
+class _Handle(CompletionHandle):
     def __init__(self, task: TaskSpec):
+        super().__init__()
         self.task = task
-        self.done = threading.Event()
         self.run: CapturedRun | None = None
         self.immediate: queue.SimpleQueue[ImmediateCondition] = queue.SimpleQueue()
         self.cancelled = False
@@ -70,9 +71,9 @@ class ThreadBackend(EventWaitMixin, Backend):
                         )
             handle.run = run
         finally:
-            handle.done.set()
-            self._notify_done()
             self._slots.release()
+            # push completion: fires done-callbacks from this worker thread
+            self._complete(handle)
 
     def poll(self, handle: _Handle) -> bool:
         return handle.done.is_set()

@@ -1,7 +1,8 @@
 """Length-prefixed pickle framing over sockets (the cluster wire protocol).
 
-Frame layout: 8-byte big-endian unsigned length, then a pickle of a tuple
-``(tag, *payload)``. Tags in use:
+Frame layout: 8-byte big-endian unsigned length, then a 1-byte codec flag
+(``0`` = raw pickle, ``1`` = zlib-compressed pickle), then the payload —
+a pickle of a tuple ``(tag, *payload)``. Tags in use:
 
   worker -> driver : ("hello", meta)       handshake; meta = {"pid", "host"}
                      ("hb",)               heartbeat (liveness only)
@@ -10,6 +11,13 @@ Frame layout: 8-byte big-endian unsigned length, then a pickle of a tuple
   driver -> worker : ("init", nested_blob, session_seed, hb_interval_s)
                      ("task", task_id, blob)        shipped function payload
                      ("stop",)
+
+Compression: frames whose pickle reaches :data:`COMPRESS_THRESHOLD`
+(~64 KiB — task blobs shipping snapshotted globals, result frames carrying
+parameter deltas) are zlib-compressed at level :data:`COMPRESS_LEVEL` when
+that actually shrinks them; small control frames (heartbeats, progress)
+stay raw, so the hot path pays one byte. The effect on multi-MB parameter
+blobs is measured by ``bench_cluster_overhead`` (BENCH_cluster.json).
 
 Two read paths:
 
@@ -30,6 +38,7 @@ from __future__ import annotations
 import pickle
 import struct
 import threading
+import zlib
 from typing import Any
 
 from ..errors import ChannelError
@@ -39,10 +48,34 @@ _CHUNK = 1 << 20
 #: sanity bound against a corrupted length prefix (1 TiB)
 MAX_FRAME = 1 << 40
 
+#: pickles at least this large are candidates for zlib compression
+COMPRESS_THRESHOLD = 64 * 1024
+#: zlib level — 1 keeps the driver loop cheap; float-array pickles gain
+#: little from higher levels at several times the CPU cost
+COMPRESS_LEVEL = 1
+
+_RAW, _ZLIB = 0, 1
+
 
 def encode_frame(obj: Any) -> bytes:
     blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-    return _LEN.pack(len(blob)) + blob
+    flag = _RAW
+    if len(blob) >= COMPRESS_THRESHOLD:
+        packed = zlib.compress(blob, COMPRESS_LEVEL)
+        if len(packed) < len(blob):          # only when it actually shrinks
+            blob, flag = packed, _ZLIB
+    return _LEN.pack(len(blob) + 1) + bytes((flag,)) + blob
+
+
+def _decode_payload(payload: bytes) -> Any:
+    if not payload:
+        raise ChannelError("empty frame payload")
+    flag, blob = payload[0], payload[1:]
+    if flag == _ZLIB:
+        blob = zlib.decompress(blob)
+    elif flag != _RAW:
+        raise ChannelError(f"unknown frame codec {flag}")
+    return pickle.loads(blob)
 
 
 def send_frame(sock, obj: Any, lock: "threading.Lock | None" = None) -> None:
@@ -74,7 +107,7 @@ def recv_frame(sock) -> Any:
     (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
     if n > MAX_FRAME:
         raise ChannelError(f"oversized frame: {n} bytes")
-    return pickle.loads(_recv_exact(sock, n))
+    return _decode_payload(_recv_exact(sock, n))
 
 
 class FrameReader:
@@ -106,6 +139,6 @@ class FrameReader:
             end = _LEN.size + n
             if len(self._buf) < end:
                 break
-            frames.append(pickle.loads(bytes(self._buf[_LEN.size:end])))
+            frames.append(_decode_payload(bytes(self._buf[_LEN.size:end])))
             del self._buf[:end]
         return frames

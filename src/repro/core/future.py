@@ -19,24 +19,41 @@ Semantics reproduced from the paper:
 * **seed** — ``seed=True`` gives the body a deterministic per-future RNG
   stream key, invariant to the backend and worker count.
 
-Collection is **event-driven**: :func:`resolve` blocks until a set of
-futures is resolved and :func:`as_completed` yields them in completion
-order, both built on ``Backend.wait()`` (socket select / condition
-variables) rather than sleep-polling ``resolved()``.
+Completion is **push-based**: every backend implements
+``Backend.add_done_callback(handle, cb)`` and fires it exactly once from
+the completing thread (worker thread, I/O pump, or the cluster driver's
+select loop). Two layers build on that one kernel:
+
+* **event-driven collection** — :func:`resolve`, :func:`as_completed` and
+  :func:`wait_any` multiplex any number of futures *across any mix of
+  backends* through one :class:`Waiter` (one callback registration per
+  future, one condition variable) — a single event wait, no polling slices;
+* **continuation combinators** — ``Future.then(fn)`` (chain, monadic:
+  a returned ``Future`` is flattened), ``Future.map(fn)`` (plain
+  transform), ``Future.recover(fn)`` / ``Future.fallback(other)`` (error
+  paths), and module-level :func:`gather` / :func:`first` /
+  :func:`first_successful`. Combinators return real :class:`Future` s:
+  ``value()`` relays the whole chain's captured stdout/conditions in order
+  and re-raises errors as-is, identically on every backend — the paper's
+  three-construct surface and conformance contract are unchanged.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import inspect
 import itertools
 import threading
 import time
+import traceback
+import weakref
 from typing import Any, Callable, Iterable, Iterator, Sequence
 
 from . import planning as plan_mod
-from .backends.base import Backend, TaskSpec
-from .conditions import CapturedRun, relay
-from .errors import FutureError, GlobalsError
+from .backends.base import (Backend, CompletionHandle, EventWaitMixin,
+                            TaskSpec)
+from .conditions import CapturedRun, capture_run, relay
+from .errors import FutureCancelledError, FutureError, GlobalsError
 from .globals_capture import (assert_exportable, identify_globals,
                               ship_function)
 from . import rng as rng_mod
@@ -79,9 +96,121 @@ def _accepts_kwarg(fn: Callable, name: str) -> bool:
                for p in params.values())
 
 
+# --------------------------------------------------------------------------
+# The continuation kernel: completion cells for derived futures
+# --------------------------------------------------------------------------
+
+class _ChainHandle(CompletionHandle):
+    """Completion cell for a derived (combinator) future: filled in by a
+    continuation instead of a backend worker."""
+
+    def __init__(self, label: str = ""):
+        super().__init__()
+        self.label = label
+        self.run: CapturedRun | None = None
+        self.error: Exception | None = None          # infrastructure error
+
+
+class _ChainKernel(EventWaitMixin, Backend):
+    """The pseudo-backend that resolves derived futures.
+
+    It is deliberately *not* in ``BACKEND_REGISTRY`` — nothing is ever
+    submitted to it. It only provides the resolution-side half of the
+    Backend contract (poll / collect / wait / add_done_callback) over
+    :class:`_ChainHandle` cells, so a combinator result is
+    indistinguishable from a backend future to ``value()``, ``wait_any()``
+    and further combinators.
+    """
+
+    name = "continuation"
+    supports_immediate = False
+
+    def __init__(self):
+        self._init_wait()
+
+    def submit(self, task: TaskSpec):   # pragma: no cover — never dispatched
+        raise NotImplementedError(
+            "derived futures are completed by continuations, not submitted")
+
+    def poll(self, handle: _ChainHandle) -> bool:
+        return handle.done.is_set()
+
+    def collect(self, handle: _ChainHandle) -> CapturedRun:
+        handle.done.wait()
+        if handle.error is not None:
+            raise handle.error
+        assert handle.run is not None
+        return handle.run
+
+    def complete(self, handle: _ChainHandle, run: CapturedRun | None = None,
+                 error: Exception | None = None) -> bool:
+        """Resolve ``handle`` exactly once (racing completions lose
+        silently), firing its done-callbacks from this thread."""
+        with handle._cb_lock:
+            if handle.done.is_set():
+                return False
+            handle.run, handle.error = run, error
+            handle.done.set()
+            cbs, handle._cbs = handle._cbs, []
+        for cb in cbs:
+            try:
+                cb(handle)
+            except Exception:                        # noqa: BLE001
+                traceback.print_exc()
+        self._notify_done()
+        return True
+
+    def cancel(self, handle: _ChainHandle) -> bool:
+        return self.complete(handle, error=FutureCancelledError(
+            f"derived future {handle.label!r} cancelled",
+            future_label=handle.label))
+
+
+_CHAIN = _ChainKernel()
+
+
+def _spawn_continuation(out: "Future", job: Callable[[], None]) -> None:
+    """Run one continuation step on its own daemon thread.
+
+    Backend done-callbacks fire from completing threads / the cluster
+    select loop and must stay non-blocking, so user continuations
+    (arbitrary code — possibly slow, possibly creating futures) bounce
+    here. An escaped exception resolves ``out`` instead of vanishing.
+    """
+    def _run():
+        try:
+            job()
+        except BaseException as exc:                 # noqa: BLE001
+            _CHAIN.complete(out._handle, error=exc)
+
+    threading.Thread(target=_run, name=f"continuation-{out.label}",
+                     daemon=True).start()
+
+
+def _outcome(f: "Future") -> "tuple[CapturedRun | None, Exception | None]":
+    """``(run, infra_error)`` of a *resolved* future — never blocks long."""
+    try:
+        return f._backend.collect(f._handle), None
+    except Exception as exc:                         # noqa: BLE001 — FutureError
+        return None, exc
+
+
+def _merge_runs(head: CapturedRun, tail: CapturedRun) -> CapturedRun:
+    """Value/error from ``tail``; captures concatenated, so one ``value()``
+    on a chained future relays the whole chain's output in order."""
+    return CapturedRun(
+        value=tail.value, error=tail.error, error_tb=tail.error_tb,
+        stdout=head.stdout + tail.stdout,
+        conditions=head.conditions + tail.conditions,
+        immediate=head.immediate + tail.immediate,
+        wall_time_s=head.wall_time_s + tail.wall_time_s,
+        rng_touched=head.rng_touched or tail.rng_touched)
+
+
 class Future:
     """One future. Create via :func:`future`, interrogate via
-    :func:`resolved`, harvest via :func:`value`."""
+    :func:`resolved`, harvest via :func:`value`, compose via
+    :meth:`then` / :meth:`map` / :meth:`recover` / :meth:`fallback`."""
 
     def __init__(self, fn: Callable, args: tuple, kwargs: dict, *,
                  seed: bool | int | None = None,
@@ -118,6 +247,26 @@ class Future:
         if not lazy:
             self._submit()
 
+    @classmethod
+    def _derived(cls, label: str) -> "Future":
+        """A future resolved by a continuation (no backend dispatch)."""
+        f = cls.__new__(cls)
+        f.id = next(_ids)
+        f.label = label
+        f._lock = threading.Lock()
+        f._state = _SUBMITTED
+        f._handle = _ChainHandle(label)
+        f._run = None
+        f._relayed = False
+        f._stdout = True
+        f._conditions = True
+        f._backend = _CHAIN
+        f.seed_declared = False
+        f._stream_index = None                   # no RNG stream consumed
+        f._snapshot, f._packages = {}, set()
+        f._fn, f._args, f._kwargs = None, (), {}
+        return f
+
     # -- dispatch -------------------------------------------------------------
 
     def _task(self, backend: Backend) -> TaskSpec:
@@ -148,6 +297,13 @@ class Future:
             self._handle = backend.submit(self._task(backend))
             self._state = _SUBMITTED
 
+    def _register(self, cb: Callable[[Any], None]) -> None:
+        """Register ``cb(handle)`` on this future's completion (launching a
+        lazy future first). Fires synchronously if already resolved."""
+        if self._state == _CREATED:
+            self._submit()
+        self._backend.add_done_callback(self._handle, cb)
+
     # -- the three constructs ---------------------------------------------------
 
     def resolved(self) -> bool:
@@ -177,6 +333,57 @@ class Future:
             raise self._run.error
         return self._run.value
 
+    # -- continuation combinators ------------------------------------------------
+
+    def then(self, fn: Callable[[Any], Any], *,
+             label: str | None = None) -> "Future":
+        """Chain: a future of ``fn(value(self))``.
+
+        ``fn`` runs as a continuation once ``self`` resolves; if it returns
+        a :class:`Future`, that future is flattened (monadic bind), so
+        ``f.then(g)`` composes asynchronous stages without blocking anyone.
+        Errors propagate: if ``self`` failed, ``fn`` is skipped and the
+        chained future re-raises the same exception at ``value()``; an
+        exception inside ``fn`` resolves the chained future with it.
+        ``value()`` of the chained future relays the captured output of the
+        whole chain in order.
+        """
+        out = Future._derived(label or f"{self.label}.then")
+        self._register(lambda _h: _spawn_continuation(
+            out, lambda: _step_then(self, fn, out, flatten=True)))
+        return out
+
+    def map(self, fn: Callable[[Any], Any], *,
+            label: str | None = None) -> "Future":
+        """Inline transform: a future of ``fn(value(self))``, with
+        :meth:`then`'s error propagation but no flattening — ``fn``'s
+        return value is the chained value as-is."""
+        out = Future._derived(label or f"{self.label}.map")
+        self._register(lambda _h: _spawn_continuation(
+            out, lambda: _step_then(self, fn, out, flatten=False)))
+        return out
+
+    def recover(self, fn: Callable[[BaseException], Any], *,
+                label: str | None = None) -> "Future":
+        """Error path: if ``self`` fails — an evaluation error *or* an
+        infrastructure :class:`FutureError` (worker death, cancellation) —
+        resolve to ``fn(exception)`` instead; successes pass through."""
+        out = Future._derived(label or f"{self.label}.recover")
+        self._register(lambda _h: _spawn_continuation(
+            out, lambda: _step_recover(self, fn, out)))
+        return out
+
+    def fallback(self, other: "Future | Callable[[], Any]", *,
+                 label: str | None = None) -> "Future":
+        """Error path: if ``self`` fails, adopt ``other``'s outcome (a
+        :class:`Future`, or a thunk evaluated on demand); on success the
+        value passes through and a Future ``other`` is cancelled
+        (speculation cleanup)."""
+        out = Future._derived(label or f"{self.label}.fallback")
+        self._register(lambda _h: _spawn_continuation(
+            out, lambda: _step_fallback(self, other, out)))
+        return out
+
     # -- extras ------------------------------------------------------------------
 
     def cancel(self) -> bool:
@@ -192,6 +399,86 @@ class Future:
 
     def __repr__(self):
         return f"<Future {self.label} state={self._state}>"
+
+
+# --------------------------------------------------------------------------
+# Continuation steps (run on continuation threads, never in backend loops)
+# --------------------------------------------------------------------------
+
+def _step_then(parent: Future, fn: Callable, out: Future, *,
+               flatten: bool) -> None:
+    prun, infra = _outcome(parent)
+    if infra is not None:
+        _CHAIN.complete(out._handle, error=infra)
+        return
+    if prun.error is not None:
+        # error propagates past fn; carry the parent's capture so relay
+        # behaviour matches value(parent)
+        _CHAIN.complete(out._handle, run=dataclasses.replace(prun))
+        return
+    crun = capture_run(lambda: fn(prun.value))
+    if flatten and crun.error is None and isinstance(crun.value, Future):
+        inner = crun.value
+        inner._register(lambda _h: _spawn_continuation(
+            out, lambda: _step_flatten(prun, crun, inner, out)))
+        return
+    _CHAIN.complete(out._handle, run=_merge_runs(prun, crun))
+
+
+def _step_flatten(prun: CapturedRun, crun: CapturedRun, inner: Future,
+                  out: Future) -> None:
+    irun, infra = _outcome(inner)
+    if infra is not None:
+        _CHAIN.complete(out._handle, error=infra)
+        return
+    _CHAIN.complete(out._handle,
+                    run=_merge_runs(prun, _merge_runs(crun, irun)))
+
+
+def _step_recover(parent: Future, fn: Callable, out: Future) -> None:
+    prun, infra = _outcome(parent)
+    if infra is not None:
+        _CHAIN.complete(out._handle, run=capture_run(lambda: fn(infra)))
+        return
+    if prun.error is None:
+        _CHAIN.complete(out._handle, run=dataclasses.replace(prun))
+        return
+    crun = capture_run(lambda: fn(prun.error))
+    _CHAIN.complete(out._handle, run=_merge_runs(
+        dataclasses.replace(prun, error=None, error_tb=None), crun))
+
+
+def _step_fallback(parent: Future, other, out: Future) -> None:
+    prun, infra = _outcome(parent)
+    if infra is None and prun.error is None:
+        if isinstance(other, Future):
+            other.cancel()
+        _CHAIN.complete(out._handle, run=dataclasses.replace(prun))
+        return
+    # failed: adopt the alternative, still relaying whatever the parent
+    # captured before it failed (same contract as then()/recover())
+    prefix = None if prun is None else \
+        dataclasses.replace(prun, error=None, error_tb=None)
+    if isinstance(other, Future):
+        other._register(lambda _h: _spawn_continuation(
+            out, lambda: _step_adopt(other, out, prefix=prefix)))
+    else:
+        crun = capture_run(other)
+        _CHAIN.complete(out._handle, run=crun if prefix is None
+                        else _merge_runs(prefix, crun))
+
+
+def _step_adopt(f: Future, out: Future,
+                prefix: CapturedRun | None = None) -> None:
+    """Complete ``out`` with the (resolved) outcome of ``f``, relaying
+    ``prefix``'s capture first if given."""
+    run, infra = _outcome(f)
+    if infra is not None:
+        _CHAIN.complete(out._handle, error=infra)
+        return
+    run = dataclasses.replace(run)
+    _CHAIN.complete(out._handle, run=run if prefix is None
+                    else _merge_runs(prefix, run))
 
 
 # --------------------------------------------------------------------------
@@ -251,41 +538,99 @@ def _flatten_futures(fs) -> list[Future]:
     return out
 
 
+# --------------------------------------------------------------------------
+# Cross-backend event wait
+# --------------------------------------------------------------------------
+
+class Waiter:
+    """Cross-backend completion multiplexer: one done-callback registration
+    per future feeding one condition variable.
+
+    This is the event-wait kernel under :func:`wait_any`, :func:`resolve`,
+    :func:`as_completed`, ``future_map`` and the multi-pod launcher: any
+    number of futures on *any mix of backends* (including derived
+    combinator futures) is a single event wait — the completing backend
+    pushes, the waiter wakes. No per-backend grouping, no 0.05s round-robin
+    slices.
+
+    :meth:`wait` returns the futures *newly* completed since the previous
+    call (each registered future is delivered exactly once across the
+    waiter's lifetime); :meth:`add` registers more futures mid-collection
+    (retries, speculative duplicates). Lazy futures are launched at
+    registration.
+    """
+
+    def __init__(self, fs: Iterable[Future] = ()):
+        self._cv = threading.Condition()
+        self._fresh: list[Future] = []
+        self._known: dict[int, Future] = {}      # strong refs keep ids unique
+        for f in fs:
+            self.add(f)
+
+    def __len__(self) -> int:
+        return len(self._known)
+
+    def add(self, f: Future) -> None:
+        if id(f) in self._known:
+            return
+        self._known[id(f)] = f
+        # The registered callback outlives short-lived waiters (handles keep
+        # their callback list until completion), so it must not pin the
+        # waiter — or, through it, every registered future — once the
+        # waiter itself is dropped (e.g. a timed-out wait_any()).
+        wref = weakref.ref(self)
+
+        def _fire(_h, f=f):
+            waiter = wref()
+            if waiter is None:
+                return
+            with waiter._cv:
+                waiter._fresh.append(f)
+                waiter._cv.notify_all()
+
+        f._register(_fire)
+
+    def wait(self, timeout: "float | None" = None) -> list[Future]:
+        """Block until at least one registered future newly completed;
+        return those (empty only if ``timeout`` elapsed first)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while not self._fresh:
+                if deadline is None:
+                    self._cv.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return []
+                    self._cv.wait(remaining)
+            fresh, self._fresh = self._fresh, []
+            return fresh
+
+
 def wait_any(fs: Sequence[Future], timeout: "float | None" = None
              ) -> list[Future]:
     """Block until at least one of ``fs`` is resolved (launching lazy
-    futures); return the resolved subset — empty only if ``timeout`` elapsed.
+    futures); return the resolved subset — empty only if ``timeout``
+    elapsed.
 
-    This is the event-driven kernel under :func:`resolve`,
-    :func:`as_completed`, ``future_map`` and the multi-pod launcher: futures
-    are grouped by backend and handed to ``Backend.wait()``, so the caller
-    sleeps on a socket select / condition variable instead of poll-looping.
-    Futures spread over *several* backends are waited on round-robin in
-    bounded slices (still no busy-sleep: each slice blocks in the backend).
+    One event wait even when ``fs`` spans several backends: each future's
+    backend pushes its completion into a shared :class:`Waiter` and the
+    caller sleeps on a single condition variable until the first push.
+    Futures on a single backend take that backend's ``wait()`` directly —
+    same event semantics, zero residual registration, so legacy
+    ``while ...: wait_any(fs, timeout=t)`` poll loops stay stateless.
     """
     fs = list(fs)
     ready = [f for f in fs if f.resolved()]
     if ready or not fs:
         return ready
-    groups: "dict[int, tuple[Backend, list[Future]]]" = {}
-    for f in fs:
-        groups.setdefault(id(f._backend), (f._backend, []))[1].append(f)
-    if len(groups) == 1:
-        backend, group = next(iter(groups.values()))
-        backend.wait([f._handle for f in group], timeout=timeout)
+    backends = {id(f._backend) for f in fs}
+    if len(backends) == 1:
+        fs[0]._backend.wait([f._handle for f in fs], timeout=timeout)
         return [f for f in fs if f.resolved()]
-    deadline = None if timeout is None else time.monotonic() + timeout
-    while True:
-        for backend, group in groups.values():
-            slice_t = 0.05
-            if deadline is not None:
-                slice_t = min(slice_t, max(0.0, deadline - time.monotonic()))
-            backend.wait([f._handle for f in group], timeout=slice_t)
-            ready = [f for f in fs if f.resolved()]
-            if ready:
-                return ready
-            if deadline is not None and time.monotonic() >= deadline:
-                return []
+    if Waiter(fs).wait(timeout=timeout):
+        return [f for f in fs if f.resolved()]
+    return []
 
 
 def resolve(fs, timeout: "float | None" = None):
@@ -296,41 +641,172 @@ def resolve(fs, timeout: "float | None" = None):
     ``value()`` for that. With ``timeout=``, returns once the deadline
     passes even if some futures are still pending. Returns ``fs``.
     """
-    pending = _flatten_futures(fs)
+    waiter = Waiter(_flatten_futures(fs))
+    left = len(waiter)
     deadline = None if timeout is None else time.monotonic() + timeout
-    while True:
-        pending = [f for f in pending if not f.resolved()]
-        if not pending:
-            return fs
+    while left:
         remaining = None
         if deadline is not None:
             remaining = deadline - time.monotonic()
             if remaining <= 0:
                 return fs
-        wait_any(pending, timeout=remaining)
+        got = waiter.wait(remaining)
+        if not got and deadline is not None:
+            return fs
+        left -= len(got)
+    return fs
 
 
 def as_completed(fs, timeout: "float | None" = None) -> Iterator[Future]:
     """Yield futures from ``fs`` in completion order (the
-    ``concurrent.futures.as_completed`` analogue, built on
-    ``Backend.wait()``). Raises ``TimeoutError`` if ``timeout`` elapses with
+    ``concurrent.futures.as_completed`` analogue, push-driven through one
+    :class:`Waiter`). Raises ``TimeoutError`` if ``timeout`` elapses with
     futures still pending."""
-    pending = _flatten_futures(fs)
+    waiter = Waiter(_flatten_futures(fs))
+    left = len(waiter)
     deadline = None if timeout is None else time.monotonic() + timeout
-    while pending:
-        ready = [f for f in pending if f.resolved()]
-        if not ready:
-            remaining = None
-            if deadline is not None:
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    raise TimeoutError(
-                        f"{len(pending)} futures unresolved after {timeout}s")
-            wait_any(pending, timeout=remaining)
-            continue
-        for f in ready:
-            pending.remove(f)
+    while left:
+        remaining = None
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"{left} futures unresolved after {timeout}s")
+        got = waiter.wait(remaining)
+        if not got:
+            raise TimeoutError(
+                f"{left} futures unresolved after {timeout}s")
+        for f in got:
+            left -= 1
             yield f
+
+
+# --------------------------------------------------------------------------
+# Module-level combinators
+# --------------------------------------------------------------------------
+
+def gather(fs, *, label: str | None = None) -> Future:
+    """One future resolving to ``[value(f) for f in fs]``.
+
+    Completes once *all* inputs have (success or failure alike — no input
+    is abandoned mid-flight); ``value()`` relays every input's captured
+    output in input order, then re-raises the first failure by input order
+    if any. Inputs may live on different backends.
+    """
+    fs = _flatten_futures(fs)
+    out = Future._derived(label or f"gather[{len(fs)}]")
+    if not fs:
+        _CHAIN.complete(out._handle, run=CapturedRun(value=[]))
+        return out
+    left = [len(fs)]
+    lock = threading.Lock()
+
+    def _fire(_h):
+        with lock:
+            left[0] -= 1
+            if left[0]:
+                return
+        _spawn_continuation(out, lambda: _step_gather(fs, out))
+
+    for f in fs:
+        f._register(_fire)
+    return out
+
+
+def _step_gather(fs: list[Future], out: Future) -> None:
+    runs = []
+    for f in fs:
+        run, infra = _outcome(f)
+        if infra is not None:
+            _CHAIN.complete(out._handle, error=infra)
+            return
+        runs.append(run)
+    merged = CapturedRun(value=[r.value for r in runs])
+    for r in runs:
+        merged.stdout += r.stdout
+        merged.conditions = merged.conditions + r.conditions
+        merged.immediate = merged.immediate + r.immediate
+        merged.wall_time_s += r.wall_time_s
+        merged.rng_touched |= r.rng_touched
+    for r in runs:
+        if r.error is not None:
+            merged.value = None
+            merged.error, merged.error_tb = r.error, r.error_tb
+            break
+    _CHAIN.complete(out._handle, run=merged)
+
+
+def first(fs, *, label: str | None = None) -> Future:
+    """The first future of ``fs`` to complete — value *or* error — wins
+    (Hewitt & Baker's EITHER); every loser is cancelled. Ties (several
+    already resolved at call time) break by input order."""
+    fs = _flatten_futures(fs)
+    if not fs:
+        raise ValueError("first() needs at least one future")
+    out = Future._derived(label or f"first[{len(fs)}]")
+    won: list[Future] = []
+    lock = threading.Lock()
+
+    def _register_one(f: Future) -> None:
+        def _fire(_h):
+            with lock:
+                if won:
+                    return
+                won.append(f)
+            _spawn_continuation(out, lambda: _step_first(f, fs, out))
+        f._register(_fire)
+
+    for f in fs:
+        _register_one(f)
+    return out
+
+
+def _step_first(winner: Future, fs: list[Future], out: Future) -> None:
+    for f in fs:
+        if f is not winner:
+            f.cancel()
+    _step_adopt(winner, out)
+
+
+def first_successful(fs, *, label: str | None = None) -> Future:
+    """The first future of ``fs`` to complete *successfully* wins and the
+    rest are cancelled; failures (evaluation errors and infrastructure
+    FutureErrors alike) are skipped. If every input fails, the failure of
+    the lowest-index input propagates (deterministic across backends)."""
+    fs = _flatten_futures(fs)
+    if not fs:
+        raise ValueError("first_successful() needs at least one future")
+    out = Future._derived(label or f"first_successful[{len(fs)}]")
+    state = {"won": False, "left": len(fs)}
+    lock = threading.Lock()
+
+    def _register_one(f: Future) -> None:
+        f._register(lambda _h: _spawn_continuation(
+            out, lambda: _step_first_successful(f, fs, state, lock, out)))
+
+    for f in fs:
+        _register_one(f)
+    return out
+
+
+def _step_first_successful(f: Future, fs: list[Future], state: dict,
+                           lock: threading.Lock, out: Future) -> None:
+    run, infra = _outcome(f)
+    ok = infra is None and run.error is None
+    with lock:
+        if state["won"]:
+            return
+        state["left"] -= 1
+        exhausted = state["left"] == 0
+        if ok:
+            state["won"] = True
+    if ok:
+        for other in fs:
+            if other is not f:
+                other.cancel()
+        _CHAIN.complete(out._handle, run=dataclasses.replace(run))
+    elif exhausted:
+        _step_adopt(fs[0], out)
 
 
 def merge(futures: Sequence[Future], *, label: str | None = None) -> Future:
@@ -358,4 +834,5 @@ def merge(futures: Sequence[Future], *, label: str | None = None) -> Future:
 
 
 __all__ = ["Future", "future", "value", "resolved", "resolve",
-           "as_completed", "wait_any", "merge", "FutureError"]
+           "as_completed", "wait_any", "merge", "gather", "first",
+           "first_successful", "Waiter", "FutureError"]

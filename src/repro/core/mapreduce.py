@@ -22,7 +22,7 @@ from typing import Any, Callable, Iterable, Sequence
 
 from . import planning as plan_mod
 from .errors import FutureError
-from .future import Future, future, merge, value, wait_any
+from .future import Future, Waiter, first, future, merge, value
 from . import rng as rng_mod
 
 
@@ -88,13 +88,13 @@ def future_map(fn: Callable, xs: Sequence, *,
     attempts = {id(f): 0 for f in fs}
     # as-completed collection (paper: collect resolved futures first to free
     # workers / lower relay latency), with FutureError-driven re-dispatch.
-    # Blocks on Backend.wait() between completions — no sleep-polling.
+    # One Waiter holds a completion callback per chunk future: the loop
+    # sleeps on its condition variable and each completing backend pushes —
+    # no poll scans, no sleep loops, retries join the same waiter.
+    waiter = Waiter(f for f, _ in pending.values())
     while pending:
-        ready = [key for key, (f, _) in pending.items() if f.resolved()]
-        if not ready:
-            wait_any([f for f, _ in pending.values()])
-            continue
-        for key in ready:
+        for f in waiter.wait():
+            key = id(f)
             f, idx = pending.pop(key)
             try:
                 vals = f.value()
@@ -107,6 +107,7 @@ def future_map(fn: Callable, xs: Sequence, *,
                             label=f"{label or 'map'}-retry")
                 pending[id(nf)] = (nf, idx)
                 attempts[id(nf)] = attempts[key] + 1
+                waiter.add(nf)
                 continue
             for i, v in zip(idx, vals):
                 results[i] = v
@@ -123,20 +124,16 @@ def future_either(*thunks: Callable, label: str | None = None) -> Any:
     finishes; cancel the rest (paper §Other uses / Hewitt & Baker 1977).
 
     This is the speculative-execution primitive: dispatch the same work
-    twice and take whichever worker is not the straggler.
+    twice and take whichever worker is not the straggler. It is now sugar
+    over the continuation combinator :func:`repro.core.first` — the winner
+    is pushed by its backend's completion callback and the losers are
+    cancelled inside the combinator.
     """
     if not thunks:
         raise ValueError("future_either() needs at least one expression")
     fs = [future(t, label=f"{label or 'either'}[{i}]")
           for i, t in enumerate(thunks)]
-    while True:
-        done = wait_any(fs)           # event wait: first resolution wakes us
-        if done:
-            f = done[0]
-            for other in fs:
-                if other is not f:
-                    other.cancel()
-            return f.value()
+    return first(fs, label=f"{label or 'either'}-first").value()
 
 
 def retry(fn: Callable, *, times: int = 3, backoff_s: float = 0.0,

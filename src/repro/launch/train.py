@@ -8,9 +8,10 @@ that replaces a per-step gradient all-reduce with one delta exchange per
 round, matching slow inter-pod links), then returns its parameter delta.
 
 The driver:
-  * collects pod futures as they resolve, blocking on the backend's
-    event-driven ``wait_any()`` (socket select under the cluster backend)
-    instead of polling ``resolved()`` in a sleep loop;
+  * collects pod futures as they resolve, sleeping on one cross-backend
+    ``Waiter`` per round — each pod backend *pushes* completion through
+    ``add_done_callback`` (from the cluster driver's select loop) instead
+    of the driver polling ``resolved()`` in a sleep loop;
   * re-dispatches on FutureError (node failure -> restart; the pod pool
     self-heals underneath);
   * optionally races a speculative duplicate of the slowest pod
@@ -34,7 +35,7 @@ from typing import Any
 
 import numpy as np
 
-from ..core import (FutureError, future, plan, resolved, value, wait_any)
+from ..core import FutureError, Waiter, future, plan, value
 from ..optim.compression import ErrorFeedback, dequantize_tree, quantize_tree
 
 
@@ -166,52 +167,54 @@ class MultiPodDriver:
 
     def run_round(self, rnd: int) -> dict:
         c = self.cfg
-        # each pod has a list of racing candidates (future_either pattern)
+        # Each pod has a list of racing candidates (future_either pattern).
+        # One Waiter spans the whole round: every candidate — initial,
+        # re-dispatched after a node failure, or speculative — registers a
+        # completion callback once, and the loop sleeps on one condition
+        # variable until a pod backend pushes (select loop under cluster).
         fs: dict[int, list] = {pod: [self._dispatch(pod, rnd)]
                                for pod in range(c.pods)}
+        owner = {id(f): pod for pod, cands in fs.items() for f in cands}
+        waiter = Waiter(f for cands in fs.values() for f in cands)
         results: dict[int, dict] = {}
         t0 = time.time()
         speculated = False
         while len(results) < c.pods:
-            progress = False
-            for pod, cands in list(fs.items()):
-                if pod in results:
-                    continue
-                for f in cands:
-                    if not resolved(f):
-                        continue
-                    progress = True
-                    try:
-                        results[pod] = value(f)
-                    except FutureError:
-                        # node failure: pool self-healed; re-dispatch
-                        cands.remove(f)
-                        cands.append(self._dispatch(pod, rnd))
-                        break
-                    for other in cands:     # first resolved wins
-                        if other is not f:
-                            other.cancel()
-                    break
+            # Before the speculation deadline, cap the wait so the straggler
+            # check below fires on time; after it, block until a pod pushes.
+            timeout = None
+            if c.straggler_timeout_s and not speculated:
+                timeout = max(0.0, c.straggler_timeout_s
+                              - (time.time() - t0))
+            done = waiter.wait(timeout)
             if c.straggler_timeout_s and not speculated and \
                     time.time() - t0 > c.straggler_timeout_s:
                 # speculative duplicates for every unresolved pod
                 for pod, cands in fs.items():
                     if pod not in results:
-                        cands.append(self._dispatch(pod, rnd,
-                                                    speculative=True))
+                        nf = self._dispatch(pod, rnd, speculative=True)
+                        cands.append(nf)
+                        owner[id(nf)] = pod
+                        waiter.add(nf)
                 speculated = True
-            if not progress and len(results) < c.pods:
-                # Event wait on every outstanding candidate. Before the
-                # speculation deadline, cap the wait so the straggler check
-                # above still fires on time; after it, block until a pod
-                # actually resolves.
-                outstanding = [f for pod, cands in fs.items()
-                               if pod not in results for f in cands]
-                timeout = None
-                if c.straggler_timeout_s and not speculated:
-                    timeout = max(0.0, c.straggler_timeout_s
-                                  - (time.time() - t0))
-                wait_any(outstanding, timeout=timeout)
+            for f in done:
+                pod = owner[id(f)]
+                if pod in results:          # late loser: winner already in
+                    continue
+                try:
+                    results[pod] = value(f)
+                except FutureError:
+                    # node failure: pool self-healed; re-dispatch
+                    cands = fs[pod]
+                    cands.remove(f)
+                    nf = self._dispatch(pod, rnd)
+                    cands.append(nf)
+                    owner[id(nf)] = pod
+                    waiter.add(nf)
+                    continue
+                for other in fs[pod]:       # first resolved wins
+                    if other is not f:
+                        other.cancel()
 
         # -- compressed delta averaging (int8 + EF), then outer Nesterov --
         deltas = []

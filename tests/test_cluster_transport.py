@@ -79,6 +79,45 @@ def test_clean_close_is_eof():
     b.close()
 
 
+def test_large_frame_is_compressed_on_the_wire():
+    """Frames past COMPRESS_THRESHOLD ship zlib-compressed (flag byte 1)
+    and round-trip identically through both read paths."""
+    payload = ("result", 3, b"Z" * (2 * transport.COMPRESS_THRESHOLD))
+    blob = transport.encode_frame(payload)
+    (n,) = transport._LEN.unpack(blob[:8])
+    assert blob[8] == 1                       # zlib codec flag
+    assert n == len(blob) - 8
+    assert len(blob) < transport.COMPRESS_THRESHOLD   # 128 KiB of 'Z' shrinks
+
+    a, b = socket.socketpair()
+    transport.send_frame(a, payload)
+    assert transport.recv_frame(b) == payload
+    transport.send_frame(a, payload)
+    reader = transport.FrameReader(b)
+    frames = []
+    while not frames:
+        frames += reader.feed()
+    assert frames == [payload]
+    a.close()
+    b.close()
+
+
+def test_small_and_incompressible_frames_stay_raw():
+    small = transport.encode_frame(("hb",))
+    assert small[8] == 0                      # raw codec flag
+    # random bytes past the threshold do not shrink -> stays raw
+    rng = __import__("numpy").random.default_rng(0)
+    noise = rng.integers(0, 256, 2 * transport.COMPRESS_THRESHOLD,
+                         dtype="uint8").tobytes()
+    framed = transport.encode_frame(("result", 1, noise))
+    assert framed[8] == 0
+    a, b = socket.socketpair()
+    transport.send_frame(a, ("result", 1, noise))
+    assert transport.recv_frame(b)[2] == noise
+    a.close()
+    b.close()
+
+
 # --------------------------------------------------------------------------
 # handshake / topology
 # --------------------------------------------------------------------------

@@ -12,7 +12,8 @@ import warnings
 import pytest
 
 import repro.core as rc
-from repro.core import future, future_map, value
+from repro.core import (first, first_successful, future, future_map, gather,
+                        value)
 
 BACKENDS = [
     ("sequential", {}),
@@ -97,6 +98,78 @@ def test_nested_parallelism_protection(backend):
     name, v = value(future(outer))
     assert v == 1
     assert name == "SequentialBackend"
+
+
+# --------------------------------------------------------------------------
+# continuation combinators: same values / relay / exceptions on every backend
+# --------------------------------------------------------------------------
+
+def test_then_map_chain_value(backend):
+    f = future(lambda: 10).then(lambda v: v + 1).map(lambda v: v * 2)
+    assert value(f) == 22
+
+
+def test_then_flattens_returned_future(backend):
+    f = future(lambda: 3).then(lambda v: future(lambda: v * 7))
+    assert value(f) == 21
+
+
+def test_chain_propagates_parent_error(backend):
+    trace = []
+    f = future(lambda: int("nope")).then(lambda v: trace.append(v))
+    with pytest.raises(ValueError):
+        value(f)
+    with pytest.raises(ValueError):      # errors re-raised at every value()
+        value(f)
+    assert trace == []                   # continuation skipped on error
+
+
+def test_chain_raises_continuation_error(backend):
+    f = future(lambda: 1).map(lambda v: [0][3])
+    with pytest.raises(IndexError):
+        value(f)
+
+
+def test_chain_relays_whole_chain_stdout(backend, capsys):
+    f = future(lambda: print("from-parent") or 2)
+    g = f.map(lambda v: print("from-map") or v * 2)
+    assert value(g) == 4
+    out = capsys.readouterr().out
+    assert out.index("from-parent") < out.index("from-map")
+
+
+def test_recover_handles_error_and_passes_value(backend):
+    bad = future(lambda: 1 / 0).recover(lambda exc: type(exc).__name__)
+    assert value(bad) == "ZeroDivisionError"
+    ok = future(lambda: 5).recover(lambda exc: -1)
+    assert value(ok) == 5
+
+
+def test_gather_values_and_error_propagation(backend):
+    fs = [future(lambda i=i: i * i) for i in range(5)]
+    assert value(gather(fs)) == [0, 1, 4, 9, 16]
+    mixed = gather([future(lambda: 1), future(lambda: int("x"))])
+    with pytest.raises(ValueError):
+        value(mixed)
+
+
+def test_first_returns_earliest_completion(backend):
+    import time
+    fast = future(lambda: "fast")
+    slow = future(lambda: time.sleep(0.2) or "slow")
+    assert value(first([fast, slow])) == "fast"
+
+
+def test_first_successful_skips_failures(backend):
+    f = first_successful([future(lambda: 1 / 0), future(lambda: "ok")])
+    assert value(f) == "ok"
+
+
+def test_first_successful_all_failures_propagates_first(backend):
+    f = first_successful([future(lambda: 1 / 0),
+                          future(lambda: [0][3])])
+    with pytest.raises(ZeroDivisionError):   # lowest-index failure wins
+        value(f)
 
 
 @pytest.mark.parametrize("name", ["processes", "cluster"])

@@ -1,0 +1,259 @@
+"""The continuation kernel (PR 2): ``Backend.add_done_callback``, the
+combinator layer (`then`/`map`/`recover`/`fallback`, `gather`/`first`/
+`first_successful`), and the cross-backend ``Waiter`` that replaced the
+0.05s round-robin slices in ``wait_any()``.
+
+Backend-parametrized conformance of the combinators lives in
+``test_conformance.py``; this file covers the kernel mechanics and the
+cross-backend/latency acceptance criteria.
+"""
+
+import threading
+import time
+
+import pytest
+
+import repro.core as rc
+from repro.core import (Waiter, first, first_successful, future, gather,
+                        value, wait_any)
+from repro.core.backends.base import (BACKEND_REGISTRY, Backend,
+                                      CompletionHandle, EventWaitMixin)
+
+
+@pytest.fixture(autouse=True)
+def _sequential_after():
+    yield
+    rc.plan("sequential")
+
+
+# --------------------------------------------------------------------------
+# add_done_callback contract
+# --------------------------------------------------------------------------
+
+def test_callback_fires_exactly_once_per_registration():
+    rc.plan("threads", workers=2)
+    f = future(lambda: time.sleep(0.05) or 1)
+    hits = []
+    ev = threading.Event()
+    b = rc.active_backend()
+    b.add_done_callback(f._handle, lambda h: hits.append("a"))
+    b.add_done_callback(f._handle, lambda h: (hits.append("b"), ev.set()))
+    assert ev.wait(5)
+    time.sleep(0.05)                     # no double delivery afterwards
+    assert sorted(hits) == ["a", "b"]
+
+
+def test_callback_on_resolved_handle_fires_inline():
+    rc.plan("threads", workers=2)
+    f = future(lambda: 1)
+    assert value(f) == 1
+    hits = []
+    rc.active_backend().add_done_callback(f._handle, lambda h: hits.append(1))
+    assert hits == [1]                   # synchronous, same thread
+
+
+def test_callback_fires_on_error_and_cancellation():
+    rc.plan("threads", workers=2)
+    boom = future(lambda: 1 / 0)
+    ev = threading.Event()
+    rc.active_backend().add_done_callback(boom._handle, lambda h: ev.set())
+    assert ev.wait(5)                    # errored == resolved
+
+
+# --------------------------------------------------------------------------
+# cross-backend Waiter (the acceptance criterion: single event wait)
+# --------------------------------------------------------------------------
+
+def test_wait_any_two_backends_single_event_wait():
+    """wait_any over threads+cluster futures wakes within a few ms of the
+    first completion — no 0.05s round-robin polling slices."""
+    tb = BACKEND_REGISTRY["threads"](workers=1)
+    cb = BACKEND_REGISTRY["cluster"](workers=1)
+    try:
+        slow = future(lambda: time.sleep(3.0) or "slow", backend=cb)
+        fast = future(lambda: time.sleep(0.3) or "fast", backend=tb)
+        t0 = time.monotonic()
+        ready = wait_any([slow, fast])
+        wake_latency = time.monotonic() - t0 - 0.3
+        assert fast in ready and slow not in ready
+        # push-based wake: well under the retired 50ms slice (a round-robin
+        # over 2 backends could park up to 100ms in the wrong backend)
+        assert wake_latency < 0.04, f"woke {wake_latency * 1e3:.1f}ms late"
+        slow.cancel()
+    finally:
+        cb.shutdown()
+        tb.shutdown()
+
+
+def test_gather_spans_backends():
+    tb = BACKEND_REGISTRY["threads"](workers=1)
+    cb = BACKEND_REGISTRY["cluster"](workers=1)
+    try:
+        g = gather([future(lambda: "t", backend=tb),
+                    future(lambda: "c", backend=cb)])
+        assert value(g) == ["t", "c"]
+    finally:
+        cb.shutdown()
+        tb.shutdown()
+
+
+def test_waiter_delivers_each_future_once_and_accepts_adds():
+    rc.plan("threads", workers=2)
+    fs = [future(lambda i=i: time.sleep(0.02 * i) or i) for i in range(3)]
+    waiter = Waiter(fs)
+    seen = []
+    while len(seen) < 3:
+        got = waiter.wait(timeout=5)
+        assert got
+        seen.extend(got)
+    waiter.add(future(lambda: 99))       # mid-collection registration
+    seen.extend(waiter.wait(timeout=5))
+    assert sorted(value(f) for f in seen) == [0, 1, 2, 99]
+    assert len(set(id(f) for f in seen)) == 4     # no duplicate delivery
+
+
+def test_waiter_timeout_returns_empty():
+    rc.plan("threads", workers=2)
+    f = future(lambda: time.sleep(3.0))
+    waiter = Waiter([f])
+    t0 = time.monotonic()
+    assert waiter.wait(timeout=0.1) == []
+    assert time.monotonic() - t0 < 1.0
+    f.cancel()
+
+
+# --------------------------------------------------------------------------
+# combinator mechanics beyond the conformance matrix
+# --------------------------------------------------------------------------
+
+def test_first_cancels_losers_cluster():
+    """On the cluster backend a cancelled loser is really killed: its
+    future fails fast instead of running out its 60s body."""
+    rc.plan("cluster", workers=2)
+    fast = future(lambda: "winner")
+    slow = future(lambda: time.sleep(60) or "loser")
+    assert value(first([fast, slow])) == "winner"
+    t0 = time.monotonic()
+    with pytest.raises(rc.FutureError):
+        value(slow)
+    assert time.monotonic() - t0 < 30
+    rc.shutdown()
+
+
+def test_first_cancel_attempted_on_threads_losers():
+    rc.plan("threads", workers=2)
+    fast = future(lambda: "winner")
+    slow = future(lambda: time.sleep(0.3) or "loser")
+    assert value(first([fast, slow])) == "winner"
+    # threads cannot kill a running body; the loser still completes
+    assert value(slow) == "loser"
+
+
+def test_fallback_future_and_thunk():
+    rc.plan("threads", workers=2)
+    alt = future(lambda: "alt")
+    assert value(future(lambda: 1 / 0).fallback(alt)) == "alt"
+    assert value(future(lambda: 1 / 0).fallback(lambda: "thunk")) == "thunk"
+    assert value(future(lambda: "ok").fallback(lambda: "unused")) == "ok"
+
+
+def test_fallback_relays_failed_parent_capture(capsys):
+    """Like then()/recover(), fallback() keeps what the parent printed
+    before failing — output isn't lost on the error path."""
+    f = future(lambda: print("pre-crash") or 1 / 0)
+    assert value(f.fallback(lambda: print("from-alt") or 2)) == 2
+    out = capsys.readouterr().out
+    assert out.index("pre-crash") < out.index("from-alt")
+
+
+def test_recover_catches_infrastructure_errors():
+    """recover() sees FutureErrors (worker death), not just evaluation
+    errors — the retry/fallback building block."""
+    import os
+    rc.plan("cluster", workers=1)
+    f = future(lambda: os._exit(37)).recover(lambda exc: type(exc).__name__)
+    assert value(f) == "WorkerDiedError"
+    rc.shutdown()
+
+
+def test_cancel_derived_future():
+    rc.plan("threads", workers=2)
+    f = future(lambda: time.sleep(1.0)).map(lambda v: "never")
+    assert f.cancel() is True
+    with pytest.raises(rc.FutureCancelledError):
+        value(f)
+
+
+def test_then_on_lazy_future_launches_it():
+    f = future(lambda: 5, lazy=True)
+    g = f.then(lambda v: v * 2)
+    # registering the continuation dispatched the lazy parent
+    assert f.resolved() is True
+    assert value(g) == 10
+
+
+def test_gather_empty_and_duplicate_free():
+    assert value(gather([])) == []
+
+
+def test_deep_chain():
+    rc.plan("threads", workers=2)
+    f = future(lambda: 0)
+    for _ in range(30):
+        f = f.map(lambda v: v + 1)
+    assert value(f) == 30
+
+
+# --------------------------------------------------------------------------
+# default Backend.wait(): bounded timeout for third-party backends
+# --------------------------------------------------------------------------
+
+class _AsyncHandle(CompletionHandle):
+    pass
+
+
+class _SlowThirdPartyBackend(Backend):
+    """An asynchronous backend that does NOT override wait() or
+    add_done_callback() — it must inherit correct (bounded) behaviour."""
+
+    name = "slow3p"
+
+    def submit(self, task):
+        h = _AsyncHandle()
+
+        def _work():
+            time.sleep(1.0)
+            from repro.core.conditions import capture_run
+            h.run = capture_run(lambda: task.fn(*task.args, **task.kwargs))
+            h.done.set()
+
+        threading.Thread(target=_work, daemon=True).start()
+        return h
+
+    def poll(self, h):
+        return h.done.is_set()
+
+    def collect(self, h):
+        h.done.wait()
+        return h.run
+
+
+def test_default_wait_honours_timeout():
+    """The default wait() must not park in collect() past the deadline
+    (the old behaviour overshot by the whole task duration)."""
+    b = _SlowThirdPartyBackend()
+    f = future(lambda: 1, backend=b)
+    t0 = time.monotonic()
+    assert b.wait([f._handle], timeout=0.1) == []
+    assert time.monotonic() - t0 < 0.6
+    # untimed wait still blocks in collect() and returns the handle
+    assert b.wait([f._handle]) == [f._handle]
+
+
+def test_default_add_done_callback_via_watcher_thread():
+    b = _SlowThirdPartyBackend()
+    f = future(lambda: 7, backend=b)
+    ev = threading.Event()
+    b.add_done_callback(f._handle, lambda h: ev.set())
+    assert ev.wait(5)
+    assert value(f) == 7
