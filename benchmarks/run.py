@@ -119,8 +119,11 @@ def bench_chunking(quick: bool = False) -> None:
 def bench_cluster_overhead(quick: bool = False) -> None:
     """Per-future overhead over the real TCP socket transport, vs the
     pipe-based processes backend (paper §Overhead, extended to the
-    makeClusterPSOCK analogue), plus the wire-compression effect on
-    large frames (zlib at the transport layer, threshold ~64 KiB)."""
+    makeClusterPSOCK analogue), plus the transport codec effect on large
+    array payloads: zero-copy OOB framing for result frames (zlib-1 used
+    to buy ~1.10x on float32 blobs at ~50ms/MiB — those now ship
+    out-of-band, copy-free) and the int8+EF payload codec for shipped
+    float32 globals (~4x)."""
     import pickle
     from repro.core.backends import transport
 
@@ -137,27 +140,41 @@ def bench_cluster_overhead(quick: bool = False) -> None:
     _row("overhead/cluster_vs_processes", rows["tcp_penalty_us"],
          "TCP framing + select loop vs mp.Pipe")
 
-    # wire compression: one frame shaped like a result carrying a parameter
-    # blob (structured float32 -> compressible, like real weight deltas)
+    # transport codec: one frame shaped like a result carrying a parameter
+    # blob (structured float32, like real weight deltas). Arrays now travel
+    # out-of-band (protocol-5 buffers, sendmsg scatter) instead of being
+    # zlib'd into a contiguous frame.
     blob = np.sin(np.arange(1 << (16 if quick else 18), dtype=np.float32))
     frame_obj = ("result", 1, blob)
     raw_len = len(pickle.dumps(frame_obj, pickle.HIGHEST_PROTOCOL))
-    wire_len = len(transport.encode_frame(frame_obj)) - transport._LEN.size - 1
-    us_encode = _timeit(lambda: transport.encode_frame(frame_obj),
+    parts = transport.encode_frame_parts(frame_obj)
+    wire_len = sum(len(memoryview(p).cast("B")) for p in parts) \
+        - transport._LEN.size - 1
+    us_encode = _timeit(lambda: transport.encode_frame_parts(frame_obj),
                         5 if quick else 20, warmup=1)
     us_raw = _timeit(
         lambda: pickle.dumps(frame_obj, pickle.HIGHEST_PROTOCOL),
         5 if quick else 20, warmup=1)
-    ratio = raw_len / max(wire_len, 1)
-    _row("transport/compression", us_encode,
-         f"{raw_len}B -> {wire_len}B ({ratio:.2f}x) vs pickle-only "
-         f"{us_raw:.0f}us (zlib level {transport.COMPRESS_LEVEL}, "
-         f"threshold {transport.COMPRESS_THRESHOLD}B)")
+    _row("transport/oob_frame", us_encode,
+         f"{raw_len}B pickled -> {wire_len}B framed, zero-copy vs "
+         f"pickle-only {us_raw:.0f}us")
+
+    # int8+EF payload codec on the same blob (what a shipped float32
+    # global pays on a cache miss)
+    transport.reset_array_codec_state()
+    raw_payload = len(pickle.dumps(blob, pickle.HIGHEST_PROTOCOL))
+    pblob = transport.encode_payload(blob, name="bench")
+    us_pencode = _timeit(
+        lambda: transport.encode_payload(blob, name="bench"),
+        5 if quick else 20, warmup=1)
+    pratio = raw_payload / max(len(pblob), 1)
+    _row("transport/int8_payload", us_pencode,
+         f"{raw_payload}B -> {len(pblob)}B ({pratio:.2f}x) int8+EF codec")
     rows_comp = {
-        "payload_bytes": raw_len, "wire_bytes": wire_len,
-        "ratio": ratio, "encode_us": us_encode, "pickle_only_us": us_raw,
-        "threshold_bytes": transport.COMPRESS_THRESHOLD,
-        "level": transport.COMPRESS_LEVEL,
+        "payload_bytes": raw_payload, "wire_bytes": len(pblob),
+        "ratio": pratio, "encode_us": us_pencode, "pickle_only_us": us_raw,
+        "oob_frame_bytes": wire_len, "oob_encode_us": us_encode,
+        "codec": "int8_ef" if transport.ARRAY_CODEC_INT8 else "raw",
     }
     _CLUSTER_JSON["bench_cluster_overhead"] = {
         "us_per_future": rows, "workers": 2, "n": n,
@@ -252,6 +269,61 @@ def bench_callback_latency(quick: bool = False) -> None:
         "reps": reps}
 
 
+def bench_globals_cache(quick: bool = False) -> None:
+    """Content-addressed globals shipping: first-send vs cache-hit dispatch
+    of a task whose globals include an 8 MiB float32 array. The first
+    dispatch pays one int8-encoded ``put`` (~2 MiB on the wire); every
+    subsequent dispatch ships a few-hundred-byte task blob referencing the
+    digest, and the worker resolves it from its decoded-object cache — so
+    cache-hit overhead should sit near the small-payload baseline."""
+    import pickle
+    from repro.core.backends import transport
+
+    mib = 1 if quick else 8
+    big = np.sin(np.arange(mib << 18, dtype=np.float32))    # mib MiB
+    raw_pickle = len(pickle.dumps(big, pickle.HIGHEST_PROTOCOL))
+    n = 5 if quick else 20
+
+    rc.plan("cluster", workers=1)
+    try:
+        rc.value(rc.future(lambda: 1))               # warm the connection
+        us_small = _timeit(lambda: rc.value(rc.future(lambda: 42)), n,
+                           warmup=1)
+        transport.reset_wire_stats()
+        t0 = time.perf_counter()
+        rc.value(rc.future(lambda: float(big[1])))
+        us_first = (time.perf_counter() - t0) * 1e6
+        first_bytes = transport.wire_stats()["bytes_sent"]
+
+        base = transport.wire_stats()["bytes_sent"]
+        us_hit = _timeit(lambda: rc.value(rc.future(lambda: float(big[1]))),
+                         n, warmup=1)
+        hit_bytes = (transport.wire_stats()["bytes_sent"] - base) \
+            / (n + 1)                                 # warmup dispatch too
+    finally:
+        rc.shutdown()
+        rc.plan("sequential")
+
+    reduction = first_bytes / max(hit_bytes, 1)
+    _row("globals_cache/first_send", us_first,
+         f"{mib}MiB global: {first_bytes}B on the wire "
+         f"({raw_pickle / max(first_bytes, 1):.2f}x vs raw pickle)")
+    _row("globals_cache/cache_hit", us_hit,
+         f"{hit_bytes:.0f}B on the wire ({reduction:.0f}x less), "
+         f"small-future baseline {us_small:.0f}us")
+    _CLUSTER_JSON["bench_globals_cache"] = {
+        "array_mib": mib, "raw_pickle_bytes": raw_pickle,
+        "first_send_wire_bytes": first_bytes,
+        "cache_hit_wire_bytes": hit_bytes,
+        "wire_reduction": reduction,
+        "payload_ratio_vs_pickle": raw_pickle / max(first_bytes, 1),
+        "us_first_send": us_first, "us_cache_hit": us_hit,
+        "us_small_future": us_small,
+        "cache_hit_overhead_vs_small": us_hit / max(us_small, 1e-9),
+        "n": n,
+    }
+
+
 def _write_cluster_artifact(quick: bool) -> None:
     if not _CLUSTER_JSON:
         return
@@ -337,13 +409,13 @@ def bench_roofline(quick: bool = False) -> None:
 
 BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_chunking, bench_cluster_overhead, bench_wait_vs_poll,
-           bench_callback_latency, bench_compression, bench_kernels,
-           bench_roofline]
+           bench_callback_latency, bench_globals_cache, bench_compression,
+           bench_kernels, bench_roofline]
 
 #: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
 #: exactly these, so CI can re-emit the perf-trajectory artifact cheaply
 CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
-                   bench_callback_latency]
+                   bench_callback_latency, bench_globals_cache]
 
 
 def main() -> None:

@@ -1,0 +1,95 @@
+"""Bench-regression guard: compare a freshly emitted BENCH_cluster.json
+against the committed baseline and fail on significant regressions in the
+latency metrics the completion kernel + transport own:
+
+* ``bench_cluster_overhead.us_per_future.{processes,cluster}``
+* ``bench_callback_latency.us_cross_backend_wake``
+
+Usage::
+
+    python scripts/check_bench_regression.py BASELINE.json FRESH.json \
+        [--tolerance-pct 25]
+
+Metrics missing from either file are skipped with a note (so a baseline
+predating a bench does not fail the build). Exit status 1 on regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: (label, path into the json artifact)
+METRICS = [
+    ("us_per_future/processes",
+     ("bench_cluster_overhead", "us_per_future", "processes")),
+    ("us_per_future/cluster",
+     ("bench_cluster_overhead", "us_per_future", "cluster")),
+    ("us_cross_backend_wake",
+     ("bench_callback_latency", "us_cross_backend_wake")),
+]
+
+
+def _lookup(doc: dict, path: tuple):
+    node = doc
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node if isinstance(node, (int, float)) else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--tolerance-pct", type=float,
+                    default=float(os.environ.get(
+                        "REPRO_BENCH_TOLERANCE_PCT", "25")),
+                    help="fail when fresh > baseline * (1 + pct/100)")
+    ap.add_argument("--min-delta-us", type=float,
+                    default=float(os.environ.get(
+                        "REPRO_BENCH_MIN_DELTA_US", "1000")),
+                    help="absolute noise floor: a relative regression "
+                         "smaller than this many microseconds never fails")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    bq = baseline.get("meta", {}).get("quick")
+    fq = fresh.get("meta", {}).get("quick")
+    if bq != fq:
+        print(f"bench-guard: note — comparing quick={fq} against "
+              f"baseline quick={bq}; rep counts differ")
+
+    failed = False
+    for label, path in METRICS:
+        b, f = _lookup(baseline, path), _lookup(fresh, path)
+        if b is None or f is None:
+            print(f"bench-guard: SKIP {label} "
+                  f"(baseline={b!r} fresh={f!r})")
+            continue
+        limit = max(b * (1 + args.tolerance_pct / 100.0),
+                    b + args.min_delta_us)
+        status = "REGRESSION" if f > limit else "ok"
+        print(f"bench-guard: {status:>10} {label}: "
+              f"baseline {b:.1f}us -> fresh {f:.1f}us "
+              f"(limit {limit:.1f}us)")
+        if f > limit:
+            failed = True
+    if failed:
+        print(f"bench-guard: FAILED — latency regressed more than "
+              f"{args.tolerance_pct:.0f}% vs the committed baseline. "
+              f"If intentional, re-commit BENCH_cluster.json.")
+        return 1
+    print("bench-guard: all tracked metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,10 +2,11 @@
 # Reproducible tier-1 signal: install dev deps (best effort — the suite
 # still collects without them via tests/_hypothesis_shim.py), run the suite,
 # then re-emit the BENCH_cluster.json perf-trajectory artifact (per-future
-# TCP overhead + wire compression, wait-vs-poll, callback push latency) so
-# regressions in the completion kernel show up in review diffs.
+# TCP overhead, transport codecs, wait-vs-poll, callback push latency and
+# the content-addressed globals cache) and fail on >25% regressions in the
+# tracked latency metrics vs the committed baseline.
 #
-#   ./scripts/ci.sh             # full tier-1 run + bench artifact
+#   ./scripts/ci.sh             # full tier-1 run + bench artifact + guard
 #   ./scripts/ci.sh tests/test_conformance.py   # pass-through pytest args
 #                                               # (skips the bench re-emit)
 set -euo pipefail
@@ -17,6 +18,14 @@ python -m pip install -r requirements-dev.txt \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
 if [ "$#" -eq 0 ]; then
+    # snapshot the committed baseline before the run overwrites it
+    baseline="$(mktemp /tmp/bench_baseline.XXXXXX.json)"
+    trap 'rm -f "$baseline"' EXIT
+    cp BENCH_cluster.json "$baseline"
+    # full mode (no --quick): the committed baseline is full-mode, and the
+    # guard compares like against like; tune REPRO_BENCH_TOLERANCE_PCT /
+    # REPRO_BENCH_MIN_DELTA_US for noisier machines
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-        python -m benchmarks.run --quick --cluster
+        python -m benchmarks.run --cluster
+    python scripts/check_bench_regression.py "$baseline" BENCH_cluster.json
 fi

@@ -32,6 +32,15 @@ class TaskSpec:
     # For external-process backends only: pre-shipped function blob.
     shipped: bytes | None = None
     nested_stack: tuple = ()            # BackendSpec tuple for the worker
+    # Content-addressed payloads referenced by the shipped blob:
+    # digest -> PayloadSource (pinned for the task's lifetime so ``need``
+    # backfills can always be served). ``refs`` is the digest tuple the
+    # worker must hold before evaluating.
+    payload_sources: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def refs(self) -> tuple:
+        return tuple(self.payload_sources)
 
 
 class Backend(abc.ABC):

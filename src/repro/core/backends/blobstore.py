@@ -1,0 +1,319 @@
+"""Content-addressed payload store for shipped globals.
+
+The automatic-globals design (paper §Globals) ships the snapshot with every
+future, which is quadratically wasteful for the dominant workload — repeated
+``future_map`` / training-step dispatch over the same multi-MB arrays. This
+module is the driver/worker halves of the fix:
+
+* :func:`content_digest` — a 16-byte blake2b identity for a snapshot value.
+  Arrays are hashed over ``(kind, dtype, shape, raw bytes)`` without ever
+  being pickled; everything else is hashed over its robust pickle. Identical
+  content gets the same digest no matter how many futures reference it, and
+  a *mutated* mutable container (list/dict/set — deep-copied by the
+  snapshot at creation) gets a new digest automatically — content
+  addressing subsumes invalidation. Arrays follow the snapshot layer's
+  capture-by-reference contract (``globals_capture._snapshot_value``):
+  they are treated as immutable, and the digest is memoized by object
+  identity — mutating a numpy array *in place* between futures is outside
+  that contract (it already leaks into in-process backends) and will serve
+  the stale payload; rebind or copy instead.
+* :class:`PayloadRef` — the small picklable marker that replaces a large
+  value inside a shipped snapshot; the worker resolves it from its store.
+* :class:`PayloadSource` — the driver-side handle that can (re-)encode the
+  referenced value on demand: for a worker that has never seen the digest,
+  or for a ``("need", digest)`` backfill after the worker's LRU evicted it.
+* :class:`BlobStore` — bounded LRU of encoded blobs (by total payload
+  bytes), shared by workers (their cache) and the driver (its re-send
+  cache), plus a decoded-object cache for immutable payloads so a cache hit
+  skips deserialization entirely.
+
+Wire protocol built on these (see ``transport.py`` / ``cluster.py``):
+a task frame carries the digests it references; the driver prepends
+``("put", digest, blob)`` frames for any digest the worker is not known to
+hold; a worker that is missing a digest anyway (eviction, self-healed
+replacement with a cold cache) asks with ``("need", digest)`` and the driver
+re-serves it from the in-flight task's pinned sources.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import sys
+import threading
+import weakref
+from collections import OrderedDict
+from typing import Any, Callable
+
+#: snapshot values whose payload reaches this size become content-addressed
+#: refs instead of travelling inline in every task blob
+PAYLOAD_REF_THRESHOLD = 16 * 1024
+
+#: default worker-side blob cache bound (encoded bytes)
+DEFAULT_STORE_BYTES = int(os.environ.get(
+    "REPRO_BLOB_STORE_BYTES", str(256 * 1024 * 1024)))
+
+#: default driver-side re-send cache bound
+DEFAULT_DRIVER_STORE_BYTES = int(os.environ.get(
+    "REPRO_DRIVER_BLOB_BYTES", str(256 * 1024 * 1024)))
+
+
+def as_ndarray(value: Any):
+    """``(ndarray, kind)`` view of an array-like value, else ``(None, None)``.
+
+    ``kind`` records what to rebuild on the worker: ``"np"`` for numpy,
+    ``"jax"`` for jax.Array (resolved back through ``jnp.asarray``).
+    """
+    import numpy as np
+    if isinstance(value, np.ndarray):
+        return value, "np"
+    jax = sys.modules.get("jax")
+    if jax is not None:
+        try:
+            if isinstance(value, jax.Array):
+                return np.asarray(value), "jax"
+        except TypeError:          # abstract/tracer values
+            pass
+    return None, None
+
+
+class PayloadRef:
+    """Placeholder for a content-addressed payload inside a shipped
+    snapshot. Pickles to a few dozen bytes; the worker swaps it for the
+    decoded value from its :class:`BlobStore` before evaluation."""
+
+    __slots__ = ("digest",)
+
+    def __init__(self, digest: bytes):
+        self.digest = digest
+
+    def __reduce__(self):
+        return (PayloadRef, (self.digest,))
+
+    def __repr__(self):
+        return f"PayloadRef({self.digest.hex()[:12]})"
+
+
+# --------------------------------------------------------------------------
+# Content digests (+ an id-based memo so repeated dispatch of the same
+# array object never re-hashes its gigabytes)
+# --------------------------------------------------------------------------
+
+class _DigestMemo:
+    """``id(value) -> digest`` memo with weakref validation.
+
+    Snapshot arrays are captured by reference, so repeated futures over the
+    same array present the *same object*; hashing it once is enough. The
+    weakref guards against id reuse after garbage collection; values that
+    do not support weakrefs (lists, dicts — deep-copied per future anyway)
+    are simply not memoized.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._memo: dict[int, tuple] = {}      # id -> (weakref, digest)
+
+    def get(self, value: Any) -> "bytes | None":
+        with self._lock:
+            entry = self._memo.get(id(value))
+        if entry is not None and entry[0]() is value:
+            return entry[1]
+        return None
+
+    def put(self, value: Any, digest: bytes) -> None:
+        key = id(value)
+
+        def _drop(_wr, key=key, self=self):
+            with self._lock:
+                self._memo.pop(key, None)
+
+        try:
+            wr = weakref.ref(value, _drop)
+        except TypeError:
+            return
+        with self._lock:
+            self._memo[key] = (wr, digest)
+
+
+_MEMO = _DigestMemo()
+
+
+def _array_digest(arr, kind: str) -> bytes:
+    import numpy as np
+    arr = np.ascontiguousarray(arr)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(f"{kind}|{arr.dtype.str}|{arr.shape}".encode())
+    h.update(memoryview(arr).cast("B"))
+    return h.digest()
+
+
+def blob_digest(blob: bytes) -> bytes:
+    return hashlib.blake2b(blob, digest_size=16).digest()
+
+
+def content_digest(value: Any) -> "bytes | None":
+    """Digest for an array-like value (memoized by object identity).
+    Returns ``None`` for non-arrays — those are digested over their pickle
+    by the caller, which needs the pickle bytes anyway."""
+    arr, kind = as_ndarray(value)
+    if arr is None:
+        return None
+    digest = _MEMO.get(value)
+    if digest is None:
+        digest = _array_digest(arr, kind)
+        _MEMO.put(value, digest)
+    return digest
+
+
+# --------------------------------------------------------------------------
+# Driver-side payload sources
+# --------------------------------------------------------------------------
+
+class PayloadSource:
+    """One large global pinned for the lifetime of its task: name (for the
+    error-feedback codec), digest, the live value, and an optional
+    pre-computed pickle (non-array payloads already paid for it)."""
+
+    __slots__ = ("name", "digest", "value", "pickled")
+
+    def __init__(self, name: str, digest: bytes, value: Any,
+                 pickled: "bytes | None" = None):
+        self.name = name
+        self.digest = digest
+        self.value = value
+        self.pickled = pickled
+
+    def encode(self) -> bytes:
+        """Encoded blob for the wire, served from the driver store when the
+        digest was encoded before (so every worker sees identical bytes)."""
+        blob = DRIVER_STORE.get(self.digest)
+        if blob is None:
+            from . import transport
+            blob = transport.encode_payload(self.value, name=self.name,
+                                            pickled=self.pickled)
+            DRIVER_STORE.put(self.digest, blob)
+        return blob
+
+
+# --------------------------------------------------------------------------
+# The bounded LRU blob store
+# --------------------------------------------------------------------------
+
+class BlobStore:
+    """Bounded LRU map of ``digest -> encoded blob`` plus a decoded-object
+    cache for payloads whose decode is immutable-safe (arrays are handed
+    out read-only; see ``transport.decode_payload``).
+
+    Thread-safe; eviction is by total encoded bytes, oldest-touched first.
+    The object cache entry is evicted together with its blob.
+    """
+
+    def __init__(self, max_bytes: "int | None" = None):
+        self.max_bytes = DEFAULT_STORE_BYTES if max_bytes is None \
+            else int(max_bytes)
+        self._lock = threading.Lock()
+        self._blobs: "OrderedDict[bytes, Any]" = OrderedDict()
+        self._objects: dict[bytes, Any] = {}
+        self._pins: dict[bytes, int] = {}
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __contains__(self, digest: bytes) -> bool:
+        with self._lock:
+            return digest in self._blobs
+
+    def pinned(self, digests) -> "_PinScope":
+        """Context manager pinning ``digests`` against eviction for the
+        duration of one task: a backfill ``put`` for one missing ref must
+        never evict a sibling ref of the same task (the store may
+        transiently exceed ``max_bytes`` by the pinned working set)."""
+        return _PinScope(self, tuple(digests))
+
+    def put(self, digest: bytes, blob) -> None:
+        if not isinstance(blob, bytes):
+            # normalize bytes-like frame views to immutable bytes so decoded
+            # raw-array payloads really are read-only
+            blob = bytes(blob)
+        with self._lock:
+            old = self._blobs.pop(digest, None)
+            if old is not None:
+                self._bytes -= len(old)
+            self._blobs[digest] = blob
+            self._bytes += len(blob)
+            evictable = [d for d in self._blobs if d not in self._pins]
+            for victim in evictable:
+                if self._bytes <= self.max_bytes or len(self._blobs) <= 1:
+                    break
+                self._bytes -= len(self._blobs.pop(victim))
+                self._objects.pop(victim, None)
+                self.evictions += 1
+
+    def get(self, digest: bytes):
+        with self._lock:
+            blob = self._blobs.get(digest)
+            if blob is None:
+                self.misses += 1
+                return None
+            self._blobs.move_to_end(digest)
+            self.hits += 1
+            return blob
+
+    def resolve(self, digest: bytes) -> Any:
+        """Decoded value for ``digest`` (decoded-object cache first).
+        Raises :class:`~..errors.ChannelError` if the blob is absent —
+        the put/need protocol (plus per-task pinning) guarantees presence
+        before evaluation starts, so absence is a protocol fault the task
+        reports rather than a reason to kill the worker."""
+        with self._lock:
+            if digest in self._objects:
+                self._blobs.move_to_end(digest)
+                self.hits += 1
+                return self._objects[digest]
+        blob = self.get(digest)
+        if blob is None:
+            from ..errors import ChannelError
+            raise ChannelError(
+                f"payload {digest.hex()[:12]} missing from the blob store "
+                f"at evaluation time")
+        from . import transport
+        value, cacheable = transport.decode_payload(blob)
+        if cacheable:
+            with self._lock:
+                if digest in self._blobs:        # not evicted meanwhile
+                    self._objects[digest] = value
+        return value
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._blobs), "bytes": self._bytes,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "max_bytes": self.max_bytes}
+
+
+class _PinScope:
+    def __init__(self, store: BlobStore, digests: tuple):
+        self._store = store
+        self._digests = digests
+
+    def __enter__(self):
+        with self._store._lock:
+            for d in self._digests:
+                self._store._pins[d] = self._store._pins.get(d, 0) + 1
+        return self
+
+    def __exit__(self, *exc):
+        with self._store._lock:
+            for d in self._digests:
+                n = self._store._pins.get(d, 0) - 1
+                if n <= 0:
+                    self._store._pins.pop(d, None)
+                else:
+                    self._store._pins[d] = n
+        return False
+
+
+#: driver-process re-send cache (digest -> encoded blob)
+DRIVER_STORE = BlobStore(DEFAULT_DRIVER_STORE_BYTES)

@@ -63,6 +63,9 @@ class _Handle(CompletionHandle):
         self.ilock = threading.Lock()
         self.worker: "_SockWorker | None" = None
         self.cancelled = False
+        # digest -> PayloadSource, pinned while in flight so ("need", digest)
+        # backfills can always be served
+        self.sources: dict = task.payload_sources
 
 
 class _SockWorker:
@@ -74,6 +77,10 @@ class _SockWorker:
         self.addr = addr
         self.reader = FrameReader(sock)
         self.send_lock = threading.Lock()
+        #: payload digests this worker is believed to hold (guarded by
+        #: send_lock; its LRU may still evict them -> ("need", d) backfill).
+        #: A replacement worker starts with a fresh, empty set: cold cache.
+        self.known: set[bytes] = set()
         self.busy: _Handle | None = None
         self.ready = False                 # hello received
         self.retired = False               # deliberate down-scale, not a death
@@ -105,7 +112,9 @@ class ClusterBackend(EventWaitMixin, Backend):
                  bind: str = "127.0.0.1", port: int = 0,
                  connect_timeout: float = 60.0,
                  heartbeat_interval: float = 1.0,
-                 heartbeat_timeout: float = 10.0):
+                 heartbeat_timeout: float = 10.0,
+                 blob_store_bytes: "int | None" = None):
+        self._blob_store_bytes = blob_store_bytes
         self._hb_interval = float(heartbeat_interval or 0.0)
         # no heartbeats flowing -> a liveness deadline would falsely kill
         # every quiet worker; either knob at 0 disables the check
@@ -295,7 +304,9 @@ class ClusterBackend(EventWaitMixin, Backend):
         w = _SockWorker(next(self._wid), conn, addr)
         try:
             send_frame(conn, ("init", self._nested_blob, self._session_seed,
-                              self._hb_interval), w.send_lock)
+                              self._hb_interval,
+                              {"blob_store_bytes": self._blob_store_bytes}),
+                       w.send_lock)
         except OSError:
             w.close()
             return
@@ -328,6 +339,30 @@ class ClusterBackend(EventWaitMixin, Backend):
                     self._pool_cv.notify_all()
             elif tag == "hb":
                 pass                                  # last_seen updated above
+            elif tag == "need":
+                # blob-store backfill: the worker evicted (or never had) a
+                # payload the current task references; re-serve it from the
+                # in-flight handle's pinned sources. Encoding + sending a
+                # multi-MB blob must not stall the select loop (heartbeats
+                # of every other worker would sit unread past their
+                # timeout), so the transfer runs on its own thread; a
+                # failed send is left for the loop to discover as EOF.
+                h, digest = w.busy, frame[1]
+                src = h.sources.get(digest) if h is not None else None
+
+                def _serve(w=w, digest=digest, src=src):
+                    try:
+                        if src is not None:
+                            send_frame(w.sock,
+                                       ("put", digest, pickle.PickleBuffer(
+                                           src.encode())), w.send_lock)
+                            w.known.add(digest)
+                        else:
+                            send_frame(w.sock, ("nak", digest), w.send_lock)
+                    except (OSError, AttributeError):
+                        pass
+                threading.Thread(target=_serve, name="payload-backfill",
+                                 daemon=True).start()
             elif tag == "progress":
                 h = w.busy
                 if h is not None:
@@ -443,7 +478,16 @@ class ClusterBackend(EventWaitMixin, Backend):
         worker.busy = handle
         handle.worker = worker
         try:
-            send_frame(worker.sock, ("task", task.task_id, blob),
+            # ship content-addressed payloads this worker does not hold yet
+            # (a digest it evicted comes back via the ("need", d) path)
+            for digest, src in task.payload_sources.items():
+                if digest not in worker.known:
+                    send_frame(worker.sock,
+                               ("put", digest, pickle.PickleBuffer(
+                                   src.encode())), worker.send_lock)
+                    worker.known.add(digest)
+            send_frame(worker.sock,
+                       ("task", task.task_id, blob, task.refs),
                        worker.send_lock)
         except (OSError, AttributeError):
             worker.busy = None
@@ -542,6 +586,13 @@ class ClusterBackend(EventWaitMixin, Backend):
             try:
                 proc.kill()
             except OSError:
+                pass
+        # reap killed children so they don't linger as zombies
+        for proc in spawning + [w.proc for w in workers
+                                if w.proc is not None]:
+            try:
+                proc.wait(timeout=5)
+            except Exception:                # noqa: BLE001
                 pass
         for fd_obj in (self._listener,):
             try:

@@ -13,11 +13,15 @@ multi-host transport. SSH bootstrap of remote workers is a ROADMAP item; for
 now you launch them by hand (or via your scheduler).
 
 Protocol (see transport.py): the driver sends ``init`` (nested plan stack,
-session seed, heartbeat interval) immediately on accept; the worker replies
-``hello`` and from then on pushes a heartbeat frame every interval from a
-side thread so the driver can tell a wedged/partitioned worker from a slow
-task. Tasks arrive as ``("task", id, blob)`` and are answered with
-``("progress", id, cond)`` streams and one ``("result", id, run)``.
+session seed, heartbeat interval, extras) immediately on accept; the worker
+replies ``hello`` and from then on pushes a heartbeat frame every interval
+from a side thread so the driver can tell a wedged/partitioned worker from
+a slow task. Tasks arrive as ``("task", id, blob, refs)`` — large globals
+referenced by digest, their bytes delivered in preceding ``("put", digest,
+blob)`` frames at most once per worker and cached in a bounded LRU
+:class:`BlobStore` (``("need", digest)`` asks evicted ones back) — and are
+answered with ``("progress", id, cond)`` streams and one
+``("result", id, run)``.
 
 Tip for hand-launched workers: export ``OMP_NUM_THREADS=1`` (and friends)
 before launching several per machine — by the time this module runs, numeric
@@ -50,7 +54,8 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
     msg = recv_frame(sock)
     if not msg or msg[0] != "init":
         raise ChannelError(f"expected init frame from driver, got {msg!r}")
-    _, nested_blob, session_seed, hb_interval = msg
+    nested_blob, session_seed, hb_interval = msg[1], msg[2], msg[3]
+    extras = msg[4] if len(msg) > 4 else {}
 
     stop = threading.Event()
     if hb_interval:
@@ -73,7 +78,10 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
     send_frame(sock, ("hello", {"pid": os.getpid(),
                                 "host": socket.gethostname()}), send_lock)
 
-    from .worker import execute_shipped
+    from .blobstore import BlobStore
+    from .worker import ensure_refs, error_run, execute_shipped
+
+    store = BlobStore(extras.get("blob_store_bytes"))
 
     try:
         while True:
@@ -83,9 +91,13 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
                 return
             if msg[0] == "stop":
                 return
+            if msg[0] == "put":
+                store.put(msg[1], msg[2])
+                continue
             if msg[0] != "task":
                 continue
-            _, task_id, blob = msg
+            task_id, blob = msg[1], msg[2]
+            refs = msg[3] if len(msg) > 3 else ()
 
             def emit(cond, _tid=task_id):
                 try:
@@ -93,7 +105,21 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
                 except OSError:
                     pass
 
-            run = execute_shipped(blob, emit)
+            try:
+                with store.pinned(refs):     # siblings survive backfill puts
+                    stopped = ensure_refs(
+                        store, refs,
+                        lambda d: send_frame(sock, ("need", d), send_lock),
+                        lambda: recv_frame(sock))
+                    if stopped == "stop":
+                        return
+                    run = execute_shipped(
+                        blob, emit,
+                        resolve_ref=lambda r: store.resolve(r.digest))
+            except (EOFError, OSError):
+                return
+            except ChannelError as exc:
+                run = error_run(exc)
             try:
                 send_frame(sock, ("result", task_id, run), send_lock)
             except OSError:

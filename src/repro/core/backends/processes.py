@@ -4,7 +4,10 @@ The analogue of the paper's ``multisession`` backend: a pool of background
 interpreter processes, functions + snapshotted globals shipped over pipes
 (serialization — the paper's §Known limitations apply: non-picklable globals
 raise NonExportableObjectError *at creation*, not at some far-away crash on
-the worker). The multi-host PSOCK ``cluster`` analogue lives in
+the worker). Large globals are content-addressed: they cross the pipe in a
+``("put", digest, blob)`` message at most once per worker and are referenced
+by digest afterwards (see ``blobstore.py``; ``("need", digest)`` backfills
+evictions). The multi-host PSOCK ``cluster`` analogue lives in
 ``cluster.py`` and speaks the same shipped-blob protocol over TCP sockets.
 
 This backend is the substrate for fault tolerance:
@@ -35,16 +38,21 @@ from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
 
 
 class _Worker:
-    def __init__(self, ctx, nested_blob: bytes, session_seed: int, wid: int):
+    def __init__(self, ctx, nested_blob: bytes, session_seed: int, wid: int,
+                 blob_store_bytes: "int | None" = None):
         self.wid = wid
         self.parent_conn, child_conn = ctx.Pipe()
         from .worker import worker_main
         self.proc = ctx.Process(
-            target=worker_main, args=(child_conn, nested_blob, session_seed),
+            target=worker_main,
+            args=(child_conn, nested_blob, session_seed, blob_store_bytes),
             daemon=True, name=f"repro-worker-{wid}")
         self.proc.start()
         child_conn.close()
         self._ready = False
+        #: payload digests this worker is believed to hold (cold for a
+        #: freshly restarted worker; its LRU may still evict -> "need")
+        self.known: set[bytes] = set()
         self.busy_task: "_Handle | None" = None
 
     def wait_ready(self) -> None:
@@ -89,7 +97,9 @@ class ProcessBackend(EventWaitMixin, Backend):
     # computation ran; forking then risks deadlock on inherited mutexes.
     _START_METHOD = "spawn"
 
-    def __init__(self, workers: int | None = None):
+    def __init__(self, workers: int | None = None,
+                 blob_store_bytes: "int | None" = None):
+        self._blob_store_bytes = blob_store_bytes
         self._n = int(workers) if workers else plan_mod.available_cores()
         self._ctx = mp.get_context(self._START_METHOD)
         self._nested_blob = pickle.dumps(plan_mod.nested_stack())
@@ -110,7 +120,7 @@ class ProcessBackend(EventWaitMixin, Backend):
 
     def _spawn(self, defer: bool = False) -> _Worker:
         w = _Worker(self._ctx, self._nested_blob, self._session_seed,
-                    next(self._wid))
+                    next(self._wid), self._blob_store_bytes)
         if not defer:
             w.wait_ready()
         return w
@@ -179,7 +189,13 @@ class ProcessBackend(EventWaitMixin, Backend):
             try:
                 blob = task.shipped
                 assert blob is not None, "process backend requires shipped fn"
-                worker.parent_conn.send(("task", task.task_id, blob))
+                # content-addressed payloads: ship what this worker lacks
+                for digest, src in task.payload_sources.items():
+                    if digest not in worker.known:
+                        worker.parent_conn.send(("put", digest, src.encode()))
+                        worker.known.add(digest)
+                worker.parent_conn.send(
+                    ("task", task.task_id, blob, task.refs))
                 while True:
                     try:
                         msg = worker.parent_conn.recv()
@@ -193,6 +209,15 @@ class ProcessBackend(EventWaitMixin, Backend):
                     if msg[0] == "progress":
                         with handle.ilock:
                             handle.immediate.append(msg[2])
+                    elif msg[0] == "need":
+                        # blob-store backfill (LRU eviction on the worker)
+                        src = task.payload_sources.get(msg[1])
+                        if src is not None:
+                            worker.parent_conn.send(
+                                ("put", msg[1], src.encode()))
+                            worker.known.add(msg[1])
+                        else:
+                            worker.parent_conn.send(("nak", msg[1]))
                     elif msg[0] == "result":
                         handle.run = msg[2]
                         return

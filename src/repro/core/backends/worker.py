@@ -2,11 +2,20 @@
 
 Protocol (length-prefixed pickles over a multiprocessing Pipe):
 
-  parent -> worker : ("task", task_id, blob)        blob = shipped function
+  parent -> worker : ("put", digest, blob)          content-addressed payload
+                     ("task", task_id, blob, refs)  blob = shipped function,
+                                                    refs = digests it needs
+                     ("nak", digest)                parent cannot serve it
                      ("stop",)
-  worker -> parent : ("progress", task_id, payload) immediateConditions, live
+  worker -> parent : ("need", digest)               blob-store backfill
+                     ("progress", task_id, payload) immediateConditions, live
                      ("result", task_id, run_blob)  CapturedRun (sanitized)
                      ("ready",)                     handshake after spawn
+
+Large globals arrive as ``put`` payloads at most once (the parent tracks
+what this worker holds) and live in a bounded LRU :class:`BlobStore`; a
+task whose refs were evicted asks them back with ``need``. The same
+execute/resolve path is shared with the TCP ``cluster_worker``.
 
 Unexpected worker death is detected by the parent as EOF/broken pipe and
 surfaces as WorkerDiedError — the paper's 'terminated R workers' case.
@@ -18,6 +27,8 @@ import dataclasses
 import os
 import pickle
 from typing import Any
+
+from .blobstore import BlobStore
 
 
 def _sanitize_run(run) -> Any:
@@ -41,16 +52,24 @@ def _sanitize_run(run) -> Any:
     return run
 
 
-def execute_shipped(blob: bytes, emit) -> Any:
-    """Resolve one shipped task blob: unship the function, evaluate under
-    capture_run, sanitize for the trip home. Shared by the pipe (processes)
-    and socket (cluster) workers so relay/error behaviour is identical."""
+def execute_shipped(blob: bytes, emit, resolve_ref=None) -> Any:
+    """Resolve one shipped task blob: unship the function (content-addressed
+    globals resolved through ``resolve_ref``), evaluate under capture_run,
+    sanitize for the trip home. Shared by the pipe (processes) and socket
+    (cluster) workers so relay/error behaviour is identical."""
+    import contextlib
+
     from ..conditions import capture_run
-    from ..globals_capture import unship_function
+    from ..globals_capture import payload_resolver, unship_function
     from ..rng import rng_scope
 
-    payload = pickle.loads(blob)
-    fn = unship_function(payload["fn"])
+    with payload_resolver(resolve_ref) if resolve_ref is not None \
+            else contextlib.nullcontext():
+        # nested shipped functions (e.g. future_map's chunk runner carrying
+        # the user fn as a default) rebuild during these loads and resolve
+        # their PayloadRefs through the ambient resolver
+        payload = pickle.loads(blob)
+        fn = unship_function(payload["fn"], resolve_ref=resolve_ref)
     with rng_scope(payload["seed_declared"]):
         run = capture_run(
             lambda: fn(*payload["args"], **payload["kwargs"]),
@@ -61,7 +80,43 @@ def execute_shipped(blob: bytes, emit) -> Any:
     return _sanitize_run(run)
 
 
-def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
+def error_run(exc: Exception) -> Any:
+    """A CapturedRun carrying an infrastructure-ish failure produced
+    *outside* the user's function (e.g. an unservable payload digest)."""
+    from ..conditions import CapturedRun
+    return CapturedRun(error=exc)
+
+
+def ensure_refs(store: BlobStore, refs, send_need, recv_msg) -> "str | None":
+    """Make sure every digest in ``refs`` is present in ``store``, asking
+    the driver with ``send_need(digest)`` and pumping ``recv_msg()`` for the
+    ``put`` answers. Returns ``"stop"`` if a stop frame arrived mid-backfill
+    (propagated to the main loop), raises ChannelError if the driver naks.
+    """
+    from ..errors import ChannelError
+    missing = [d for d in refs if d not in store]
+    if not missing:
+        return None
+    for d in missing:
+        send_need(d)
+    waiting = set(missing)
+    while waiting:
+        msg = recv_msg()
+        if msg[0] == "put":
+            store.put(msg[1], msg[2])
+            waiting.discard(msg[1])
+        elif msg[0] == "nak":
+            raise ChannelError(
+                f"driver cannot serve payload {msg[1].hex()[:12]} "
+                f"(blob evicted everywhere?)")
+        elif msg[0] == "stop":
+            return "stop"
+        # anything else (e.g. a late frame) is ignored during backfill
+    return None
+
+
+def worker_main(conn, nested_stack_blob: bytes, session_seed: int,
+                blob_store_bytes: "int | None" = None) -> None:
     """Entry point of a spawned worker process."""
     # Workers must see a *popped* plan stack (nested-parallelism protection)
     # and must never oversubscribe numeric libraries.
@@ -70,11 +125,13 @@ def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
 
     from .. import planning as plan_mod
     from .. import rng as rng_mod
+    from ..errors import ChannelError
 
     nested = pickle.loads(nested_stack_blob)
     plan_mod._TLS.stack = tuple(nested)         # worker-local plan stack
     rng_mod.set_session_seed(session_seed)
 
+    store = BlobStore(blob_store_bytes)
     conn.send(("ready",))
     while True:
         try:
@@ -83,7 +140,13 @@ def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
             return
         if msg[0] == "stop":
             return
-        _, task_id, blob = msg
+        if msg[0] == "put":
+            store.put(msg[1], msg[2])
+            continue
+        if msg[0] != "task":
+            continue
+        task_id, blob = msg[1], msg[2]
+        refs = msg[3] if len(msg) > 3 else ()
 
         def emit(cond, _tid=task_id):
             try:
@@ -91,7 +154,22 @@ def worker_main(conn, nested_stack_blob: bytes, session_seed: int) -> None:
             except (OSError, ValueError):
                 pass
 
-        run = execute_shipped(blob, emit)
+        try:
+            # pin the task's refs so a backfill put for one missing ref
+            # cannot evict a sibling ref of the same task
+            with store.pinned(refs):
+                stopped = ensure_refs(store, refs,
+                                      lambda d: conn.send(("need", d)),
+                                      conn.recv)
+                if stopped == "stop":
+                    return
+                run = execute_shipped(blob, emit,
+                                      resolve_ref=lambda r: store.resolve(
+                                          r.digest))
+        except (EOFError, OSError):
+            return                           # channel gone mid-backfill
+        except ChannelError as exc:
+            run = error_run(exc)
         try:
             conn.send(("result", task_id, run))
         except (OSError, ValueError):

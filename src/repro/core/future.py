@@ -54,8 +54,7 @@ from .backends.base import (Backend, CompletionHandle, EventWaitMixin,
                             TaskSpec)
 from .conditions import CapturedRun, capture_run, relay
 from .errors import FutureCancelledError, FutureError, GlobalsError
-from .globals_capture import (assert_exportable, identify_globals,
-                              ship_function)
+from .globals_capture import identify_globals, ship_function
 from . import rng as rng_mod
 
 _ids = itertools.count(1)
@@ -271,21 +270,30 @@ class Future:
 
     def _task(self, backend: Backend) -> TaskSpec:
         shipped = None
+        sources: dict = {}
         if backend.name in ("processes", "cluster"):
-            assert_exportable(self._snapshot, backend=backend.name)
-            from .globals_capture import dumps_robust
+            # Content-addressed shipping: large globals leave the task blob
+            # as PayloadRef digests (shipped at most once per worker); the
+            # extraction doubles as the exportability scan, raising
+            # NonExportableObjectError at creation like assert_exportable.
+            from .globals_capture import (dumps_robust,
+                                          extract_payload_refs)
+            refd, sources = extract_payload_refs(
+                self._snapshot, backend=backend.name)
             shipped = dumps_robust({
-                "fn": ship_function(self._fn, self._snapshot, self._packages),
+                "fn": ship_function(self._fn, refd, self._packages,
+                                    ref_sink=sources),
                 "args": self._args, "kwargs": self._kwargs,
                 "capture_stdout": self._stdout,
                 "capture_conditions": self._conditions,
                 "seed_declared": self.seed_declared,
-            })
+            }, ref_sink=sources)
         return TaskSpec(
             task_id=self.id, fn=self._fn, args=self._args,
             kwargs=self._kwargs, label=self.label,
             capture_stdout=self._stdout, capture_conditions=self._conditions,
             seed_declared=self.seed_declared, shipped=shipped,
+            payload_sources=sources,
         )
 
     def _submit(self) -> None:
@@ -592,7 +600,14 @@ class Waiter:
 
     def wait(self, timeout: "float | None" = None) -> list[Future]:
         """Block until at least one registered future newly completed;
-        return those (empty only if ``timeout`` elapsed first)."""
+        return those (empty only if ``timeout`` elapsed first).
+
+        Delivered futures are dropped from the waiter's registry: the
+        waiter no longer pins them (or their collected runs) for the rest
+        of a long collection loop. Re-``add()``-ing a future *after* it was
+        delivered would deliver it again — callers register each future
+        once, before or during collection, never after its delivery.
+        """
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
             while not self._fresh:
@@ -604,6 +619,8 @@ class Waiter:
                         return []
                     self._cv.wait(remaining)
             fresh, self._fresh = self._fresh, []
+            for f in fresh:
+                self._known.pop(id(f), None)
             return fresh
 
 

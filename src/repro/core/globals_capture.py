@@ -28,6 +28,18 @@ Snapshot rules: immutable scalars/strings/tuples and JAX/numpy arrays are
 captured **by reference** (cheap — JAX arrays are immutable); mutable
 containers (list/dict/set/bytearray) are **copied** at creation so later
 mutation does not leak into the future, mirroring R's copy-on-assign.
+
+Shipping (process/cluster backends) is **content-addressed**: any snapshot
+value whose payload reaches ``blobstore.PAYLOAD_REF_THRESHOLD`` (~16 KiB)
+is split out of the task blob by :func:`extract_payload_refs` and replaced
+with a :class:`~.backends.blobstore.PayloadRef` digest. The bytes travel in
+a ``("put", digest, blob)`` frame at most once per worker; repeated futures
+over the same multi-MB array ship a few-hundred-byte task blob that merely
+*references* it. Workers resolve refs from a bounded LRU
+:class:`~.backends.blobstore.BlobStore` (with a ``("need", digest)``
+backfill path for evictions and cold replacement workers) before the
+function is rebuilt — see ``backends/transport.py`` for the wire protocol
+and the int8+EF array codec applied to the payload blobs.
 """
 
 from __future__ import annotations
@@ -36,6 +48,7 @@ import builtins
 import copy
 import dis
 import pickle
+import threading
 import types
 from typing import Any, Callable, Iterable
 
@@ -133,8 +146,88 @@ def assert_exportable(snapshot: dict[str, Any], *, backend: str) -> None:
 
 
 # --------------------------------------------------------------------------
+# Content-addressed payload refs (large globals ship at most once per worker)
+# --------------------------------------------------------------------------
+
+def extract_payload_refs(snapshot: dict[str, Any], *, backend: str,
+                         threshold: "int | None" = None,
+                         ) -> "tuple[dict[str, Any], dict]":
+    """Split ``snapshot`` into ``(refd_snapshot, sources)``.
+
+    Values whose payload reaches ``threshold`` (default
+    ``blobstore.PAYLOAD_REF_THRESHOLD``) are replaced by
+    :class:`~.backends.blobstore.PayloadRef` markers; ``sources`` maps each
+    digest to the :class:`~.backends.blobstore.PayloadSource` that can
+    encode it for any worker that does not hold it yet. Arrays are digested
+    over their raw bytes (memoized by object identity — repeated dispatch
+    of the same array never re-hashes it); other values are digested over
+    their robust pickle, which doubles as the exportability check the old
+    ``assert_exportable`` scan performed: an unpicklable global still
+    raises :class:`NonExportableObjectError` *at creation*.
+    """
+    from .backends import blobstore
+    if threshold is None:
+        threshold = blobstore.PAYLOAD_REF_THRESHOLD
+    out: dict[str, Any] = {}
+    sources: dict[bytes, Any] = {}
+    for name, val in snapshot.items():
+        if isinstance(val, types.ModuleType):
+            out[name] = val
+            continue
+        arr, _kind = blobstore.as_ndarray(val)
+        if arr is not None:
+            if arr.nbytes >= threshold:
+                digest = blobstore.content_digest(val)
+                sources[digest] = blobstore.PayloadSource(name, digest, val)
+                out[name] = blobstore.PayloadRef(digest)
+            else:
+                out[name] = val
+            continue
+        try:
+            blob = dumps_robust(val)
+        except Exception as exc:          # noqa: BLE001
+            raise NonExportableObjectError(
+                f"global {name!r} ({type(val).__name__}) cannot be exported "
+                f"to backend {backend!r}: {exc}") from exc
+        if len(blob) >= threshold:
+            digest = blobstore.blob_digest(blob)
+            sources[digest] = blobstore.PayloadSource(name, digest, val,
+                                                      pickled=blob)
+            out[name] = blobstore.PayloadRef(digest)
+        else:
+            out[name] = val
+    return out, sources
+
+
+# --------------------------------------------------------------------------
 # Function shipping without cloudpickle
 # --------------------------------------------------------------------------
+
+class _ResolverState(threading.local):
+    def __init__(self):
+        self.fn: Callable | None = None
+
+
+_RESOLVER = _ResolverState()
+
+
+class payload_resolver:
+    """Install the worker's PayloadRef resolver for the duration of a task
+    unpickle/unship: nested shipped functions (rebuilt *during* the outer
+    ``pickle.loads``) pick it up ambiently."""
+
+    def __init__(self, resolve: Callable):
+        self.resolve = resolve
+
+    def __enter__(self):
+        self._prev = _RESOLVER.fn
+        _RESOLVER.fn = self.resolve
+        return self
+
+    def __exit__(self, *exc):
+        _RESOLVER.fn = self._prev
+        return False
+
 
 def _fn_importable(fn: types.FunctionType) -> bool:
     """Can this function be pickled by reference (module.qualname lookup)?"""
@@ -158,34 +251,54 @@ def _rebuild_shipped(blob: bytes) -> Callable:
 
 class _ShippingPickler(pickle.Pickler):
     """Pickler that ships lambdas / local functions by marshalled code +
-    their own recursively-identified globals (no cloudpickle dependency)."""
+    their own recursively-identified globals (no cloudpickle dependency).
+
+    With a ``ref_sink`` dict, large values in nested function snapshots are
+    content-addressed exactly like top-level globals: the snapshot keeps a
+    :class:`PayloadRef` and the sink collects ``digest -> PayloadSource``
+    for the transport layer. This matters for wrappers like ``future_map``'s
+    chunk runner, where the user's function (closing over the big arrays)
+    rides along as a default argument rather than a top-level global.
+    """
+
+    def __init__(self, *args, ref_sink: "dict | None" = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._ref_sink = ref_sink
 
     def reducer_override(self, obj):
         if isinstance(obj, types.FunctionType) and not _fn_importable(obj):
             snapshot, packages = identify_globals(obj)
-            return (_rebuild_shipped, (ship_function(obj, snapshot,
-                                                     packages),))
+            if self._ref_sink is not None:
+                snapshot, nested = extract_payload_refs(
+                    snapshot, backend="shipped")
+                self._ref_sink.update(nested)
+            return (_rebuild_shipped,
+                    (ship_function(obj, snapshot, packages,
+                                   ref_sink=self._ref_sink),))
         if isinstance(obj, types.ModuleType):
             import importlib
             return (importlib.import_module, (obj.__name__,))
         return NotImplemented
 
 
-def dumps_robust(obj: Any) -> bytes:
+def dumps_robust(obj: Any, *, ref_sink: "dict | None" = None) -> bytes:
     import io
     buf = io.BytesIO()
-    _ShippingPickler(buf, protocol=pickle.HIGHEST_PROTOCOL).dump(obj)
+    _ShippingPickler(buf, protocol=pickle.HIGHEST_PROTOCOL,
+                     ref_sink=ref_sink).dump(obj)
     return buf.getvalue()
 
 
 def ship_function(fn: Callable, snapshot: dict[str, Any],
-                  packages: Iterable[str]) -> bytes:
+                  packages: Iterable[str],
+                  ref_sink: "dict | None" = None) -> bytes:
     """Serialize a callable (including lambdas/closures) for a worker process.
 
     Plain ``pickle`` cannot serialize lambdas; we marshal the code object and
     rebuild the function on the worker with its snapshot as globals — the
     moral equivalent of the paper shipping the expression + its globals.
-    Function-valued globals/defaults are shipped recursively.
+    Function-valued globals/defaults are shipped recursively (their large
+    snapshot values content-addressed into ``ref_sink`` when given).
     """
     import marshal
     code = fn.__code__
@@ -199,11 +312,17 @@ def ship_function(fn: Callable, snapshot: dict[str, Any],
         "packages": sorted(set(packages)),
         "doc": fn.__doc__,
     }
-    return dumps_robust(payload)
+    return dumps_robust(payload, ref_sink=ref_sink)
 
 
-def unship_function(blob: bytes) -> Callable:
-    """Rebuild a shipped function inside a worker process."""
+def unship_function(blob: bytes, resolve_ref: "Callable | None" = None
+                    ) -> Callable:
+    """Rebuild a shipped function inside a worker process.
+
+    ``resolve_ref(PayloadRef) -> value`` swaps content-addressed payload
+    markers in the snapshot for their decoded values (from the worker's
+    blob store) before the function's globals/closure are assembled.
+    """
     import importlib
     import marshal
     payload = pickle.loads(blob)
@@ -218,6 +337,13 @@ def unship_function(blob: bytes) -> Callable:
             pass
     closure_names = payload["closure_names"]
     snapshot = dict(payload["snapshot"])
+    if resolve_ref is None:
+        resolve_ref = _RESOLVER.fn           # ambient (nested unship)
+    if resolve_ref is not None:
+        from .backends.blobstore import PayloadRef
+        for k, v in snapshot.items():
+            if isinstance(v, PayloadRef):
+                snapshot[k] = resolve_ref(v)
     cells = tuple(types.CellType(snapshot.pop(n, None)) for n in closure_names)
     g.update(snapshot)
     fn = types.FunctionType(code, g, payload["name"],

@@ -84,29 +84,34 @@ def future_map(fn: Callable, xs: Sequence, *,
                          label=f"{label or 'map'}[{ci}]"))
 
     results: list[Any] = [None] * len(xs)
-    pending = {id(f): (f, list(slices[ci])) for ci, f in enumerate(fs)}
-    attempts = {id(f): 0 for f in fs}
+    # Keyed by the Future object itself, NOT id(f): a collected chunk
+    # future can be garbage-collected and its id reused by the very retry
+    # future that replaces it, silently corrupting attempt counts. The
+    # dicts hold strong references, so each Future is a stable, unique key.
+    pending: dict[Future, list[int]] = {f: list(slices[ci])
+                                        for ci, f in enumerate(fs)}
+    attempts: dict[Future, int] = {f: 0 for f in fs}
     # as-completed collection (paper: collect resolved futures first to free
     # workers / lower relay latency), with FutureError-driven re-dispatch.
     # One Waiter holds a completion callback per chunk future: the loop
     # sleeps on its condition variable and each completing backend pushes —
     # no poll scans, no sleep loops, retries join the same waiter.
-    waiter = Waiter(f for f, _ in pending.values())
+    waiter = Waiter(pending)
     while pending:
         for f in waiter.wait():
-            key = id(f)
-            f, idx = pending.pop(key)
-            try:
+            idx = pending.pop(f)
+            tries = attempts.pop(f)          # also drops the strong ref so
+            try:                             # collected chunks can be freed
                 vals = f.value()
             except FutureError:
-                if attempts[key] >= retries:
+                if tries >= retries:
                     raise
                 items = [xs[i] for i in idx]
                 nf = future(run_chunk, idx, items,
                             seed=seed if seed_declared else None,
                             label=f"{label or 'map'}-retry")
-                pending[id(nf)] = (nf, idx)
-                attempts[id(nf)] = attempts[key] + 1
+                pending[nf] = idx
+                attempts[nf] = tries + 1
                 waiter.add(nf)
                 continue
             for i, v in zip(idx, vals):

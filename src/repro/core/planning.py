@@ -102,13 +102,68 @@ _SEQUENTIAL = BackendSpec("sequential")
 class _PlanState(threading.local):
     def __init__(self):
         self.stack: tuple[BackendSpec, ...] | None = None  # thread override
+        # lazily-instantiated backend for nested contexts, cached on the
+        # TLS stack entry and torn down when use_nested_stack exits
+        self.nested_backend: Backend | None = None
+        self.nested_spec: BackendSpec | None = None
 
 
 _TLS = _PlanState()
 _global_stack: tuple[BackendSpec, ...] = (_SEQUENTIAL,)
 _active_backend: Backend | None = None
 _active_spec: BackendSpec | None = None
+_active_key: "tuple | None" = None
 _lock = threading.RLock()
+
+# --------------------------------------------------------------------------
+# Warm backend pool: re-plan()ing to a previously used BackendSpec
+# re-attaches to its live workers (blob caches intact, no jax re-import)
+# instead of cold-starting a new pool. Only worker-owning backends are
+# parked; explicit shutdown() still tears everything down.
+# --------------------------------------------------------------------------
+
+#: parked backends, key -> Backend (insertion-ordered for LRU eviction)
+_WARM_POOL: "dict[tuple, Backend]" = {}
+_WARM_POOL_MAX = int(os.environ.get("REPRO_WARM_POOL_MAX", "3"))
+#: backends worth keeping warm (expensive worker startup)
+_POOLABLE = ("processes", "cluster")
+
+
+def _backend_key(head: BackendSpec, stack: "tuple[BackendSpec, ...]"
+                 ) -> tuple:
+    """Identity under which a live backend may be reused: same head spec,
+    same nested stack (workers captured it at init), same session seed
+    (worker RNG streams derive from it)."""
+    from . import rng as rng_mod
+    nested = stack[1:] if len(stack) > 1 else (_SEQUENTIAL,)
+    return (head, nested, rng_mod._session_seed)
+
+
+def _park_active_locked() -> list:
+    """Move the active backend into the warm pool (callers hold _lock).
+
+    Returns the backends displaced in the process — non-poolable actives,
+    stale pool entries, LRU evictions — for the *caller* to shut down
+    after releasing the lock (a cluster shutdown joins threads and reaps
+    processes for seconds; holding the planning lock through that would
+    stall every concurrent plan()/active_backend())."""
+    global _active_backend, _active_spec, _active_key
+    doomed: list = []
+    backend, key = _active_backend, _active_key
+    _active_backend = _active_spec = _active_key = None
+    if backend is None:
+        return doomed
+    if key is None or key[0].name not in _POOLABLE:
+        doomed.append(backend)
+        return doomed
+    stale = _WARM_POOL.pop(key, None)
+    if stale is not None:
+        doomed.append(stale)
+    _WARM_POOL[key] = backend
+    while len(_WARM_POOL) > _WARM_POOL_MAX:
+        oldest = next(iter(_WARM_POOL))
+        doomed.append(_WARM_POOL.pop(oldest))
+    return doomed
 
 
 def _normalize(levels) -> tuple[BackendSpec, ...]:
@@ -125,25 +180,29 @@ def plan(levels: "str | BackendSpec | Sequence[BackendSpec | str]" = "sequential
     """Set the plan stack; returns the previous stack (like R's plan()).
 
     ``plan("threads", workers=4)`` is sugar for ``plan(spec("threads",
-    workers=4))``. Changing the plan tears down the previously active
-    backend (workers are shut down) — re-planning mid-run is how elastic
-    scaling is expressed.
+    workers=4))``. Changing the plan *parks* the previously active
+    worker-owning backend in a small warm pool instead of killing it:
+    re-planning back to the same spec (same nested stack and session seed)
+    re-attaches to the live workers — their jax imports and payload blob
+    caches intact — so ``threads -> cluster -> threads`` round-trips cost
+    microseconds, not worker cold-starts. Call :func:`shutdown` to really
+    release every worker.
     """
-    global _global_stack, _active_backend, _active_spec
+    global _global_stack
     if kwargs:
         if not isinstance(levels, (str, BackendSpec)):
             raise ValueError("kwargs only allowed with a single backend level")
         levels = tweak(levels if isinstance(levels, BackendSpec)
                        else spec(levels), **kwargs)
     new = _normalize(levels)
+    doomed: list = []
     with _lock:
         prev = _global_stack
         if new != prev:
-            if _active_backend is not None:
-                _active_backend.shutdown()
-                _active_backend = None
-                _active_spec = None
+            doomed = _park_active_locked()
             _global_stack = new
+    for b in doomed:
+        b.shutdown()
     return prev
 
 
@@ -160,43 +219,70 @@ def nested_stack() -> tuple[BackendSpec, ...]:
 
 class use_nested_stack:
     """Context manager installed by backends around in-process evaluation so
-    any future created *inside* a future sees the popped stack."""
+    any future created *inside* a future sees the popped stack.
+
+    The backend lazily instantiated for the nested level is cached on the
+    TLS entry (one per context, not one per ``active_backend()`` call) and
+    shut down when the context exits — nested levels no longer leak a
+    worker pool per future creation.
+    """
 
     def __init__(self, stack: tuple[BackendSpec, ...] | None = None):
         self.stack = stack if stack is not None else nested_stack()
 
     def __enter__(self):
-        self._prev = _TLS.stack
+        self._prev = (_TLS.stack, _TLS.nested_backend, _TLS.nested_spec)
         _TLS.stack = self.stack
+        _TLS.nested_backend = None
+        _TLS.nested_spec = None
         return self
 
     def __exit__(self, *exc):
-        _TLS.stack = self._prev
+        created = _TLS.nested_backend
+        _TLS.stack, _TLS.nested_backend, _TLS.nested_spec = self._prev
+        if created is not None:
+            created.shutdown()
         return False
 
 
 def active_backend() -> Backend:
     """Instantiate (lazily) the backend for the current stack head."""
-    global _active_backend, _active_spec
+    global _active_backend, _active_spec, _active_key
     head = current_stack()[0]
     if _TLS.stack is not None:
-        # Nested context: instantiate a private backend (not cached
-        # globally) — nested levels are short-lived and sequential by
-        # default, so this is cheap.
-        return head.instantiate()
-    with _lock:
-        if _active_spec != head or _active_backend is None:
-            if _active_backend is not None:
-                _active_backend.shutdown()
-            _active_backend = head.instantiate()
-            _active_spec = head
-        return _active_backend
+        # Nested context: a private backend, cached on the TLS stack entry
+        # so repeated future creation inside one context reuses it; the
+        # enclosing use_nested_stack tears it down on exit.
+        if _TLS.nested_spec != head or _TLS.nested_backend is None:
+            if _TLS.nested_backend is not None:
+                _TLS.nested_backend.shutdown()
+            _TLS.nested_backend = head.instantiate()
+            _TLS.nested_spec = head
+        return _TLS.nested_backend
+    doomed: list = []
+    try:
+        with _lock:
+            if _active_spec != head or _active_backend is None:
+                doomed = _park_active_locked()
+                key = _backend_key(head, _global_stack)
+                warm = _WARM_POOL.pop(key, None)
+                _active_backend = warm if warm is not None \
+                    else head.instantiate()
+                _active_spec, _active_key = head, key
+            return _active_backend
+    finally:
+        for b in doomed:
+            b.shutdown()
 
 
 def shutdown() -> None:
-    global _active_backend, _active_spec
+    """Release every worker: the active backend *and* the warm pool."""
+    global _active_backend, _active_spec, _active_key
     with _lock:
+        backends = list(_WARM_POOL.values())
+        _WARM_POOL.clear()
         if _active_backend is not None:
-            _active_backend.shutdown()
-            _active_backend = None
-            _active_spec = None
+            backends.append(_active_backend)
+            _active_backend = _active_spec = _active_key = None
+    for b in backends:
+        b.shutdown()

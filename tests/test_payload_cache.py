@@ -1,0 +1,403 @@
+"""Content-addressed globals shipping: the blob store, the int8+EF payload
+codec, zero-copy OOB frames, the put/need backfill protocol, and the warm
+backend pool.
+
+These are the acceptance tests for the payload pipeline: repeated dispatch
+of a task over the same multi-MB global must stop re-sending the world
+(bytes-on-wire drop ≥5x after the first send), mutation of a mutable global
+between futures must invalidate the digest, eviction and self-healed
+replacement workers must stay correct through the ``("need", digest)``
+backfill, and ``plan()`` round-trips must re-attach to live workers.
+"""
+
+import os
+import pickle
+import socket
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as rc
+from repro.core import future, future_map, value
+from repro.core import planning as plan_mod
+from repro.core.backends import transport
+from repro.core.backends.blobstore import (BlobStore, PayloadRef,
+                                           PAYLOAD_REF_THRESHOLD,
+                                           blob_digest, content_digest)
+
+
+# --------------------------------------------------------------------------
+# BlobStore unit behaviour
+# --------------------------------------------------------------------------
+
+def test_blobstore_lru_eviction_by_bytes():
+    store = BlobStore(max_bytes=100)
+    store.put(b"a" * 16, b"x" * 40)
+    store.put(b"b" * 16, b"y" * 40)
+    assert b"a" * 16 in store and b"b" * 16 in store
+    store.get(b"a" * 16)                    # touch: a becomes most-recent
+    store.put(b"c" * 16, b"z" * 40)         # over budget: evict LRU (b)
+    assert b"b" * 16 not in store
+    assert b"a" * 16 in store and b"c" * 16 in store
+    assert store.stats()["evictions"] == 1
+
+
+def test_blobstore_resolve_caches_decoded_arrays():
+    store = BlobStore()
+    arr = np.arange(6000, dtype=np.float32)
+    digest = content_digest(arr)
+    store.put(digest, transport.encode_payload(arr))
+    v1 = store.resolve(digest)
+    v2 = store.resolve(digest)
+    assert v1 is v2                          # decoded-object cache hit
+    assert not v1.flags.writeable            # handed out read-only
+    np.testing.assert_allclose(v1, arr, atol=float(np.abs(arr).max()) / 127)
+
+
+def test_content_digest_is_memoized_and_content_addressed():
+    a = np.random.default_rng(0).standard_normal(5000).astype(np.float32)
+    assert content_digest(a) == content_digest(a)
+    assert content_digest(a) == content_digest(a.copy())   # same content
+    b = a.copy()
+    b[0] += 1.0
+    assert content_digest(a) != content_digest(b)          # new content
+
+
+# --------------------------------------------------------------------------
+# Payload codec: int8+EF for float arrays, raw fallback, bounded error
+# --------------------------------------------------------------------------
+
+def test_int8_codec_compresses_float32_at_least_3_5x():
+    x = np.random.default_rng(1).standard_normal(1 << 16).astype(np.float32)
+    raw = len(pickle.dumps(x, pickle.HIGHEST_PROTOCOL))
+    blob = transport.encode_payload(x)
+    assert blob[0] == transport.P_INT8
+    assert raw >= 3.5 * len(blob), (raw, len(blob))
+
+
+def test_int8_codec_round_trip_error_is_bounded():
+    """Conformance bound: per-tensor symmetric int8 with fp32 scale keeps
+    |x - deq(q(x))| <= max|x|/127 elementwise (half a quantization step is
+    the ideal; a full step is the safe contract)."""
+    rng = np.random.default_rng(2)
+    for scale_exp in (-3, 0, 4):
+        x = (rng.standard_normal(1 << 14) * 10.0 ** scale_exp) \
+            .astype(np.float32)
+        got, cacheable = transport.decode_payload(transport.encode_payload(x))
+        assert cacheable
+        bound = float(np.abs(x).max()) / 127 + 1e-9
+        assert float(np.abs(got - x).max()) <= bound
+
+
+def test_error_feedback_reinjects_quantization_error():
+    """Shipping an evolving tensor under one global name accumulates the
+    EF residual: the *sum* of dequantized updates tracks the sum of true
+    updates much closer than independent quantization does."""
+    transport.reset_array_codec_state()
+    rng = np.random.default_rng(3)
+    steps = [rng.standard_normal(4096).astype(np.float32) for _ in range(8)]
+    total_true = np.zeros(4096, np.float32)
+    total_ef = np.zeros(4096, np.float32)
+    total_plain = np.zeros(4096, np.float32)
+    for s in steps:
+        total_true += s
+        ef_val, _ = transport.decode_payload(
+            transport.encode_payload(s, name="ef-global"))
+        total_ef += ef_val
+        plain_val, _ = transport.decode_payload(
+            transport.encode_payload(s))            # no name -> no EF
+        total_plain += plain_val
+    err_ef = float(np.abs(total_ef - total_true).mean())
+    err_plain = float(np.abs(total_plain - total_true).mean())
+    assert err_ef < err_plain
+    transport.reset_array_codec_state()
+
+
+def test_non_float_arrays_ship_raw_and_lossless():
+    x = np.arange(20000, dtype=np.int64)
+    blob = transport.encode_payload(x)
+    assert blob[0] == transport.P_RAWARR
+    got, cacheable = transport.decode_payload(blob)
+    assert cacheable
+    np.testing.assert_array_equal(got, x)
+    assert not got.flags.writeable
+
+
+def test_int8_codec_can_be_disabled(monkeypatch):
+    monkeypatch.setattr(transport, "ARRAY_CODEC_INT8", False)
+    x = np.random.default_rng(4).standard_normal(8192).astype(np.float32)
+    blob = transport.encode_payload(x)
+    assert blob[0] == transport.P_RAWARR
+    got, _ = transport.decode_payload(blob)
+    np.testing.assert_array_equal(got, x)    # lossless fallback
+
+
+def test_large_compressible_pickle_payloads_ship_zlibbed():
+    """Non-array payloads travel out-of-band (no frame-layer zlib pass), so
+    compressible pickles ≥64 KiB compress at the payload-codec layer."""
+    val = {"toks": ["token-%d" % (i % 100) for i in range(20_000)]}
+    raw = len(pickle.dumps(val, pickle.HIGHEST_PROTOCOL))
+    blob = transport.encode_payload(val)
+    assert blob[0] == transport.P_ZPICKLE
+    assert len(blob) < raw / 2
+    got, cacheable = transport.decode_payload(blob)
+    assert got == val
+    assert not cacheable
+
+
+def test_pickle_payloads_round_trip():
+    val = {"k": list(range(6000))}
+    blob = transport.encode_payload(val, pickled=None)
+    assert blob[0] == transport.P_PICKLE
+    got, cacheable = transport.decode_payload(blob)
+    assert got == val
+    assert not cacheable                     # mutable: fresh per task
+
+
+# --------------------------------------------------------------------------
+# Zero-copy OOB frames
+# --------------------------------------------------------------------------
+
+def test_array_frames_ship_out_of_band():
+    arr = np.random.default_rng(5).standard_normal(1 << 15) \
+        .astype(np.float32)
+    payload = ("result", 9, arr)
+    blob = transport.encode_frame(payload)
+    assert blob[8] == 2                      # OOB frame codec
+    # framing overhead stays tiny: no pickle copy of the array body
+    assert len(blob) < arr.nbytes + 4096
+
+    a, b = socket.socketpair()
+    transport.send_frame(a, payload)
+    got = transport.recv_frame(b)
+    assert got[0] == "result" and got[1] == 9
+    np.testing.assert_array_equal(got[2], arr)
+
+    transport.send_frame(a, payload)         # and through the select path
+    reader = transport.FrameReader(b)
+    frames = []
+    while not frames:
+        frames += reader.feed()
+    np.testing.assert_array_equal(frames[0][2], arr)
+    a.close()
+    b.close()
+
+
+def test_frame_reader_bulk_path_reassembles_dripped_large_frame():
+    """Once a large frame's header is parsed, the reader switches to
+    preallocated recv_into; drip-fed chunks still reassemble exactly."""
+    a, b = socket.socketpair()
+    body = os.urandom(300_000)               # incompressible: raw codec
+    blob = transport.encode_frame(("task", 1, body))
+    reader = transport.FrameReader(b)
+    out = []
+    for i in range(0, len(blob), 8192):      # one feed per delivered chunk
+        a.sendall(blob[i:i + 8192])
+        out += reader.feed()
+    assert out == [("task", 1, body)]
+    assert reader._bulk is None and not reader._buf
+    a.close()
+    b.close()
+
+
+# --------------------------------------------------------------------------
+# End-to-end: cache hits, invalidation, eviction/backfill, self-heal
+# --------------------------------------------------------------------------
+
+BIG_N = 200_000                              # 800 KB of float32
+
+
+@pytest.fixture
+def cluster1():
+    rc.plan("cluster", workers=1)
+    yield rc.active_backend()
+    rc.shutdown()
+
+
+def test_repeated_future_map_hits_the_blob_cache(cluster1):
+    big = np.sin(np.arange(BIG_N, dtype=np.float32))
+    expected = float(np.abs(big).sum())
+    tol = BIG_N * float(np.abs(big).max()) / 127
+
+    transport.reset_wire_stats()
+    out1 = future_map(lambda i: float(np.abs(big).sum()) + i, [0, 1])
+    first = transport.wire_stats()["bytes_sent"]
+    out2 = future_map(lambda i: float(np.abs(big).sum()) + i, [2, 3])
+    second = transport.wire_stats()["bytes_sent"] - first
+
+    for got, off in zip(out1 + out2, [0, 1, 2, 3]):
+        assert abs(got - (expected + off)) <= tol
+    # acceptance: >=5x fewer bytes on the wire once the array is cached
+    assert first >= 5 * max(second, 1), (first, second)
+
+
+def test_mutating_a_global_between_futures_invalidates_the_digest(cluster1):
+    data = list(range(8000))                 # mutable: deep-copied, pickled
+    v1 = value(future(lambda: sum(data)))
+    assert v1 == sum(range(8000))
+    data[0] = 10_000                         # mutate -> new content digest
+    transport.reset_wire_stats()
+    v2 = value(future(lambda: sum(data)))
+    assert v2 == v1 + 10_000                 # fresh payload was shipped
+    assert transport.wire_stats()["bytes_sent"] > len(pickle.dumps(data)) / 2
+
+
+def test_eviction_triggers_need_backfill():
+    """Worker blob store bounded to ~1.5 payloads: shipping A, then B, then
+    A again forces the ("need", digest) path; values stay correct."""
+    a = np.arange(50_000, dtype=np.int64)            # 400 KB, lossless codec
+    b = np.arange(50_000, 100_000, dtype=np.int64)
+    rc.plan("cluster", workers=1, blob_store_bytes=600_000)
+    try:
+        assert value(future(lambda: int(a[-1]))) == 49_999
+        assert value(future(lambda: int(b[-1]))) == 99_999   # evicts a
+        assert value(future(lambda: int(a[0]) + int(a[-1]))) == 49_999
+        assert value(future(lambda: int(b[0]))) == 50_000
+    finally:
+        rc.shutdown()
+
+
+def test_task_refs_exceeding_store_bound_survive_via_pinning():
+    """One task whose refs collectively exceed the worker store bound must
+    not thrash: the backfill put for one ref would otherwise evict its
+    sibling mid-task (crash/respawn loop). Pinning lets the store exceed
+    its bound by the task's working set."""
+    a = np.arange(50_000, dtype=np.int64)            # 400 KB each
+    b = np.arange(50_000, dtype=np.int64) * 2
+    rc.plan("cluster", workers=1, blob_store_bytes=600_000)
+    try:
+        assert value(future(lambda: int(a[1]) + int(b[1]))) == 3
+        assert value(future(lambda: int(a[2]) + int(b[2]))) == 6
+    finally:
+        rc.shutdown()
+
+
+def test_self_healed_worker_starts_with_cold_cache(cluster1):
+    big = np.arange(100_000, dtype=np.int64)         # 800 KB lossless
+    assert value(future(lambda: int(big[-1]))) == 99_999
+    transport.reset_wire_stats()
+    assert value(future(lambda: int(big[-1]))) == 99_999     # cache hit
+    hit = transport.wire_stats()["bytes_sent"]
+    assert hit < 100_000
+
+    with pytest.raises(rc.WorkerDiedError):
+        value(future(lambda: os._exit(31)))          # kill; pool self-heals
+
+    transport.reset_wire_stats()
+    assert value(future(lambda: int(big[-1]))) == 99_999
+    cold = transport.wire_stats()["bytes_sent"]
+    assert cold > big.nbytes / 2                     # full re-ship happened
+
+
+def test_payload_refs_only_split_large_globals():
+    small = np.arange(16, dtype=np.float32)
+    big = np.arange(PAYLOAD_REF_THRESHOLD, dtype=np.float32)
+    from repro.core.globals_capture import extract_payload_refs
+    refd, sources = extract_payload_refs(
+        {"small": small, "big": big, "n": 3}, backend="cluster")
+    assert refd["small"] is small and refd["n"] == 3
+    assert isinstance(refd["big"], PayloadRef)
+    assert set(sources) == {refd["big"].digest}
+
+
+def test_unpicklable_global_still_raises_at_creation():
+    sock_obj = socket.socket()
+    try:
+        rc.plan("processes", workers=1)
+        with pytest.raises(rc.NonExportableObjectError, match="sock"):
+            future(lambda: sock_obj.fileno())
+    finally:
+        sock_obj.close()
+        rc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# Conformance: a shipped float32 global is dequantized within bound on
+# every external-process backend
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend_name", ["processes", "cluster"])
+def test_shipped_float_global_error_bounded(backend_name):
+    x = np.random.default_rng(7).standard_normal(40_000).astype(np.float32)
+    rc.plan(backend_name, workers=1)
+    try:
+        got = value(future(lambda: x + 0.0))
+        bound = float(np.abs(x).max()) / 127 + 1e-9
+        assert float(np.abs(np.asarray(got) - x).max()) <= bound
+    finally:
+        rc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# Warm backend pool across plan() changes
+# --------------------------------------------------------------------------
+
+def test_replan_reuses_live_cluster_workers():
+    rc.plan("cluster", workers=2)
+    b1 = rc.active_backend()
+    pids = sorted(b1.worker_pids())
+    rc.plan("threads", workers=2)
+    assert value(future(lambda: 1)) == 1
+    rc.plan("cluster", workers=2)
+    b2 = rc.active_backend()
+    assert b2 is b1                          # no cold start
+    assert sorted(b2.worker_pids()) == pids  # the same live workers
+    assert value(future(lambda: 2)) == 2
+    rc.shutdown()
+
+
+def test_replan_keeps_worker_blob_caches_warm():
+    big = np.arange(120_000, dtype=np.int64)
+    rc.plan("cluster", workers=1)
+    try:
+        assert value(future(lambda: int(big[0]))) == 0   # ships the payload
+        rc.plan("threads", workers=1)
+        rc.plan("cluster", workers=1)
+        transport.reset_wire_stats()
+        assert value(future(lambda: int(big[1]))) == 1
+        # the re-attached worker still holds the blob: no re-ship
+        assert transport.wire_stats()["bytes_sent"] < 100_000
+    finally:
+        rc.shutdown()
+
+
+def test_explicit_shutdown_really_tears_down_the_pool():
+    rc.plan("cluster", workers=1)
+    pids = rc.active_backend().worker_pids()
+    rc.plan("sequential")                    # parks the cluster backend
+    rc.shutdown()                            # kills parked backends too
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        if not any(_pid_alive(p) for p in pids):
+            break
+        time.sleep(0.05)
+    assert not any(_pid_alive(p) for p in pids)
+
+
+def _pid_alive(pid) -> bool:
+    try:
+        os.kill(pid, 0)
+    except (ProcessLookupError, TypeError):
+        return False
+    except PermissionError:
+        return True
+    return True
+
+
+def test_different_spec_is_not_reused():
+    rc.plan("cluster", workers=1)
+    b1 = rc.active_backend()
+    rc.plan("cluster", workers=2)            # different spec -> new backend
+    b2 = rc.active_backend()
+    assert b2 is not b1
+    rc.shutdown()
+
+
+def test_nested_backend_is_cached_and_torn_down():
+    seq = plan_mod.spec("threads", workers=1)
+    with plan_mod.use_nested_stack((seq,)):
+        a = plan_mod.active_backend()
+        assert plan_mod.active_backend() is a    # cached on the TLS entry
+    with plan_mod.use_nested_stack((seq,)):
+        assert plan_mod.active_backend() is not a   # fresh per context
