@@ -6,8 +6,11 @@ future, which is quadratically wasteful for the dominant workload — repeated
 module is the driver/worker halves of the fix:
 
 * :func:`content_digest` — a 16-byte blake2b identity for a snapshot value.
-  Arrays are hashed over ``(kind, dtype, shape, raw bytes)`` without ever
-  being pickled; everything else is hashed over its robust pickle. Identical
+  Arrays are hashed over ``(kind, dtype, shape, codec, raw bytes)`` without
+  ever being pickled (the active array codec is part of the identity: a
+  digest names the bytes that ship, so toggling ``set_array_codec`` never
+  replays a blob encoded under the other codec); everything else is hashed
+  over its robust pickle. Identical
   content gets the same digest no matter how many futures reference it, and
   a *mutated* mutable container (list/dict/set — deep-copied by the
   snapshot at creation) gets a new digest automatically — content
@@ -134,17 +137,44 @@ class _DigestMemo:
         with self._lock:
             self._memo[key] = (wr, digest)
 
+    def clear(self) -> None:
+        """Drop every memoized digest (the array codec changed, so cached
+        digests no longer identify the bytes that would ship)."""
+        with self._lock:
+            self._memo.clear()
+
 
 _MEMO = _DigestMemo()
 
 
 def _array_digest(arr, kind: str) -> bytes:
     import numpy as np
+    from . import transport
     arr = np.ascontiguousarray(arr)
+    # The digest identifies the *bytes that ship*, not just the content:
+    # the codec that would encode this array is folded in so toggling
+    # ``set_array_codec`` can never replay a blob encoded under the other
+    # codec from any digest-keyed cache (driver store, worker stores,
+    # per-worker ``known`` sets).
+    codec = "int8" if (transport.ARRAY_CODEC_INT8
+                       and arr.dtype.name in ("float32", "bfloat16")) \
+        else "raw"
     h = hashlib.blake2b(digest_size=16)
-    h.update(f"{kind}|{arr.dtype.str}|{arr.shape}".encode())
-    h.update(memoryview(arr).cast("B"))
+    h.update(f"{kind}|{arr.dtype.str}|{arr.shape}|{codec}".encode())
+    h.update(raw_byte_view(arr))
     return h.digest()
+
+
+def raw_byte_view(arr) -> memoryview:
+    """Flat uint8 memoryview of a C-contiguous array's bytes. Dtypes that
+    do not export the buffer protocol (ml_dtypes bfloat16 raises
+    ``ValueError: cannot include dtype 'E' in a buffer``) go through a
+    zero-copy uint8 view instead."""
+    try:
+        return memoryview(arr).cast("B")
+    except (ValueError, TypeError):
+        import numpy as np
+        return memoryview(arr.view(np.uint8)).cast("B")
 
 
 def blob_digest(blob: bytes) -> bytes:
@@ -174,7 +204,7 @@ class PayloadSource:
     error-feedback codec), digest, the live value, and an optional
     pre-computed pickle (non-array payloads already paid for it)."""
 
-    __slots__ = ("name", "digest", "value", "pickled")
+    __slots__ = ("name", "digest", "value", "pickled", "int8", "blob")
 
     def __init__(self, name: str, digest: bytes, value: Any,
                  pickled: "bytes | None" = None):
@@ -182,17 +212,52 @@ class PayloadSource:
         self.digest = digest
         self.value = value
         self.pickled = pickled
+        self.blob = None
+        # ``digest`` folded in the codec active *now* (``_array_digest``);
+        # capture that codec so a ``set_array_codec`` toggle between future
+        # creation and (possibly lazy) dispatch cannot cache a blob encoded
+        # under the other codec beneath this digest
+        from . import transport
+        self.int8 = transport.ARRAY_CODEC_INT8
 
     def encode(self) -> bytes:
         """Encoded blob for the wire, served from the driver store when the
         digest was encoded before (so every worker sees identical bytes)."""
+        from . import transport
+        blob = self.blob
+        if blob is not None:
+            return blob
         blob = DRIVER_STORE.get(self.digest)
         if blob is None:
-            from . import transport
             blob = transport.encode_payload(self.value, name=self.name,
-                                            pickled=self.pickled)
+                                            pickled=self.pickled,
+                                            int8=self.int8,
+                                            digest=self.digest)
             DRIVER_STORE.put(self.digest, blob)
+        if blob[0] == transport.P_INT8:
+            # int8+EF bytes depend on mutable residual state (the per-name
+            # replay cache is bounded), so pin them on the source for the
+            # task's lifetime: a backfill for an in-flight digest must
+            # replay these exact bytes no matter what the driver store and
+            # EF cache have evicted since. Deterministic codecs (raw array,
+            # pickle) re-encode identically and need no pin.
+            self.blob = bytes(blob) if not isinstance(blob, bytes) else blob
         return blob
+
+
+def encode_backfill(src: "PayloadSource | None") -> "bytes | None":
+    """Encode one pinned source to answer a worker's ``("need", digest)``;
+    ``None`` means the caller must send ``("nak", digest)``. *Any* encode
+    failure (pickling/codec error) maps to nak rather than raising: the
+    worker is blocked in ``ensure_refs`` with its heartbeats still flowing,
+    so nothing else would ever unstick the task. Shared by the processes
+    and cluster drivers so the put-or-nak semantics cannot drift."""
+    if src is None:
+        return None
+    try:
+        return src.encode()
+    except Exception:                        # noqa: BLE001
+        return None
 
 
 # --------------------------------------------------------------------------
@@ -240,8 +305,15 @@ class BlobStore:
             old = self._blobs.pop(digest, None)
             if old is not None:
                 self._bytes -= len(old)
+                if old != blob:
+                    # byte-different replacement for a digest: drop the
+                    # decoded-object cache entry or resolve() would keep
+                    # serving the value decoded from the old bytes
+                    self._objects.pop(digest, None)
             self._blobs[digest] = blob
             self._bytes += len(blob)
+            if self._bytes <= self.max_bytes:    # common case: no O(n) scan
+                return
             evictable = [d for d in self._blobs if d not in self._pins]
             for victim in evictable:
                 if self._bytes <= self.max_bytes or len(self._blobs) <= 1:

@@ -50,6 +50,7 @@ from ..errors import ChannelError, FutureCancelledError, WorkerDiedError
 from .. import planning as plan_mod
 from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
                    register_backend)
+from .blobstore import encode_backfill
 from .transport import FrameReader, send_frame
 
 
@@ -346,16 +347,21 @@ class ClusterBackend(EventWaitMixin, Backend):
                 # multi-MB blob must not stall the select loop (heartbeats
                 # of every other worker would sit unread past their
                 # timeout), so the transfer runs on its own thread; a
-                # failed send is left for the loop to discover as EOF.
+                # failed send is left for the loop to discover as EOF, but
+                # an encode failure (pickling/codec error) must nak — the
+                # worker is blocked in ensure_refs and its heartbeats keep
+                # flowing, so nothing else would ever unstick the task.
                 h, digest = w.busy, frame[1]
                 src = h.sources.get(digest) if h is not None else None
 
                 def _serve(w=w, digest=digest, src=src):
+                    blob = encode_backfill(src)
                     try:
-                        if src is not None:
+                        if blob is not None:
                             send_frame(w.sock,
-                                       ("put", digest, pickle.PickleBuffer(
-                                           src.encode())), w.send_lock)
+                                       ("put", digest,
+                                        pickle.PickleBuffer(blob)),
+                                       w.send_lock)
                             w.known.add(digest)
                         else:
                             send_frame(w.sock, ("nak", digest), w.send_lock)
@@ -477,15 +483,28 @@ class ClusterBackend(EventWaitMixin, Backend):
         worker = self._checkout()
         worker.busy = handle
         handle.worker = worker
+        # Encode payloads this worker does not hold yet *before* sending
+        # anything: an encode failure (pickling/codec error) then fails
+        # this future cleanly and returns the still-healthy worker to the
+        # pool, instead of leaking a checked-out worker mid-dispatch.
+        # (A digest the worker evicted comes back via the ("need", d) path.)
         try:
-            # ship content-addressed payloads this worker does not hold yet
-            # (a digest it evicted comes back via the ("need", d) path)
-            for digest, src in task.payload_sources.items():
-                if digest not in worker.known:
-                    send_frame(worker.sock,
-                               ("put", digest, pickle.PickleBuffer(
-                                   src.encode())), worker.send_lock)
-                    worker.known.add(digest)
+            puts = [(digest, src.encode())
+                    for digest, src in task.payload_sources.items()
+                    if digest not in worker.known]
+        except Exception as exc:                     # noqa: BLE001
+            handle.error = exc
+            # _finish does the full healthy-worker return (shrink-debt /
+            # retire bookkeeping, idle requeue, completion push) — the same
+            # path a normal result takes
+            self._finish(worker, handle)
+            return handle
+        try:
+            for digest, pblob in puts:
+                send_frame(worker.sock,
+                           ("put", digest, pickle.PickleBuffer(pblob)),
+                           worker.send_lock)
+                worker.known.add(digest)
             send_frame(worker.sock,
                        ("task", task.task_id, blob, task.refs),
                        worker.send_lock)

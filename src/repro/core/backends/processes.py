@@ -35,6 +35,7 @@ from ..globals_capture import ship_function
 from .. import planning as plan_mod
 from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
                    register_backend)
+from .blobstore import encode_backfill
 
 
 class _Worker:
@@ -189,13 +190,34 @@ class ProcessBackend(EventWaitMixin, Backend):
             try:
                 blob = task.shipped
                 assert blob is not None, "process backend requires shipped fn"
-                # content-addressed payloads: ship what this worker lacks
-                for digest, src in task.payload_sources.items():
-                    if digest not in worker.known:
-                        worker.parent_conn.send(("put", digest, src.encode()))
+                # content-addressed payloads: ship what this worker lacks.
+                # Encode before sending so an encode failure fails the
+                # future with the real error (worker stays healthy) rather
+                # than completing the handle with neither run nor error.
+                try:
+                    puts = [(digest, src.encode())
+                            for digest, src in task.payload_sources.items()
+                            if digest not in worker.known]
+                except Exception as exc:             # noqa: BLE001
+                    handle.error = exc
+                    return
+                try:
+                    for digest, pblob in puts:
+                        worker.parent_conn.send(("put", digest, pblob))
                         worker.known.add(digest)
-                worker.parent_conn.send(
-                    ("task", task.task_id, blob, task.refs))
+                    worker.parent_conn.send(
+                        ("task", task.task_id, blob, task.refs))
+                except OSError:
+                    # worker died while idle (e.g. OOM-killed): the pipe
+                    # send raises EPIPE — surface WorkerDiedError and mark
+                    # the worker unhealthy so _checkin self-heals, exactly
+                    # like a death detected on the recv side below
+                    healthy = False
+                    handle.error = WorkerDiedError(
+                        f"worker {worker.wid} died at dispatch of future "
+                        f"{task.label or task.task_id!r}",
+                        future_label=task.label, worker=worker.wid)
+                    return
                 while True:
                     try:
                         msg = worker.parent_conn.recv()
@@ -211,10 +233,10 @@ class ProcessBackend(EventWaitMixin, Backend):
                             handle.immediate.append(msg[2])
                     elif msg[0] == "need":
                         # blob-store backfill (LRU eviction on the worker)
-                        src = task.payload_sources.get(msg[1])
-                        if src is not None:
-                            worker.parent_conn.send(
-                                ("put", msg[1], src.encode()))
+                        pblob = encode_backfill(
+                            task.payload_sources.get(msg[1]))
+                        if pblob is not None:
+                            worker.parent_conn.send(("put", msg[1], pblob))
                             worker.known.add(msg[1])
                         else:
                             worker.parent_conn.send(("nak", msg[1]))

@@ -51,11 +51,16 @@ Payload blobs (the ``put`` bodies) have their *own* 1-byte codec:
                      repeatedly shipped, slowly-evolving tensors do not
                      accumulate bias. Decoded arrays are handed out
                      read-only and cached by digest on the worker.
-  ``2`` raw array  — other ndarrays: dtype/shape header + raw bytes
+  ``2`` raw array  — ndarrays: dtype/shape header + raw bytes
                      (no pickle round-trip, zero-copy on the wire)
 
-Set ``REPRO_ARRAY_CODEC=raw`` (or flip :data:`ARRAY_CODEC_INT8` off) to ship
-float arrays losslessly via codec 2 instead.
+The int8+EF codec is **lossy** (one quantization step of error per ship),
+which would break backend transparency — the same program must compute the
+same numbers under ``plan("cluster")`` as under ``plan("sequential")`` —
+so it is strictly opt-in: float arrays ship losslessly via codec 2 by
+default. Set ``REPRO_ARRAY_CODEC=int8`` in the environment or call
+:func:`set_array_codec` ``("int8")`` to enable it for workloads that
+tolerate quantization (gradient/parameter shipping).
 
 Two read paths, both quadratic-copy-free:
 
@@ -78,6 +83,7 @@ import pickle
 import struct
 import threading
 import zlib
+from collections import OrderedDict
 from typing import Any
 
 from ..errors import ChannelError
@@ -104,8 +110,30 @@ _RAW, _ZLIB, _OOB = 0, 1, 2
 # payload-blob codecs (first byte of a ``put`` body)
 P_PICKLE, P_INT8, P_RAWARR, P_ZPICKLE = 0, 1, 2, 3
 
-#: route float32/bf16 ndarray payloads through int8+EF (vs lossless raw)
-ARRAY_CODEC_INT8 = os.environ.get("REPRO_ARRAY_CODEC", "int8") != "raw"
+#: route float32/bf16 ndarray payloads through the lossy int8+EF codec.
+#: Off by default — backends must be numerically transparent (processes/
+#: cluster may not silently compute on different values than sequential
+#: would), so quantization is an explicit opt-in via REPRO_ARRAY_CODEC=int8
+#: or :func:`set_array_codec`.
+ARRAY_CODEC_INT8 = os.environ.get("REPRO_ARRAY_CODEC", "raw") == "int8"
+
+
+def set_array_codec(codec: str) -> None:
+    """Select the float-array payload codec: ``"raw"`` (lossless, the
+    default) or ``"int8"`` (int8+EF, ~4x smaller, up to one quantization
+    step of error per shipped value — opt in only when the workload
+    tolerates it, e.g. gradient/parameter shipping)."""
+    global ARRAY_CODEC_INT8
+    if codec not in ("raw", "int8"):
+        raise ValueError(f"unknown array codec {codec!r}; "
+                         f"expected 'raw' or 'int8'")
+    flag = codec == "int8"
+    if flag != ARRAY_CODEC_INT8:
+        ARRAY_CODEC_INT8 = flag
+        # content digests fold the codec in (blobstore._array_digest), so
+        # memoized digests computed under the old codec are stale
+        from .blobstore import _MEMO
+        _MEMO.clear()
 
 
 # --------------------------------------------------------------------------
@@ -217,6 +245,11 @@ def _sendmsg_all(sock, parts: list) -> None:
              for v in views]
     total = sum(len(v) for v in views)
     _count_sent(total)
+    # Zero-length views (an empty ndarray pickles to a 0-byte PickleBuffer)
+    # must be dropped up front: once one reaches the head of the list,
+    # sendmsg returns 0 and the pop loop below — which only consumes views
+    # while `sent` is positive — would spin forever holding send_lock.
+    views = [v for v in views if len(v)]
     if not hasattr(sock, "sendmsg"):
         sock.sendall(b"".join(views))
         return
@@ -365,26 +398,39 @@ class FrameReader:
 
 _EF_LOCK = threading.Lock()
 #: per-global-name error feedback state. Encodes for one name serialize on
-#: the entry's own lock, and the last (digest, blob) pair is retained so a
-#: re-encode of the same digest (driver-store eviction, a need from a
-#: second worker, a racing submit) returns byte-identical output instead
-#: of re-quantizing against a moved residual — every worker decodes the
-#: same value for one digest, and the residual advances exactly once per
-#: new content. Note the residual is keyed by global *name*: two distinct
-#: same-named globals alternating through the codec share one residual,
-#: which keeps each decode within ~2 quantization steps rather than the
-#: single-step bound.
+#: the entry's own lock, and a small digest-keyed replay cache of recent
+#: (digest, blob) pairs is retained so a re-encode of a previously-encoded
+#: digest (driver-store eviction, a need from a second worker, a racing
+#: submit) returns byte-identical output instead of re-quantizing against
+#: a moved residual — every worker decodes the same value for one digest,
+#: and the residual advances exactly once per new content. The cache is
+#: keyed by digest (not just "the latest") so a backfill for an *older*
+#: in-flight digest, after the name has advanced to new content, still
+#: replays the original bytes. Note the residual is keyed by global
+#: *name*: two distinct same-named globals alternating through the codec
+#: share one residual, which keeps each decode within ~2 quantization
+#: steps rather than the single-step bound.
 _EF: dict = {}
+
+#: replay blobs kept per name — bounds memory while covering the digests a
+#: slowly-advancing global can realistically have in flight at once
+_EF_REPLAY_KEEP = 4
+
+#: digests remembered per name after their replay blob ages out: a
+#: re-encode of a *seen* digest quantizes without error feedback, so the
+#: residual never advances twice for content that already shipped (and the
+#: re-encode is deterministic). 16 B each; FIFO-trimmed.
+_EF_SEEN_KEEP = 4096
 
 
 class _EFEntry:
-    __slots__ = ("lock", "ef", "digest", "blob")
+    __slots__ = ("lock", "ef", "blobs", "seen")
 
     def __init__(self):
         self.lock = threading.Lock()
         self.ef = None                       # ErrorFeedback, built lazily
-        self.digest = None
-        self.blob = None
+        self.blobs: "OrderedDict[bytes, bytes]" = OrderedDict()
+        self.seen: "OrderedDict[bytes, None]" = OrderedDict()
 
 
 def reset_array_codec_state() -> None:
@@ -430,25 +476,44 @@ def _encode_int8(arr, kind: str, name: "str | None", digest: bytes) -> bytes:
         if entry is None:
             entry = _EF[name] = _EFEntry()
     with entry.lock:                         # one encode per name at a time
-        if entry.digest == digest and entry.blob is not None:
-            # same content re-encoded (driver-store eviction, another
-            # worker's need, a racing submit): byte-identical replay
-            return entry.blob
-        if entry.ef is None:
-            entry.ef = ErrorFeedback()
-        if entry.ef.residual is not None and \
-                getattr(entry.ef.residual, "shape", None) != arr.shape:
-            entry.ef.residual = None         # global re-bound to a new shape
-        blob = _quantize_blob(arr, kind, entry.ef)
-        entry.digest, entry.blob = digest, blob
+        blob = entry.blobs.get(digest)
+        if blob is not None:
+            # previously-encoded content (driver-store eviction, another
+            # worker's need, a racing submit): byte-identical replay; the
+            # residual does NOT advance for replayed content
+            entry.blobs.move_to_end(digest)
+            return blob
+        if digest in entry.seen:
+            # the replay blob aged out of every cache: re-encode WITHOUT
+            # error feedback — deterministic (re-encoding twice agrees),
+            # within the codec's one-step accuracy contract, and the
+            # residual never advances twice for already-shipped content.
+            # (A worker still holding the original EF-injected blob may
+            # decode a value up to ~2 quantization steps from this one —
+            # the documented bound for the lossy opt-in codec.)
+            blob = _quantize_blob(arr, kind, None)
+        else:
+            if entry.ef is None:
+                entry.ef = ErrorFeedback()
+            if entry.ef.residual is not None and \
+                    getattr(entry.ef.residual, "shape", None) != arr.shape:
+                entry.ef.residual = None     # global re-bound to a new shape
+            blob = _quantize_blob(arr, kind, entry.ef)
+            entry.seen[digest] = None
+            while len(entry.seen) > _EF_SEEN_KEEP:
+                entry.seen.popitem(last=False)
+        entry.blobs[digest] = blob
+        while len(entry.blobs) > _EF_REPLAY_KEEP:
+            entry.blobs.popitem(last=False)
         return blob
 
 
 def _encode_rawarr(arr, kind: str) -> bytes:
     import numpy as np
+    from .blobstore import raw_byte_view
     arr = np.ascontiguousarray(arr)
     meta = {"dtype": arr.dtype.name, "shape": arr.shape, "kind": kind}
-    return _pack_meta(P_RAWARR, meta, memoryview(arr).cast("B"))
+    return _pack_meta(P_RAWARR, meta, raw_byte_view(arr))
 
 
 def _np_dtype(name: str):
@@ -460,16 +525,27 @@ def _np_dtype(name: str):
 
 
 def encode_payload(value: Any, *, name: "str | None" = None,
-                   pickled: "bytes | None" = None) -> bytes:
-    """Encode one content-addressed payload. float32/bf16 arrays go through
-    the int8+EF codec (unless :data:`ARRAY_CODEC_INT8` is off), other
-    arrays as raw bytes, everything else as its (given or computed)
-    pickle."""
+                   pickled: "bytes | None" = None,
+                   int8: "bool | None" = None,
+                   digest: "bytes | None" = None) -> bytes:
+    """Encode one content-addressed payload. Arrays ship as raw bytes
+    (lossless) — float32/bf16 arrays go through the lossy int8+EF codec
+    only when opted in — and everything else as its (given or computed)
+    pickle.
+
+    ``int8``/``digest`` let a :class:`~.blobstore.PayloadSource` pin the
+    codec and digest it captured at future creation, so a
+    :func:`set_array_codec` toggle before a lazy dispatch cannot encode a
+    blob that disagrees with the digest it will be stored under; callers
+    without that context inherit the current :data:`ARRAY_CODEC_INT8`."""
     from .blobstore import as_ndarray, content_digest
     arr, kind = as_ndarray(value)
     if arr is not None:
-        if ARRAY_CODEC_INT8 and arr.dtype.name in ("float32", "bfloat16"):
-            return _encode_int8(arr, kind, name, content_digest(value))
+        use_int8 = ARRAY_CODEC_INT8 if int8 is None else int8
+        if use_int8 and arr.dtype.name in ("float32", "bfloat16"):
+            if digest is None:
+                digest = content_digest(value)
+            return _encode_int8(arr, kind, name, digest)
         return _encode_rawarr(arr, kind)
     if pickled is None:
         from ..globals_capture import dumps_robust

@@ -39,7 +39,8 @@ over the same multi-MB array ship a few-hundred-byte task blob that merely
 :class:`~.backends.blobstore.BlobStore` (with a ``("need", digest)``
 backfill path for evictions and cold replacement workers) before the
 function is rebuilt — see ``backends/transport.py`` for the wire protocol
-and the int8+EF array codec applied to the payload blobs.
+and the payload codecs (arrays ship losslessly by default; the lossy
+int8+EF codec is an explicit opt-in via ``transport.set_array_codec``).
 """
 
 from __future__ import annotations

@@ -266,8 +266,25 @@ def active_backend() -> Backend:
                 doomed = _park_active_locked()
                 key = _backend_key(head, _global_stack)
                 warm = _WARM_POOL.pop(key, None)
-                _active_backend = warm if warm is not None \
-                    else head.instantiate()
+                if warm is not None:
+                    _active_backend = warm
+                else:
+                    try:
+                        _active_backend = head.instantiate()
+                    except Exception:
+                        # a parked backend may still pin a resource the new
+                        # spec needs (e.g. a cluster listener on an explicit
+                        # port): flush the pool and retry once. Shutting
+                        # down under _lock is slow but this is a rare
+                        # failure-recovery path.
+                        stale = doomed + list(_WARM_POOL.values())
+                        doomed = []
+                        _WARM_POOL.clear()
+                        if not stale:
+                            raise
+                        for b in stale:
+                            b.shutdown()
+                        _active_backend = head.instantiate()
                 _active_spec, _active_key = head, key
             return _active_backend
     finally:

@@ -55,6 +55,20 @@ def test_blobstore_resolve_caches_decoded_arrays():
     np.testing.assert_allclose(v1, arr, atol=float(np.abs(arr).max()) / 127)
 
 
+def test_blobstore_put_replacement_invalidates_decoded_cache():
+    """A byte-different blob arriving for an already-decoded digest must
+    drop the decoded-object cache entry, or resolve() would keep serving
+    the value decoded from the old bytes."""
+    store = BlobStore()
+    digest = b"d" * 16
+    a = np.arange(5000, dtype=np.int64)
+    b = a * 2
+    store.put(digest, transport.encode_payload(a))
+    np.testing.assert_array_equal(store.resolve(digest), a)
+    store.put(digest, transport.encode_payload(b))
+    np.testing.assert_array_equal(store.resolve(digest), b)
+
+
 def test_content_digest_is_memoized_and_content_addressed():
     a = np.random.default_rng(0).standard_normal(5000).astype(np.float32)
     assert content_digest(a) == content_digest(a)
@@ -65,10 +79,58 @@ def test_content_digest_is_memoized_and_content_addressed():
 
 
 # --------------------------------------------------------------------------
-# Payload codec: int8+EF for float arrays, raw fallback, bounded error
+# Payload codec: lossless raw by default, opt-in int8+EF with bounded error
 # --------------------------------------------------------------------------
 
-def test_int8_codec_compresses_float32_at_least_3_5x():
+@pytest.fixture
+def int8_codec():
+    """Opt the lossy int8+EF codec in for one test (it is off by default:
+    backend transparency means quantization must be explicit)."""
+    transport.set_array_codec("int8")
+    yield
+    transport.set_array_codec("raw")
+
+
+def test_float_arrays_ship_lossless_by_default():
+    x = np.random.default_rng(4).standard_normal(8192).astype(np.float32)
+    blob = transport.encode_payload(x)
+    assert blob[0] == transport.P_RAWARR
+    got, _ = transport.decode_payload(blob)
+    np.testing.assert_array_equal(got, x)    # bit-exact, no quantization
+
+
+def test_set_array_codec_toggles_and_validates():
+    assert not transport.ARRAY_CODEC_INT8
+    try:
+        transport.set_array_codec("int8")
+        assert transport.ARRAY_CODEC_INT8
+        with pytest.raises(ValueError):
+            transport.set_array_codec("zstd")
+    finally:
+        transport.set_array_codec("raw")
+    assert not transport.ARRAY_CODEC_INT8
+
+
+def test_codec_toggle_changes_float_array_digest():
+    """A digest names the bytes that ship: toggling the codec must yield a
+    new digest for float arrays (so no digest-keyed cache — driver store,
+    worker stores, per-worker known sets — can replay a blob encoded under
+    the other codec), while non-float arrays keep theirs."""
+    x = np.random.default_rng(9).standard_normal(8192).astype(np.float32)
+    ints = np.arange(8192, dtype=np.int64)
+    d_raw, d_ints = content_digest(x), content_digest(ints)
+    assert transport.encode_payload(x)[0] == transport.P_RAWARR
+    try:
+        transport.set_array_codec("int8")
+        assert content_digest(x) != d_raw
+        assert content_digest(ints) == d_ints     # int64 never quantized
+        assert transport.encode_payload(x)[0] == transport.P_INT8
+    finally:
+        transport.set_array_codec("raw")
+    assert content_digest(x) == d_raw
+
+
+def test_int8_codec_compresses_float32_at_least_3_5x(int8_codec):
     x = np.random.default_rng(1).standard_normal(1 << 16).astype(np.float32)
     raw = len(pickle.dumps(x, pickle.HIGHEST_PROTOCOL))
     blob = transport.encode_payload(x)
@@ -76,7 +138,7 @@ def test_int8_codec_compresses_float32_at_least_3_5x():
     assert raw >= 3.5 * len(blob), (raw, len(blob))
 
 
-def test_int8_codec_round_trip_error_is_bounded():
+def test_int8_codec_round_trip_error_is_bounded(int8_codec):
     """Conformance bound: per-tensor symmetric int8 with fp32 scale keeps
     |x - deq(q(x))| <= max|x|/127 elementwise (half a quantization step is
     the ideal; a full step is the safe contract)."""
@@ -90,7 +152,7 @@ def test_int8_codec_round_trip_error_is_bounded():
         assert float(np.abs(got - x).max()) <= bound
 
 
-def test_error_feedback_reinjects_quantization_error():
+def test_error_feedback_reinjects_quantization_error(int8_codec):
     """Shipping an evolving tensor under one global name accumulates the
     EF residual: the *sum* of dequantized updates tracks the sum of true
     updates much closer than independent quantization does."""
@@ -114,6 +176,95 @@ def test_error_feedback_reinjects_quantization_error():
     transport.reset_array_codec_state()
 
 
+def test_int8_reencode_of_aged_out_digest_is_deterministic(int8_codec):
+    """Once a digest's replay blob ages out of the bounded caches, its
+    re-encode must not run through error feedback again: the residual would
+    advance twice for already-shipped content, and every re-encode would
+    produce different bytes for one digest."""
+    transport.reset_array_codec_state()
+    rng = np.random.default_rng(11)
+    arrs = [rng.standard_normal(4096).astype(np.float32) for _ in range(6)]
+    for a in arrs:                           # 6 digests > _EF_REPLAY_KEEP=4
+        transport.encode_payload(a, name="age")
+    residual_before = transport._EF["age"].ef.residual.copy()
+    b1 = transport.encode_payload(arrs[0], name="age")   # aged-out digest
+    np.testing.assert_array_equal(
+        transport._EF["age"].ef.residual, residual_before)  # no re-advance
+    got, _ = transport.decode_payload(b1)
+    bound = float(np.abs(arrs[0]).max()) / 127 + 1e-9
+    assert float(np.abs(got - arrs[0]).max()) <= bound   # one-step contract
+    transport.reset_array_codec_state()
+
+
+def test_processes_worker_dead_at_dispatch_raises_workerdied(monkeypatch):
+    """A worker that dies between checkout and dispatch makes the pipe send
+    raise EPIPE; that must surface as WorkerDiedError (and mark the worker
+    unhealthy so the pool self-heals), not complete the handle with neither
+    run nor error. The checkout liveness filter is disabled to model the
+    race deterministically."""
+    from repro.core.backends import processes as proc_mod
+    rc.plan("processes", workers=1)
+    try:
+        pid = value(future(lambda: os.getpid()))
+        os.kill(pid, 9)
+        deadline = time.time() + 10
+        while time.time() < deadline and _pid_alive(pid):
+            time.sleep(0.05)
+        monkeypatch.setattr(proc_mod._Worker, "alive", lambda self: True)
+        with pytest.raises(rc.WorkerDiedError):
+            value(future(lambda: 1))
+        monkeypatch.undo()
+        assert value(future(lambda: 2)) == 2     # pool self-healed
+    finally:
+        rc.shutdown()
+
+
+def test_bfloat16_arrays_ship_and_digest():
+    """ml_dtypes bfloat16 numpy arrays do not export the buffer protocol;
+    digesting and raw-shipping them must go through the uint8 view instead
+    of crashing at future creation."""
+    import jax.numpy as jnp
+    xb = np.asarray(jnp.asarray(np.arange(20_000, dtype=np.float32) / 7,
+                                jnp.bfloat16))
+    assert content_digest(xb) is not None
+    blob = transport.encode_payload(xb)
+    assert blob[0] == transport.P_RAWARR
+    got, cacheable = transport.decode_payload(blob)
+    assert cacheable
+    assert got.dtype == xb.dtype
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(xb, np.float32))
+
+
+def test_codec_toggle_between_creation_and_dispatch_respects_digest():
+    """A PayloadSource captures the codec its digest folded in at future
+    creation: toggling set_array_codec before a (lazy) dispatch must not
+    cache a wrong-codec blob under that digest."""
+    from repro.core.globals_capture import extract_payload_refs
+    x = np.random.default_rng(10).standard_normal(20_000).astype(np.float32)
+    refd, sources = extract_payload_refs({"x": x}, backend="cluster")
+    (digest,) = sources
+    transport.set_array_codec("int8")            # toggle after creation
+    try:
+        blob = sources[digest].encode()
+        assert blob[0] == transport.P_RAWARR     # creation-time codec wins
+        got, _ = transport.decode_payload(blob)
+        np.testing.assert_array_equal(got, x)
+    finally:
+        transport.set_array_codec("raw")
+
+
+def test_encode_backfill_maps_encode_failure_to_nak():
+    from repro.core.backends.blobstore import encode_backfill
+
+    class Boom:
+        def encode(self):
+            raise RuntimeError("unpicklable mid-flight")
+
+    assert encode_backfill(None) is None         # source gone -> nak
+    assert encode_backfill(Boom()) is None       # encode failure -> nak
+
+
 def test_non_float_arrays_ship_raw_and_lossless():
     x = np.arange(20000, dtype=np.int64)
     blob = transport.encode_payload(x)
@@ -124,13 +275,22 @@ def test_non_float_arrays_ship_raw_and_lossless():
     assert not got.flags.writeable
 
 
-def test_int8_codec_can_be_disabled(monkeypatch):
-    monkeypatch.setattr(transport, "ARRAY_CODEC_INT8", False)
-    x = np.random.default_rng(4).standard_normal(8192).astype(np.float32)
-    blob = transport.encode_payload(x)
-    assert blob[0] == transport.P_RAWARR
-    got, _ = transport.decode_payload(blob)
-    np.testing.assert_array_equal(got, x)    # lossless fallback
+def test_int8_replay_is_byte_identical_after_content_advances(int8_codec):
+    """One digest must decode identically everywhere: a backfill re-encode
+    of an *older* digest — after the same global name advanced to new
+    content and moved the EF residual — must replay the original bytes,
+    not re-quantize (and must not advance the residual)."""
+    transport.reset_array_codec_state()
+    rng = np.random.default_rng(6)
+    a = rng.standard_normal(8192).astype(np.float32)
+    b = rng.standard_normal(8192).astype(np.float32)
+    blob_a1 = transport.encode_payload(a, name="g")
+    blob_b1 = transport.encode_payload(b, name="g")   # residual advances
+    blob_a2 = transport.encode_payload(a, name="g")   # backfill of old digest
+    blob_b2 = transport.encode_payload(b, name="g")
+    assert blob_a2 == blob_a1
+    assert blob_b2 == blob_b1
+    transport.reset_array_codec_state()
 
 
 def test_large_compressible_pickle_payloads_ship_zlibbed():
@@ -184,6 +344,24 @@ def test_array_frames_ship_out_of_band():
     b.close()
 
 
+def test_empty_array_frame_round_trips():
+    """An empty ndarray pickles to a 0-byte out-of-band PickleBuffer; the
+    sendmsg scatter loop must not spin on the zero-length view (it used to
+    livelock holding send_lock)."""
+    a, b = socket.socketpair()
+    a.settimeout(10)
+    b.settimeout(10)
+    payload = ("result", 3, np.empty((0,), np.float32),
+               np.arange(4, dtype=np.float32))
+    transport.send_frame(a, payload)
+    got = transport.recv_frame(b)
+    assert got[0] == "result" and got[1] == 3
+    assert got[2].size == 0 and got[2].dtype == np.float32
+    np.testing.assert_array_equal(got[3], np.arange(4, dtype=np.float32))
+    a.close()
+    b.close()
+
+
 def test_frame_reader_bulk_path_reassembles_dripped_large_frame():
     """Once a large frame's header is parsed, the reader switches to
     preallocated recv_into; drip-fed chunks still reassemble exactly."""
@@ -230,6 +408,28 @@ def test_repeated_future_map_hits_the_blob_cache(cluster1):
         assert abs(got - (expected + off)) <= tol
     # acceptance: >=5x fewer bytes on the wire once the array is cached
     assert first >= 5 * max(second, 1), (first, second)
+
+
+def test_empty_array_result_round_trips_on_cluster(cluster1):
+    """End-to-end regression for the zero-length OOB view livelock: a task
+    result containing an empty ndarray must come back (the worker's send
+    used to spin forever, starving its heartbeat until the driver declared
+    it dead)."""
+    got = value(future(lambda: np.empty((0,), np.float32)))
+    assert np.asarray(got).size == 0
+
+
+def test_ensure_refs_surfaces_nak_as_channel_error():
+    """A driver that cannot serve a digest (source gone, or encode failed)
+    naks; the worker must turn that into a ChannelError for the task
+    instead of waiting forever."""
+    from repro.core.backends.worker import ensure_refs
+    from repro.core.errors import ChannelError
+    store = BlobStore()
+    digest = b"n" * 16
+    with pytest.raises(ChannelError, match=digest.hex()[:12]):
+        ensure_refs(store, [digest], lambda d: None,
+                    lambda: ("nak", digest))
 
 
 def test_mutating_a_global_between_futures_invalidates_the_digest(cluster1):
@@ -313,12 +513,27 @@ def test_unpicklable_global_still_raises_at_creation():
 
 
 # --------------------------------------------------------------------------
-# Conformance: a shipped float32 global is dequantized within bound on
-# every external-process backend
+# Conformance: by default a shipped float32 global is bit-exact on every
+# external-process backend (backend transparency); with the int8 codec
+# opted in, it is dequantized within the documented bound
 # --------------------------------------------------------------------------
 
 @pytest.mark.parametrize("backend_name", ["processes", "cluster"])
-def test_shipped_float_global_error_bounded(backend_name):
+def test_shipped_float_global_is_lossless_by_default(backend_name):
+    x = np.random.default_rng(7).standard_normal(40_000).astype(np.float32)
+    rc.plan(backend_name, workers=1)
+    try:
+        got = value(future(lambda: x + 0.0))
+        np.testing.assert_array_equal(np.asarray(got), x)
+    finally:
+        rc.shutdown()
+
+
+@pytest.mark.parametrize("backend_name", ["processes", "cluster"])
+def test_shipped_float_global_error_bounded_with_int8_opt_in(
+        backend_name, int8_codec):
+    # same content as the lossless test above, on purpose: digests fold the
+    # codec in, so the raw blob cached there cannot be replayed here
     x = np.random.default_rng(7).standard_normal(40_000).astype(np.float32)
     rc.plan(backend_name, workers=1)
     try:
@@ -383,6 +598,43 @@ def _pid_alive(pid) -> bool:
     except PermissionError:
         return True
     return True
+
+
+def test_replan_different_spec_same_port_flushes_warm_pool():
+    """A parked cluster backend keeps its listener bound; re-planning to a
+    *different* cluster spec on the same explicit port must flush the warm
+    pool and retry instead of dying with EADDRINUSE at future creation."""
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    rc.plan("cluster", workers=1, port=port)
+    try:
+        assert value(future(lambda: 1)) == 1
+        rc.plan("threads", workers=1)            # parks the cluster backend
+        rc.plan("cluster", workers=2, port=port)  # different spec, same port
+        assert value(future(lambda: 2)) == 2
+    finally:
+        rc.shutdown()
+
+
+def test_dispatch_encode_failure_fails_future_not_worker(cluster1,
+                                                         monkeypatch):
+    """A payload encode failure at dispatch must fail that future with the
+    real error and return the healthy worker to the pool — not leak the
+    checked-out worker or complete the handle with neither run nor error."""
+    from repro.core.backends import blobstore
+    big = np.arange(60_000, dtype=np.int64)
+
+    def boom(self):
+        raise RuntimeError("encode exploded")
+
+    monkeypatch.setattr(blobstore.PayloadSource, "encode", boom)
+    f = future(lambda: int(big[0]))
+    with pytest.raises(RuntimeError, match="encode exploded"):
+        value(f)
+    monkeypatch.undo()
+    assert value(future(lambda: int(big[1]))) == 1   # worker still usable
 
 
 def test_different_spec_is_not_reused():
