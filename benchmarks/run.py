@@ -338,6 +338,45 @@ def bench_globals_cache(quick: bool = False) -> None:
     }
 
 
+def bench_worker_bootstrap(quick: bool = False) -> None:
+    """Launcher subsystem: time-to-first-future for a cold
+    ``plan("cluster", hosts=2)`` (LocalLauncher spawn -> hello -> dispatch)
+    vs a warm-pool re-attach (plan away and back: the parked backend keeps
+    its live workers, so re-attach skips the whole bootstrap)."""
+    reps = 1 if quick else 3
+    rc.shutdown()                        # flush the warm pool: truly cold
+    rc.plan("sequential")
+    cold = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rc.plan("cluster", hosts=2)
+        rc.value(rc.future(lambda: 42))
+        cold.append((time.perf_counter() - t0) * 1e6)
+        rc.shutdown()                    # full teardown: next rep cold again
+        rc.plan("sequential")
+    rc.plan("cluster", hosts=2)
+    rc.value(rc.future(lambda: 42))      # live pool to park/re-attach
+    warm = []
+    for _ in range(reps):
+        rc.plan("sequential")            # parks the cluster backend
+        t0 = time.perf_counter()
+        rc.plan("cluster", hosts=2)      # warm-pool re-attach
+        rc.value(rc.future(lambda: 42))
+        warm.append((time.perf_counter() - t0) * 1e6)
+    rc.shutdown()
+    rc.plan("sequential")
+    us_cold = sum(cold) / len(cold)
+    us_warm = sum(warm) / len(warm)
+    _row("bootstrap/cold_launch", us_cold,
+         "plan(cluster, hosts=2): LocalLauncher spawn -> first future")
+    _row("bootstrap/warm_reattach", us_warm,
+         f"{us_cold / max(us_warm, 1e-9):.0f}x faster than cold launch")
+    _CLUSTER_JSON["bench_worker_bootstrap"] = {
+        "us_cold_launch": us_cold, "us_warm_reattach": us_warm,
+        "cold_over_warm": us_cold / max(us_warm, 1e-9),
+        "workers": 2, "reps": reps}
+
+
 def _write_cluster_artifact(quick: bool) -> None:
     if not _CLUSTER_JSON:
         return
@@ -423,13 +462,15 @@ def bench_roofline(quick: bool = False) -> None:
 
 BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_chunking, bench_cluster_overhead, bench_wait_vs_poll,
-           bench_callback_latency, bench_globals_cache, bench_compression,
+           bench_callback_latency, bench_globals_cache,
+           bench_worker_bootstrap, bench_compression,
            bench_kernels, bench_roofline]
 
 #: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
 #: exactly these, so CI can re-emit the perf-trajectory artifact cheaply
 CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
-                   bench_callback_latency, bench_globals_cache]
+                   bench_callback_latency, bench_globals_cache,
+                   bench_worker_bootstrap]
 
 
 def main() -> None:

@@ -6,6 +6,38 @@ mid-round, (2) a straggler pod raced by a speculative duplicate, (3) an
 elastic resize between rounds. The run must finish with a decreasing loss
 despite all three.
 
+Worker bootstrap is the launcher subsystem's job — nothing here (or in any
+multi-host run) is launched by hand. ``plan("cluster", hosts=N)`` spawns N
+local workers via the default ``LocalLauncher``; the *same line* bootstraps
+real machines by swapping the launcher::
+
+    from repro.core import SSHLauncher, CommandLauncher
+
+    # ssh bootstrap (the paper's makeClusterPSOCK default for named hosts;
+    # reverse_tunnel=True lets NAT'd workers dial back through the tunnel —
+    # then the loopback default bind is fine, the tunnel delivers to it):
+    rc.plan("cluster", hosts=("nodeA", "nodeB"),
+            launcher=SSHLauncher(python="python3",
+                                 pythonpath="/opt/repro/src",
+                                 reverse_tunnel=True))
+
+    # scheduler bootstrap as a config string (SLURM shown; k8s analogous).
+    # Remote workers must be able to *reach* the driver: bind a non-
+    # loopback address (and advertise= the name they should dial, when the
+    # bind is 0.0.0.0 and the default hostname is not resolvable there):
+    rc.plan("cluster", hosts=4, bind="0.0.0.0", launcher=CommandLauncher(
+        "srun --ntasks=1 {python} -m repro.core.backends.cluster_worker "
+        "{driver} --tag {tag}"))
+
+    # hand-launched / pre-existing workers (the old workflow):
+    rc.plan("cluster", hosts=2, launcher="external")
+    # ... then on each machine:
+    #     python -m repro.core.backends.cluster_worker DRIVER_HOST:PORT
+
+Either way the driver owns the fault story: a dead worker's future fails
+with WorkerDiedError and a replacement is relaunched on the same host with
+capped exponential backoff (see backends/cluster.py).
+
 Run: PYTHONPATH=src python examples/cluster_faults.py
 """
 
@@ -16,7 +48,20 @@ import repro.core as rc
 from repro.launch.train import MultiPodDriver, PodRunConfig
 
 
+def demo_launcher_bootstrap():
+    """The zero-hand-launched-processes loop, end to end: plan -> launched
+    workers -> futures -> shutdown reaps everything."""
+    rc.plan("cluster", hosts=2)           # LocalLauncher bootstraps 2 workers
+    backend = rc.active_backend()
+    print(f"launched workers (pids {backend.worker_pids()}) "
+          f"on {backend.address}")
+    assert rc.future_map(lambda x: x * x, [1, 2, 3, 4]) == [1, 4, 9, 16]
+    rc.shutdown()
+    print("launcher bootstrap OK: zero hand-launched processes")
+
+
 def main():
+    demo_launcher_bootstrap()
     tmp = tempfile.mkdtemp(prefix="repro-cluster-")
     cfg = PodRunConfig(
         arch="xlstm-125m", pods=2, rounds=4, local_steps=3,

@@ -12,6 +12,9 @@ Usage::
 
 Metrics missing from either file are skipped with a note (so a baseline
 predating a bench does not fail the build). Exit status 1 on regression.
+
+``bench_worker_bootstrap`` (cold launcher bootstrap vs warm-pool re-attach)
+is reported informationally — printed, never gating.
 """
 
 from __future__ import annotations
@@ -29,6 +32,14 @@ METRICS = [
      ("bench_cluster_overhead", "us_per_future", "cluster")),
     ("us_cross_backend_wake",
      ("bench_callback_latency", "us_cross_backend_wake")),
+]
+
+#: informational metrics: printed baseline-vs-fresh, never fail the build
+#: (worker bootstrap is dominated by interpreter/numpy import cost, which
+#: is machine noise we don't want gating CI — yet)
+INFO_METRICS = [
+    ("us_cold_launch", ("bench_worker_bootstrap", "us_cold_launch")),
+    ("us_warm_reattach", ("bench_worker_bootstrap", "us_warm_reattach")),
 ]
 
 
@@ -82,6 +93,14 @@ def main(argv=None) -> int:
               f"(limit {limit:.1f}us)")
         if f > limit:
             failed = True
+    for label, path in INFO_METRICS:
+        b, f = _lookup(baseline, path), _lookup(fresh, path)
+        if b is None and f is None:
+            continue
+        fmt = lambda v: "n/a" if v is None else f"{v:.1f}us"  # noqa: E731
+        print(f"bench-guard:       info {label}: "
+              f"baseline {fmt(b)} -> fresh {fmt(f)} "
+              f"(informational, never fails)")
     if failed:
         print(f"bench-guard: FAILED — latency regressed more than "
               f"{args.tolerance_pct:.0f}% vs the committed baseline. "

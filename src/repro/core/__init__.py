@@ -18,6 +18,8 @@ from .backends import threads as _threads                    # noqa: F401
 from .backends import processes as _processes                # noqa: F401
 from .backends import cluster as _cluster                    # noqa: F401
 from .backends import jax_async as _jax_async                # noqa: F401
+from .backends.launchers import (CommandLauncher, Launcher,  # noqa: F401
+                                 LocalLauncher, SSHLauncher, WorkerProc)
 from .conditions import (CapturedRun, ImmediateCondition, message,  # noqa: F401
                          signal_progress)
 from .containers import ListEnv                              # noqa: F401
@@ -37,6 +39,8 @@ __all__ = [
     "future", "value", "resolved", "resolve", "as_completed", "wait_any",
     "merge", "Future", "Waiter", "gather", "first", "first_successful",
     "plan", "spec", "tweak", "shutdown", "available_cores", "active_backend",
+    "Launcher", "LocalLauncher", "SSHLauncher", "CommandLauncher",
+    "WorkerProc",
     "future_map", "future_lapply", "future_either", "retry",
     "future_map_chunked_lazy",
     "FutureError", "WorkerDiedError", "ChannelError", "FutureCancelledError",

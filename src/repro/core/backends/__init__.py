@@ -4,8 +4,10 @@
 * ``threads`` — in-process thread pool (shared memory, zero-copy globals).
 * ``processes`` — local worker-process pool over multiprocessing pipes.
 * ``cluster`` — real TCP sockets: a select-driven driver plus connect-back
-  workers (``cluster.py`` / ``cluster_worker.py``), spawnable locally or
-  launched standalone on other machines — the paper's ``makeClusterPSOCK``.
+  workers (``cluster.py`` / ``cluster_worker.py``) that the driver
+  bootstraps itself through the launcher subsystem (``launchers.py``:
+  local subprocess, ssh, or a scheduler command template) — the paper's
+  ``makeClusterPSOCK``, including its launch-the-workers default.
 * ``jax_async`` — JAX's own asynchronous dispatch surfaced as futures.
 
 All five implement the push completion kernel (see ``base.py``):

@@ -1,46 +1,65 @@
 """plan("cluster"): resolve futures on workers connected over TCP sockets.
 
-The paper's ``makeClusterPSOCK`` analogue, for real: a driver that listens on
-a TCP socket and a fleet of worker processes that dial in — spawned locally
-by the backend (the single-host/test path), or launched by hand anywhere
-with network reach::
+The paper's ``makeClusterPSOCK`` analogue, for real: a driver that listens
+on a TCP socket and a fleet of worker processes that dial in — *launched by
+the backend itself* through the launcher subsystem (``launchers.py``):
+local subprocesses by default, ssh or an arbitrary scheduler command
+template for multi-host runs, or hand-launched anywhere with network reach
+(``launcher="external"``)::
 
     python -m repro.core.backends.cluster_worker DRIVER_HOST:PORT
 
 Spec kwargs (``plan("cluster", ...)`` / ``spec("cluster", ...)``):
 
-* ``workers=N`` — spawn N local worker processes that connect back over
+* ``workers=N`` — launch N local worker processes that connect back over
   127.0.0.1 (default: ``available_cores()``).
-* ``hosts=N`` or ``hosts=("nodeA", "nodeB")`` — spawn nothing; expect that
-  many externally-launched workers to connect. ``backend.address`` is the
-  ``(host, port)`` to hand them; ``wait_for_workers()`` blocks until they
-  arrive.
+* ``hosts=N`` or ``hosts=("nodeA", "nodeB")`` — where workers run. An int
+  launches that many via :class:`~.launchers.LocalLauncher`; named hosts
+  default to :class:`~.launchers.SSHLauncher` (the paper's
+  ``makeClusterPSOCK`` default).
+* ``launcher=`` — who bootstraps the workers: a
+  :class:`~.launchers.Launcher` instance, ``"local"``, ``"ssh"``, a
+  ``CommandLauncher`` template string containing ``{driver}`` (SLURM/k8s as
+  config), or ``"external"`` to spawn nothing — ``backend.address`` is the
+  ``(host, port)`` to hand hand-launched workers; ``wait_for_workers()``
+  blocks until they arrive.
 * ``bind="0.0.0.0"``, ``port=0`` — listener address (loopback + ephemeral
-  port by default; bind ``0.0.0.0`` for real multi-host runs).
+  port by default; bind ``0.0.0.0`` for real multi-host runs), and
+  ``advertise=`` — the hostname remote launched workers dial (default: the
+  machine's hostname when bound to 0.0.0.0).
 * ``connect_timeout=60`` — seconds to wait for the expected worker count.
 * ``heartbeat_interval=1.0`` / ``heartbeat_timeout=10.0`` — liveness:
   workers push a heartbeat frame every interval; one silent for longer than
   the timeout is declared dead (set ``heartbeat_timeout=0`` to disable).
+* ``relaunch_backoff=0.1`` / ``relaunch_backoff_cap=5.0`` /
+  ``relaunch_reset_after=30.0`` — relaunch policy for launched workers
+  (see below).
 
 Fault model: EOF / reset / heartbeat loss on a busy worker surfaces as
-:class:`WorkerDiedError` on that future and the pool **self-heals** by
-spawning a replacement (locally-spawned workers; externally-launched
-capacity just shrinks until the operator relaunches). Everything is
-select-driven — one driver thread multiplexes every worker socket — so
-``Backend.wait()`` is a genuine event wait, never a poll loop, and
-completion is *pushed*: ``add_done_callback`` continuations fire straight
-from the select loop the moment a result frame lands.
+:class:`WorkerDiedError` on that future, and the driver — which **owns**
+every launched :class:`~.launchers.WorkerProc` — relaunches a replacement
+on the same host through the same launcher, with capped exponential
+backoff (``relaunch_backoff`` doubling to ``relaunch_backoff_cap``; a
+worker that survived ``relaunch_reset_after`` seconds resets its host's
+backoff). A launched worker that dies *before its first hello* is a
+misconfiguration, not churn: its slot is not relaunched, and its captured
+stderr is quoted in the startup error. Externally-launched capacity just
+shrinks until the operator relaunches. ``shutdown()`` reaps every launched
+process — no orphans. Everything is select-driven — one driver thread
+multiplexes every worker socket — so ``Backend.wait()`` is a genuine event
+wait, never a poll loop, and completion is *pushed*: ``add_done_callback``
+continuations fire straight from the select loop the moment a result frame
+lands.
 """
 
 from __future__ import annotations
 
+import collections
 import itertools
 import os
 import pickle
 import selectors
 import socket
-import subprocess
-import sys
 import threading
 import time
 from typing import Any
@@ -51,7 +70,11 @@ from .. import planning as plan_mod
 from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
                    register_backend)
 from .blobstore import encode_backfill
+from .launchers import WorkerProc, resolve_launcher
 from .transport import FrameReader, send_frame
+
+#: pre-hello launch failures retained for error messages
+_LAUNCH_FAILURES_KEEP = 8
 
 
 class _Handle(CompletionHandle):
@@ -86,7 +109,8 @@ class _SockWorker:
         self.ready = False                 # hello received
         self.retired = False               # deliberate down-scale, not a death
         self.meta: dict = {}
-        self.proc: subprocess.Popen | None = None    # locally-spawned only
+        self.proc: WorkerProc | None = None          # driver-launched only
+        self.hello_at: "float | None" = None
         self.last_seen = time.monotonic()
 
     def describe(self) -> str:
@@ -110,10 +134,15 @@ class ClusterBackend(EventWaitMixin, Backend):
 
     def __init__(self, workers: int | None = None,
                  hosts: "int | tuple | list | None" = None,
+                 launcher: Any = None,
                  bind: str = "127.0.0.1", port: int = 0,
+                 advertise: "str | None" = None,
                  connect_timeout: float = 60.0,
                  heartbeat_interval: float = 1.0,
                  heartbeat_timeout: float = 10.0,
+                 relaunch_backoff: float = 0.1,
+                 relaunch_backoff_cap: float = 5.0,
+                 relaunch_reset_after: float = 30.0,
                  blob_store_bytes: "int | None" = None):
         self._blob_store_bytes = blob_store_bytes
         self._hb_interval = float(heartbeat_interval or 0.0)
@@ -124,10 +153,19 @@ class ClusterBackend(EventWaitMixin, Backend):
         self._connect_timeout = float(connect_timeout)
         if hosts is None:
             self._n = int(workers) if workers else plan_mod.available_cores()
-            self._external = 0
+            self._hosts = ("127.0.0.1",) * self._n
+        elif isinstance(hosts, int):
+            self._n = hosts
+            self._hosts = ("127.0.0.1",) * self._n
         else:
-            self._external = hosts if isinstance(hosts, int) else len(hosts)
-            self._n = self._external
+            self._hosts = tuple(hosts)
+            self._n = len(self._hosts)
+        #: who bootstraps workers; None = external (hand-launched) capacity
+        self._launcher = resolve_launcher(launcher, hosts)
+        self._relaunch_backoff = max(float(relaunch_backoff), 0.0)
+        self._relaunch_cap = max(float(relaunch_backoff_cap),
+                                 self._relaunch_backoff)
+        self._relaunch_reset_after = float(relaunch_reset_after)
         self._nested_blob = pickle.dumps(plan_mod.nested_stack())
         from .. import rng as rng_mod
         self._session_seed = rng_mod._session_seed
@@ -136,13 +174,29 @@ class ClusterBackend(EventWaitMixin, Backend):
         self._init_wait()
         self._all: list[_SockWorker] = []      # connected workers (pool_cv)
         self._idle: list[_SockWorker] = []
-        self._spawning: list[subprocess.Popen] = []  # launched, not yet hello
+        self._pending: list[WorkerProc] = []   # launched, not yet hello
+        #: expired detached-bootstrap records — a late hello matching one
+        #: restores the capacity slot that was written off at expiry
+        self._expired: "collections.deque[WorkerProc]" = \
+            collections.deque(maxlen=8)
+        self._launch_failures: list[str] = []  # pre-hello deaths (stderr)
+        self._backoff: dict[str, float] = {}   # host -> next relaunch delay
+        self._relaunch_q: list[tuple[float, str]] = []   # (deadline, host)
+        #: delays actually scheduled, oldest first (tests/diagnostics;
+        #: bounded like _launch_failures so a weeks-long flapping host
+        #: cannot grow it without limit)
+        self._relaunch_log: "collections.deque[float]" = \
+            collections.deque(maxlen=256)
         self._capacity = self._n               # live-or-expected worker count
         self._shrink_debt = 0
         self._open = True
         self._cleaned = False
         self._cleanup_lock = threading.Lock()
         self._wid = itertools.count()
+        # `or`: hosts=() still leaves resize() a host to grow onto
+        self._host_iter = itertools.cycle(self._hosts or ("127.0.0.1",))
+        self._tag_seq = itertools.count()
+        self._tag_base = os.urandom(4).hex()
 
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -152,6 +206,11 @@ class ClusterBackend(EventWaitMixin, Backend):
         self.address = self._listener.getsockname()[:2]
         self._connect_back = ("127.0.0.1" if bind in ("0.0.0.0", "")
                               else bind, self.address[1])
+        #: what *remote* launched workers dial (ssh/scheduler bootstrap)
+        self._advertise = (advertise
+                           or (socket.gethostname()
+                               if bind in ("0.0.0.0", "") else bind),
+                           self.address[1])
 
         self._wake_r, self._wake_w = os.pipe()
         self._sel = selectors.DefaultSelector()
@@ -161,34 +220,61 @@ class ClusterBackend(EventWaitMixin, Backend):
             target=self._loop, name="cluster-driver", daemon=True)
         self._loop_thread.start()
 
-        if self._external == 0:
+        if self._launcher is not None:
             for _ in range(self._n):
-                self._spawn_local()
+                self._launch_worker(next(self._host_iter))
             self.wait_for_workers(self._n, timeout=self._connect_timeout)
 
     # -- pool management ----------------------------------------------------
 
-    def _spawn_local(self) -> None:
-        """Launch one connect-back worker process on this machine."""
-        src_root = os.path.abspath(os.path.join(
-            os.path.dirname(__file__), "..", "..", ".."))
-        env = dict(os.environ)
-        env["PYTHONPATH"] = (src_root + os.pathsep + env["PYTHONPATH"]
-                             if env.get("PYTHONPATH") else src_root)
-        env.setdefault("OMP_NUM_THREADS", "1")
-        env.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
-        host, port = self._connect_back
-        cmd = [sys.executable, "-m", "repro.core.backends.cluster_worker",
-               f"{host}:{port}"]
+    def _launch_worker(self, host: str, *, relaunch: bool = False) -> None:
+        """Bootstrap one connect-back worker on ``host`` via the launcher.
+
+        ``relaunch`` marks self-heal replacements: their failures re-queue
+        with ramping backoff (a transient host outage must not burn the
+        slot), whereas a *startup* launch failure is a misconfiguration
+        and fails fast with the captured stderr."""
+        launcher = self._launcher
+        assert launcher is not None
+        tag = f"{self._tag_base}-{next(self._tag_seq)}"
+        local_only = getattr(launcher, "local_only", False)
+        addr = self._connect_back if local_only else self._advertise
+        if not local_only \
+                and host not in ("127.0.0.1", "localhost", "") \
+                and addr[0] in ("127.0.0.1", "localhost") \
+                and not getattr(launcher, "reverse_tunnel", False):
+            # a remote worker told to dial the driver's loopback will hang
+            # until connect_timeout with no hint why — say so up front.
+            # (Best-effort: hosts=N keeps placeholder loopback host names,
+            # so a remote scheduler template with hosts=N still needs the
+            # documented bind='0.0.0.0' — see examples/cluster_faults.py.)
+            import warnings
+            warnings.warn(
+                f"launching a worker on {host!r} that will dial the "
+                f"driver's loopback address {addr[0]}:{addr[1]}; bind a "
+                f"reachable interface (bind='0.0.0.0' [+ advertise=]) or "
+                f"use SSHLauncher(reverse_tunnel=True)", RuntimeWarning,
+                stacklevel=2)
         try:
-            proc = subprocess.Popen(cmd, env=env)
-        except OSError:
+            wp = launcher.launch(host, addr, tag=tag)
+        except Exception as exc:                 # noqa: BLE001
             with self._pool_cv:
-                self._capacity -= 1
+                if not relaunch:
+                    self._capacity -= 1
+                self._note_launch_failure_locked(
+                    f"launcher {launcher.describe()} failed on host "
+                    f"{host!r}: {exc!r}")
                 self._pool_cv.notify_all()
+            if relaunch:
+                self._queue_relaunch(host, lifetime=0.0)
             return
+        wp.is_relaunch = relaunch
         with self._pool_cv:
-            self._spawning.append(proc)
+            self._pending.append(wp)
+
+    def _note_launch_failure_locked(self, msg: str) -> None:
+        self._launch_failures.append(msg)
+        del self._launch_failures[:-_LAUNCH_FAILURES_KEEP]
 
     def wait_for_workers(self, n: "int | None" = None,
                          timeout: "float | None" = None) -> None:
@@ -208,10 +294,15 @@ class ClusterBackend(EventWaitMixin, Backend):
                 if time.monotonic() > deadline:
                     break
                 self._pool_cv.wait(0.1)
+        with self._pool_cv:
+            failures = list(self._launch_failures)
         self.shutdown()
-        raise ChannelError(
-            f"cluster startup failed: {ready}/{n} workers connected "
-            f"within {timeout}s (capacity={self._capacity})")
+        msg = (f"cluster startup failed: {ready}/{n} workers connected "
+               f"within {timeout}s (capacity={self._capacity})")
+        if failures:
+            msg += ("; worker launch failures:\n  "
+                    + "\n  ".join(failures))
+        raise ChannelError(msg)
 
     def _checkout(self) -> _SockWorker:
         """Blocking acquire of an idle worker (paper: future() blocks until
@@ -231,21 +322,29 @@ class ClusterBackend(EventWaitMixin, Backend):
                 self._pool_cv.wait(0.5)
 
     def resize(self, workers: int) -> None:
-        """Elastic scaling: grow by spawning connect-back workers, shrink by
-        retiring idle ones (busy workers retire as they finish)."""
+        """Elastic scaling: grow by launching connect-back workers (round-
+        robin over the host list; external mode just raises the expected
+        count), shrink by retiring idle ones (busy workers retire as they
+        finish). Launcher-owned pools resize against *live* capacity, so
+        resizing to the current nominal count regrows slots lost to idle
+        exits or burned launches."""
         with self._pool_cv:
             delta = workers - self._n
             self._n = workers
-            if delta > 0:
-                self._capacity += delta
+            if self._launcher is not None:
+                grow = max(workers - self._capacity, 0)
+                shrink = max(self._capacity - workers, 0)
             else:
-                self._shrink_debt += -delta
+                grow, shrink = max(delta, 0), max(-delta, 0)
+            self._capacity += grow
+            self._shrink_debt += shrink
             to_retire = []
             while self._shrink_debt > 0 and self._idle:
                 to_retire.append(self._idle.pop())
                 self._shrink_debt -= 1
-        for _ in range(max(delta, 0)):
-            self._spawn_local()
+        if self._launcher is not None:
+            for _ in range(grow):
+                self._launch_worker(next(self._host_iter))
         for w in to_retire:
             self._retire(w)
         # Growth is best-effort: new workers join the idle pool as they
@@ -273,7 +372,17 @@ class ClusterBackend(EventWaitMixin, Backend):
             if self._hb_timeout else 1.0
         while True:
             try:
-                events = self._sel.select(timeout=tick)
+                timeout = tick
+                # unlocked emptiness hint keeps the hot path lock-free;
+                # _schedule_relaunch writes the wake pipe, so a just-queued
+                # relaunch re-arms the timeout on the next iteration anyway
+                if self._relaunch_q:
+                    with self._pool_cv:
+                        if self._relaunch_q:
+                            due = min(dl for dl, _ in self._relaunch_q)
+                            timeout = min(tick, max(0.01,
+                                                    due - time.monotonic()))
+                events = self._sel.select(timeout=timeout)
                 if not self._open:
                     break
                 for key, _mask in events:
@@ -287,6 +396,7 @@ class ClusterBackend(EventWaitMixin, Backend):
                             pass
                     else:
                         self._pump(data)
+                self._service_relaunches()
                 self._reap_and_check()
             except Exception:                        # noqa: BLE001
                 # The driver thread is a singleton: an escaped exception
@@ -330,16 +440,34 @@ class ClusterBackend(EventWaitMixin, Backend):
             if tag == "hello":
                 w.meta = frame[1]
                 with self._pool_cv:
-                    for proc in self._spawning:
-                        if proc.pid == w.meta.get("pid"):
-                            w.proc = proc
-                            self._spawning.remove(proc)
-                            break
+                    w.proc = self._match_pending_locked(w.meta)
                     w.ready = True
+                    w.hello_at = time.monotonic()
                     self._idle.append(w)
                     self._pool_cv.notify_all()
             elif tag == "hb":
                 pass                                  # last_seen updated above
+            elif tag == "bye":
+                # deliberate worker exit (--max-idle-s farewell): treat as
+                # a down-scale, not a death — capacity shrinks, no relaunch
+                # (an idle-capped worker would otherwise churn launch/
+                # idle-exit forever). The worker keeps serving until we
+                # answer ("stop",): if it was already checked out by a
+                # racing dispatch, the in-flight task completes normally
+                # and _finish stops it afterwards.
+                if not w.retired:
+                    w.retired = True
+                    with self._pool_cv:
+                        was_idle = w in self._idle
+                        if was_idle:
+                            self._idle.remove(w)
+                        self._capacity -= 1
+                        self._pool_cv.notify_all()
+                    if was_idle:
+                        try:
+                            send_frame(w.sock, ("stop",), w.send_lock)
+                        except OSError:
+                            pass
             elif tag == "need":
                 # blob-store backfill: the worker evicted (or never had) a
                 # payload the current task references; re-serve it from the
@@ -388,6 +516,50 @@ class ClusterBackend(EventWaitMixin, Backend):
                         h.run = frame[2]
                         self._finish(w, h)
 
+    def _match_pending_locked(self, meta: dict) -> "WorkerProc | None":
+        """Pair a hello with the WorkerProc that bootstrapped it: by the
+        ``--tag`` token the launcher forwarded, else by pid (LocalLauncher:
+        the bootstrap process *is* the worker), else first-come-first-
+        served for hellos whose bootstrap could not forward the tag (a
+        CommandLauncher template using ``{tag}`` in a pod name rather than
+        as ``--tag``, or omitting it entirely). A hello carrying an
+        *unknown* tag is someone else's worker and matches nothing; a
+        tagless hello only FIFO-matches bootstraps that did *not* forward
+        the tag, so it can never steal a LocalLauncher/SSHLauncher record
+        whose tagged worker is still on its way."""
+        tag, pid = meta.get("tag"), meta.get("pid")
+        wp = self._match_from(self._pending, tag, pid)
+        if wp is not None:
+            return wp
+        wp = self._match_from(self._expired, tag, pid)
+        if wp is not None:
+            # its slot was written off when the record aged out of pending
+            # (scheduler was slow to place it): the worker showed up after
+            # all — restore the capacity it still occupies
+            self._capacity += 1
+            return wp
+        return None
+
+    @staticmethod
+    def _match_from(records, tag, pid) -> "WorkerProc | None":
+        for wp in records:
+            if wp.tag and tag and wp.tag == tag:
+                records.remove(wp)
+                return wp
+        for wp in records:
+            # a tag-forwarding bootstrap's worker always matches by tag
+            # above, so a pid hit on one here is a collision with a
+            # foreign worker's remote pid — skip those records
+            if pid is not None and wp.pid == pid and not wp.tag_forwarded:
+                records.remove(wp)
+                return wp
+        if not tag:
+            for wp in records:
+                if not wp.tag_forwarded:
+                    records.remove(wp)
+                    return wp
+        return None
+
     def _finish(self, w: _SockWorker, h: _Handle) -> None:
         w.busy = None
         if h.cancelled:
@@ -397,15 +569,27 @@ class ClusterBackend(EventWaitMixin, Backend):
             # instead of leaking the slot.
             self._on_dead(w, "worker killed by cancel()")
         else:
+            bye_stop = False
             with self._pool_cv:
-                if self._shrink_debt > 0:
+                if w.retired:
+                    # bye'd worker that finished a racing in-flight task:
+                    # its capacity already shrank, just let it exit now
+                    retire = False
+                    bye_stop = True
+                elif self._shrink_debt > 0:
                     self._shrink_debt -= 1
                     retire = True
                 else:
                     self._idle.append(w)
                     retire = False
                 self._pool_cv.notify_all()
-            if retire:
+            if bye_stop:
+                try:
+                    if w.sock is not None:
+                        send_frame(w.sock, ("stop",), w.send_lock)
+                except OSError:
+                    pass
+            elif retire:
                 self._retire(w)
         # push completion from the select loop: done-callbacks (continuation
         # dispatch, cross-backend Waiter wake-ups) fire here
@@ -427,21 +611,29 @@ class ClusterBackend(EventWaitMixin, Backend):
 
     def _on_dead(self, w: _SockWorker, reason: str) -> None:
         self._retire_dead_worker(w)
+        if w.proc is not None:
+            # quote the launched worker's captured stderr (crash traceback,
+            # OOM-killer note) — best-effort, the drain thread may still be
+            # flushing, but it beats dropping the last words entirely
+            tail = w.proc.stderr_tail()
+            if tail:
+                reason += ("; worker stderr:\n    "
+                           + "\n    ".join(tail.splitlines()[-10:]))
         h, w.busy = w.busy, None
-        respawn = False
+        relaunch = False
         with self._pool_cv:
             if w in self._idle:
                 self._idle.remove(w)
             if w in self._all:
                 self._all.remove(w)
             if self._open and not w.retired:
-                if w.proc is not None:
-                    respawn = True                   # self-heal, same capacity
+                if w.proc is not None and self._launcher is not None:
+                    relaunch = True                  # self-heal, same capacity
                 elif w.ready:
                     self._capacity -= 1              # external: shrink
             self._pool_cv.notify_all()
-        if respawn:
-            self._spawn_local()
+        if relaunch:
+            self._schedule_relaunch(w)
         if h is not None and not h.done.is_set():
             if h.cancelled:
                 h.error = FutureCancelledError(
@@ -454,16 +646,102 @@ class ClusterBackend(EventWaitMixin, Backend):
                     future_label=h.task.label, worker=w.wid)
             self._complete(h)
 
+    def _schedule_relaunch(self, w: _SockWorker) -> None:
+        """Queue a replacement for a dead *launched* worker on its host,
+        with capped exponential backoff: the delay doubles per churn on the
+        host up to ``relaunch_backoff_cap`` and resets once a worker
+        survives ``relaunch_reset_after`` seconds (rush-style restart
+        hardening: a crash-looping node backs off, a one-off kill heals
+        fast)."""
+        host = w.proc.host if w.proc is not None else "127.0.0.1"
+        lifetime = (time.monotonic() - w.hello_at) \
+            if w.hello_at is not None else 0.0
+        self._queue_relaunch(host, lifetime)
+
+    def _queue_relaunch(self, host: str, lifetime: float) -> None:
+        now = time.monotonic()
+        with self._pool_cv:
+            if not self._open:
+                return
+            delay = self._backoff.get(host, self._relaunch_backoff)
+            if lifetime >= self._relaunch_reset_after:
+                delay = self._relaunch_backoff
+            delay = min(delay, self._relaunch_cap)
+            self._backoff[host] = min(max(delay, self._relaunch_backoff)
+                                      * 2.0, self._relaunch_cap)
+            self._relaunch_log.append(delay)
+            self._relaunch_q.append((now + delay, host))
+        try:
+            os.write(self._wake_w, b"r")     # re-arm the select timeout
+        except OSError:
+            pass
+
+    def _service_relaunches(self) -> None:
+        if not self._relaunch_q:             # unlocked hint, same as _loop
+            return
+        now = time.monotonic()
+        due: list[str] = []
+        with self._pool_cv:
+            if not self._open or not self._relaunch_q:
+                return
+            rest: list[tuple[float, str]] = []
+            for deadline, host in self._relaunch_q:
+                if deadline <= now:
+                    due.append(host)
+                else:
+                    rest.append((deadline, host))
+            self._relaunch_q = rest
+        for host in due:
+            self._launch_worker(host, relaunch=True)
+
     def _reap_and_check(self) -> None:
         with self._pool_cv:
-            spawning = list(self._spawning)
-        for proc in spawning:
-            if proc.poll() is not None:      # died before ever saying hello
+            pending = list(self._pending)
+        for wp in pending:
+            rc = wp.poll()
+            if rc == 0 and (time.monotonic() - wp.launched_at
+                            <= self._connect_timeout):
+                # a *clean* pre-hello exit is a detaching bootstrap
+                # (kubectl run / sbatch submit-and-return): the worker it
+                # created is still on its way — keep the pairing record and
+                # the capacity slot for up to connect_timeout.
+                continue
+            if rc is not None:               # died before ever saying hello
+                tail = wp.stderr_tail()
+                expired = rc == 0
+                why = (f"detached (rc=0) but no worker dialed in within "
+                       f"connect_timeout={self._connect_timeout}s — "
+                       f"scheduler failed to place it?" if expired
+                       else "died before hello")
+                is_relaunch = getattr(wp, "is_relaunch", False)
+                removed = False
                 with self._pool_cv:
-                    if proc in self._spawning:
-                        self._spawning.remove(proc)
-                        self._capacity -= 1
+                    if wp in self._pending:
+                        self._pending.remove(wp)
+                        removed = True
+                        if expired:
+                            # detached bootstrap whose worker never dialed
+                            # in: write the slot off — uniformly, so that a
+                            # worker the scheduler places *late* restores
+                            # exactly the capacity that was deducted when
+                            # its record matches in _match_pending_locked
+                            # (no double-count, no untracked worker)
+                            self._capacity -= 1
+                            self._expired.append(wp)
+                        elif not is_relaunch:
+                            self._capacity -= 1
+                        self._note_launch_failure_locked(
+                            f"{wp.describe()} {why}"
+                            + (f"; stderr:\n    "
+                               + "\n    ".join(tail.splitlines())
+                               if tail else ""))
                         self._pool_cv.notify_all()
+                if removed and is_relaunch and not expired:
+                    # transient outage during self-heal (ssh refused while
+                    # the host reboots): keep retrying with ramping backoff
+                    # instead of burning the slot — startup launches above
+                    # still fail fast.
+                    self._queue_relaunch(wp.host, lifetime=0.0)
         if not self._hb_timeout:
             return
         now = time.monotonic()
@@ -540,9 +818,13 @@ class ClusterBackend(EventWaitMixin, Backend):
         w = handle.worker
         if w is not None:
             if w.proc is not None:
-                # locally spawned: hard-cancel — kill the worker; the driver
-                # loop sees EOF, fails the handle with FutureCancelledError,
-                # and self-heals with a replacement.
+                # driver-launched: hard-cancel — kill the bootstrap and
+                # sever the socket; the driver loop sees EOF, fails the
+                # handle with FutureCancelledError, and relaunches a
+                # replacement. For LocalLauncher the bootstrap *is* the
+                # worker; for ssh the HUP chain tears the remote one down;
+                # a detached bootstrap's remote worker keeps computing
+                # until its next send hits the severed socket, then exits.
                 try:
                     w.proc.kill()
                 except OSError:
@@ -585,7 +867,8 @@ class ClusterBackend(EventWaitMixin, Backend):
         with self._pool_cv:
             workers = list(self._all)
             self._all, self._idle = [], []
-            spawning, self._spawning = list(self._spawning), []
+            pending, self._pending = list(self._pending), []
+            self._relaunch_q = []
         for w in workers:
             try:
                 if w.sock is not None:
@@ -601,16 +884,14 @@ class ClusterBackend(EventWaitMixin, Backend):
                     future_label=h.task.label, worker=w.wid)
                 self._complete(h)
         self._notify_done()
-        for proc in spawning:
+        for wp in pending:
+            wp.kill()
+        # reap killed children so they don't linger as zombies/orphans
+        # (tests assert the reap through WorkerProc.poll)
+        for wp in pending + [w.proc for w in workers
+                             if w.proc is not None]:
             try:
-                proc.kill()
-            except OSError:
-                pass
-        # reap killed children so they don't linger as zombies
-        for proc in spawning + [w.proc for w in workers
-                                if w.proc is not None]:
-            try:
-                proc.wait(timeout=5)
+                wp.wait(timeout=5)
             except Exception:                # noqa: BLE001
                 pass
         for fd_obj in (self._listener,):

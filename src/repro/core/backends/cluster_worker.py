@@ -1,16 +1,33 @@
 """Standalone TCP cluster worker.
 
-Run one of these on any machine with network reach to a ``ClusterBackend``
-driver::
+The ``ClusterBackend`` driver normally *launches* these itself through the
+launcher subsystem (``launchers.py``): local subprocesses for
+``workers=N``/``hosts=N``, ssh or a scheduler command template for named
+hosts. Running one by hand (or from a scheduler script pointed at
+``backend.address``) is still first-class::
 
-    python -m repro.core.backends.cluster_worker DRIVER_HOST:PORT
+    python -m repro.core.backends.cluster_worker DRIVER_HOST:PORT \\
+        [--tag TOKEN] [--reconnect] [--max-idle-s 600]
 
-This is the paper's ad-hoc ``makeClusterPSOCK`` topology: the driver listens,
+This is the paper's ``makeClusterPSOCK`` topology: the driver listens,
 workers dial in, futures are shipped as pickled blobs and resolved remotely.
-The backend also spawns these locally (over 127.0.0.1) when given
-``workers=N`` — same code path, so single-host tests exercise the real
-multi-host transport. SSH bootstrap of remote workers is a ROADMAP item; for
-now you launch them by hand (or via your scheduler).
+Driver-launched and hand-launched workers share this code path, so
+single-host tests exercise the real multi-host transport.
+
+Flags for scheduler-launched fleets:
+
+* ``--tag TOKEN`` — echoed in the hello frame so the driver can pair this
+  worker with the ``WorkerProc`` bootstrap that launched it (relaunch
+  policy, cancel kills, shutdown reaping).
+* ``--reconnect`` — on connection loss keep redialing the driver (capped
+  backoff) instead of exiting. The default (exit, let the driver relaunch)
+  is right for driver-owned workers; ``--reconnect`` is right when the
+  *scheduler* owns the process and a driver restart should not strand the
+  allocation.
+* ``--max-idle-s S`` — exit cleanly after ``S`` seconds without any frame
+  from the driver (and bound reconnect attempts the same way), so a
+  scheduler-launched worker cannot outlive a dead driver and squat its
+  allocation forever. ``0`` (default): never.
 
 Protocol (see transport.py): the driver sends ``init`` (nested plan stack,
 session seed, heartbeat interval, extras) immediately on accept; the worker
@@ -25,7 +42,8 @@ answered with ``("progress", id, cond)`` streams and one
 
 Tip for hand-launched workers: export ``OMP_NUM_THREADS=1`` (and friends)
 before launching several per machine — by the time this module runs, numeric
-libraries may already be imported.
+libraries may already be imported. (Driver-side launchers set this for
+you.)
 """
 
 from __future__ import annotations
@@ -35,29 +53,35 @@ import os
 import pickle
 import socket
 import threading
+import time
 
 from ..errors import ChannelError
 from .transport import recv_frame, send_frame
 
 
-def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
-    """Connect to the driver and resolve shipped futures until told to stop
-    or the connection drops (either way: exit, let the driver self-heal)."""
-    os.environ.setdefault("OMP_NUM_THREADS", "1")
-    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
-
-    sock = socket.create_connection((host, port), timeout=connect_timeout)
-    sock.settimeout(None)
+def _serve(sock: socket.socket, *, tag: str = "",
+           max_idle_s: float = 0.0,
+           handshake_timeout: float = 30.0) -> str:
+    """Serve one driver connection until it ends; returns why:
+    ``"stop"`` (stop frame), ``"idle"`` (``max_idle_s`` with no driver
+    frames), or ``"eof"`` (connection lost / driver died)."""
+    # the init frame must arrive promptly — a peer that accepted but never
+    # serves (driver host crashed post-accept, port squatted by another
+    # service) must not hang us forever before the idle watchdog even
+    # starts. socket.timeout is an OSError: callers treat it as "eof".
+    sock.settimeout(handshake_timeout)
     sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     send_lock = threading.Lock()
 
     msg = recv_frame(sock)
     if not msg or msg[0] != "init":
         raise ChannelError(f"expected init frame from driver, got {msg!r}")
+    sock.settimeout(None)
     nested_blob, session_seed, hb_interval = msg[1], msg[2], msg[3]
     extras = msg[4] if len(msg) > 4 else {}
 
     stop = threading.Event()
+    state = {"last": time.monotonic(), "idle": False, "busy": False}
     if hb_interval:
         def _beat():
             while not stop.wait(hb_interval):
@@ -66,6 +90,43 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
                 except OSError:
                     return
         threading.Thread(target=_beat, name="cluster-hb", daemon=True).start()
+    if max_idle_s:
+        # Idle watchdog: no frames *from* the driver (tasks, puts) for
+        # max_idle_s -> sever the socket; the main loop's read error is
+        # then reported as "idle", not "eof", so --reconnect does not undo
+        # the exit. Heartbeats we *send* do not count as activity, but a
+        # task mid-execution does ("busy") — idleness means *unused*, and
+        # a task running longer than max_idle_s must never be killed.
+        def _watch():
+            grace_until = None
+            while not stop.wait(max(min(max_idle_s / 4.0, 1.0), 0.05)):
+                if state["busy"]:
+                    continue
+                if grace_until is None:
+                    if time.monotonic() - state["last"] <= max_idle_s:
+                        continue
+                    # farewell first: a deliberate idle exit must read as
+                    # a retire on the driver (capacity shrinks, no relaunch
+                    # churn). Keep serving until its ("stop",) answer so a
+                    # task already racing toward us completes normally
+                    # instead of hitting a severed socket.
+                    state["idle"] = True
+                    try:
+                        send_frame(sock, ("bye", "idle"), send_lock)
+                    except OSError:
+                        return
+                    grace_until = time.monotonic() \
+                        + max(2.0, min(max_idle_s, 10.0))
+                elif time.monotonic() >= grace_until:
+                    # driver never answered (pre-bye driver, lost frame):
+                    # sever and exit the old way
+                    try:
+                        sock.shutdown(socket.SHUT_RDWR)
+                    except OSError:
+                        pass
+                    return
+        threading.Thread(target=_watch, name="cluster-idle",
+                         daemon=True).start()
 
     from .. import planning as plan_mod
     from .. import rng as rng_mod
@@ -75,22 +136,28 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
     plan_mod._TLS.stack = tuple(pickle.loads(nested_blob))
     rng_mod.set_session_seed(session_seed)
 
-    send_frame(sock, ("hello", {"pid": os.getpid(),
-                                "host": socket.gethostname()}), send_lock)
+    meta = {"pid": os.getpid(), "host": socket.gethostname()}
+    if tag:
+        meta["tag"] = tag
+    send_frame(sock, ("hello", meta), send_lock)
 
     from .blobstore import BlobStore
     from .worker import ensure_refs, error_run, execute_shipped
 
     store = BlobStore(extras.get("blob_store_bytes"))
 
+    def _reason() -> str:
+        return "idle" if state["idle"] else "eof"
+
     try:
         while True:
             try:
                 msg = recv_frame(sock)
             except (EOFError, ChannelError, OSError):
-                return
+                return _reason()
+            state["last"] = time.monotonic()
             if msg[0] == "stop":
-                return
+                return "stop"
             if msg[0] == "put":
                 store.put(msg[1], msg[2])
                 continue
@@ -105,6 +172,7 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
                 except OSError:
                     pass
 
+            state["busy"] = True
             try:
                 with store.pinned(refs):     # siblings survive backfill puts
                     stopped = ensure_refs(
@@ -112,18 +180,21 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
                         lambda d: send_frame(sock, ("need", d), send_lock),
                         lambda: recv_frame(sock))
                     if stopped == "stop":
-                        return
+                        return "stop"
                     run = execute_shipped(
                         blob, emit,
                         resolve_ref=lambda r: store.resolve(r.digest))
             except (EOFError, OSError):
-                return
+                return _reason()
             except ChannelError as exc:
                 run = error_run(exc)
+            finally:
+                state["last"] = time.monotonic()
+                state["busy"] = False
             try:
                 send_frame(sock, ("result", task_id, run), send_lock)
             except OSError:
-                return
+                return _reason()
     finally:
         stop.set()
         try:
@@ -132,18 +203,82 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0) -> None:
             pass
 
 
+def run_worker(host: str, port: int, *, connect_timeout: float = 30.0,
+               tag: str = "", reconnect: bool = False,
+               max_idle_s: float = 0.0) -> None:
+    """Connect to the driver and resolve shipped futures until told to stop
+    or the connection drops. Default: exit on disconnect and let the
+    driver's relaunch policy self-heal; with ``reconnect=True`` keep
+    redialing (scheduler-owned workers), bounded by ``max_idle_s``."""
+    os.environ.setdefault("OMP_NUM_THREADS", "1")
+    os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+    retry_delay = 0.5
+    #: last time a driver connection was genuinely useful — max_idle_s
+    #: bounds the time since then across *every* failure shape (connect
+    #: refused, accept-then-drop, handshake hang), not just one branch
+    useful_at = time.monotonic()
+    while True:
+        if reconnect and max_idle_s \
+                and time.monotonic() - useful_at > max_idle_s:
+            return
+        try:
+            sock = socket.create_connection((host, port),
+                                            timeout=connect_timeout)
+        except OSError:
+            if not reconnect:
+                raise
+            time.sleep(retry_delay)
+            retry_delay = min(retry_delay * 2.0, 5.0)
+            continue
+        served_at = time.monotonic()
+        try:
+            reason = _serve(sock, tag=tag, max_idle_s=max_idle_s,
+                            handshake_timeout=connect_timeout)
+        except (EOFError, ChannelError, OSError):
+            # connection lost inside the init handshake (driver mid-restart
+            # accepted then closed): same as any other drop — redial when
+            # --reconnect, die-and-be-relaunched otherwise
+            if not reconnect:
+                raise
+            reason = "eof"
+        if reason in ("stop", "idle") or not reconnect:
+            return
+        # back off on the redial too: a driver that accepts-then-drops
+        # (mid-restart, port stolen by another service) must not turn this
+        # into a hot connect loop. A connection that held for a while
+        # counts as useful and resets the backoff.
+        if time.monotonic() - served_at >= 2.0:
+            retry_delay = 0.5
+            useful_at = time.monotonic()
+        time.sleep(retry_delay)
+        retry_delay = min(retry_delay * 2.0, 5.0)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="repro cluster worker: connect to a ClusterBackend "
                     "driver and resolve futures over TCP")
     ap.add_argument("address", help="driver HOST:PORT to connect to")
     ap.add_argument("--connect-timeout", type=float, default=30.0)
+    ap.add_argument("--tag", default="",
+                    help="launch token echoed in the hello frame so the "
+                         "driver pairs this worker with the bootstrap "
+                         "process that launched it")
+    ap.add_argument("--reconnect", action="store_true",
+                    help="keep redialing the driver after connection loss "
+                         "instead of exiting (scheduler-owned workers)")
+    ap.add_argument("--max-idle-s", type=float, default=0.0,
+                    help="exit after this many seconds without any frame "
+                         "from the driver (0: never) — keeps scheduler-"
+                         "launched workers from outliving a dead driver")
     args = ap.parse_args(argv)
     host, _, port = args.address.rpartition(":")
     if not port.isdigit():
         ap.error(f"address must be HOST:PORT, got {args.address!r}")
     run_worker(host or "127.0.0.1", int(port),
-               connect_timeout=args.connect_timeout)
+               connect_timeout=args.connect_timeout, tag=args.tag,
+               reconnect=args.reconnect, max_idle_s=args.max_idle_s)
 
 
 if __name__ == "__main__":

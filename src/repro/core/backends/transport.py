@@ -20,8 +20,11 @@ then the payload. Frame codecs:
 
 Tags in use on a cluster connection (driver <-> worker):
 
-  worker -> driver : ("hello", meta)       handshake; meta = {"pid", "host"}
+  worker -> driver : ("hello", meta)       handshake; meta = {"pid", "host"
+                                           [, "tag"]} (tag: launcher pairing)
                      ("hb",)               heartbeat (liveness only)
+                     ("bye", reason)       deliberate exit (--max-idle-s):
+                                           retire my slot, don't relaunch
                      ("progress", task_id, cond)    live ImmediateCondition
                      ("result", task_id, run)       CapturedRun (sanitized)
                      ("need", digest)      blob-store backfill request

@@ -13,12 +13,20 @@ nesting defaulting to ``sequential`` — the paper's built-in protection
 against N² oversubscription.
 
 Backend kwargs are passed through ``spec()`` to the backend constructor.
-Notable ones for the TCP ``cluster`` backend: ``workers=N`` (spawn N local
-connect-back workers), ``hosts=N`` or ``hosts=("a", "b")`` (wait for that
-many externally-launched ``cluster_worker`` processes instead),
-``bind=``/``port=`` (listener address), ``connect_timeout=``, and
-``heartbeat_interval=``/``heartbeat_timeout=`` (liveness detection) — see
-``backends/cluster.py``.
+Notable ones for the TCP ``cluster`` backend: ``workers=N`` / ``hosts=N``
+(launch N local connect-back workers), ``hosts=("a", "b")`` (bootstrap one
+worker per named host — ssh by default), ``launcher=`` (who does the
+bootstrap: a ``launchers.Launcher`` instance, ``"local"``/``"ssh"``, a
+scheduler command template containing ``{driver}``, or ``"external"`` to
+wait for hand-launched ``cluster_worker`` processes),
+``bind=``/``port=``/``advertise=`` (listener address), ``connect_timeout=``,
+``heartbeat_interval=``/``heartbeat_timeout=`` (liveness detection), and
+``relaunch_backoff=``/``relaunch_backoff_cap=`` (self-heal policy for
+launched workers) — see ``backends/cluster.py`` and
+``backends/launchers.py``. Launchers are hashable frozen dataclasses, so
+they ride inside the spec — and the warm-pool key below hashes the whole
+spec: re-planning to the same spec with the same launcher configuration
+re-attaches to the live launched workers.
 """
 
 from __future__ import annotations

@@ -2,9 +2,33 @@
 here — smoke tests and benches must see 1 real device. Sharding tests that
 need many devices spawn subprocesses with their own XLA_FLAGS."""
 
+import os
+
 import pytest
 
 import repro.core as rc
+
+#: per-test wall-clock cap (seconds), applied when pytest-timeout is
+#: installed: a hung launched worker fails its test in seconds instead of
+#: wedging scripts/ci.sh. Guarded like hypothesis — without the plugin the
+#: suite still collects and runs, just uncapped.
+_TIMEOUT_S = float(os.environ.get("REPRO_TEST_TIMEOUT_S", "180"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "launcher: worker-launcher subsystem tests (select with "
+        "'-m launcher', skip with '-m \"not launcher\"')")
+
+
+def pytest_collection_modifyitems(config, items):
+    if not config.pluginmanager.hasplugin("timeout"):
+        return
+    cap = pytest.mark.timeout(_TIMEOUT_S)
+    for item in items:
+        if item.get_closest_marker("timeout") is None:
+            item.add_marker(cap)
 
 
 @pytest.fixture(autouse=True)

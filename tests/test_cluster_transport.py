@@ -136,8 +136,10 @@ def test_workers_are_remote_processes_over_tcp(cluster):
 
 def test_standalone_worker_connects_and_resolves():
     """`python -m repro.core.backends.cluster_worker HOST:PORT` — the
-    multi-host path: the driver waits, the worker dials in."""
-    backend = ClusterBackend(hosts=1, connect_timeout=120)
+    hand-launched path (launcher="external"): the driver waits, the
+    operator-launched worker dials in."""
+    backend = ClusterBackend(hosts=1, launcher="external",
+                             connect_timeout=120)
     proc = None
     try:
         host, port = backend.address
@@ -262,6 +264,204 @@ def test_resolve_launches_lazy_futures():
     fs = [future(lambda i=i: i * 2, lazy=True) for i in range(3)]
     resolve(fs)
     assert [value(f) for f in fs] == [0, 2, 4]
+
+
+# --------------------------------------------------------------------------
+# property-based round-trips (tests/_hypothesis_shim.py): arbitrary frames
+# x {plain, zlib, OOB protocol-5, raw-array, int8 codec} survive FrameReader
+# byte-exact — including 0-length buffers (the PR 3 sendmsg livelock class)
+# and arbitrarily split reads
+# --------------------------------------------------------------------------
+
+from _hypothesis_shim import given, settings, st  # noqa: E402
+
+
+class _ScriptedSock:
+    """Feeds pre-encoded bytes to FrameReader / recv_frame in scripted
+    chunk sizes — deterministic split reads without a real socket."""
+
+    def __init__(self, data: bytes, sizes):
+        self._data = memoryview(bytes(data))
+        self._sizes = list(sizes)
+        self._off = 0
+
+    def _take(self, cap: int) -> int:
+        remaining = len(self._data) - self._off
+        if remaining == 0 or cap <= 0:
+            return 0
+        want = self._sizes.pop(0) if self._sizes else remaining
+        return max(1, min(want, cap, remaining))
+
+    def recv(self, n: int) -> bytes:
+        k = self._take(n)
+        chunk = bytes(self._data[self._off:self._off + k])
+        self._off += k
+        return chunk
+
+    def recv_into(self, buf, n=None) -> int:
+        cap = len(buf) if not n else min(n, len(buf))
+        k = self._take(cap)
+        buf[:k] = self._data[self._off:self._off + k]
+        self._off += k
+        return k
+
+
+class _PartialSendSock:
+    """sendmsg that accepts a scripted number of bytes per call — exercises
+    the _sendmsg_all resume loop (where 0-length OOB views used to
+    livelock)."""
+
+    def __init__(self, caps):
+        self.sent = bytearray()
+        self._caps = list(caps)
+
+    def sendmsg(self, views) -> int:
+        total = sum(len(v) for v in views)
+        cap = self._caps.pop(0) if self._caps else total
+        budget = max(1, min(cap, total))
+        took = budget
+        for v in views:
+            k = min(len(v), budget)
+            self.sent += bytes(v[:k])
+            budget -= k
+            if budget == 0:
+                break
+        return took
+
+
+def _frame_case(data):
+    """Draw one (frame-object, comparator) case covering every wire path."""
+    import pickle
+
+    import numpy as np
+
+    kind = data.draw(st.sampled_from(
+        ["plain", "zlib", "oob-array", "oob-empty-array", "oob-picklebuf",
+         "payload-raw", "payload-int8", "payload-pickle"]))
+    if kind == "plain":
+        obj = ("hello", {"pid": data.draw(st.integers(0, 1 << 30)),
+                         "host": "h"})
+        return obj, lambda got: got == obj
+    if kind == "zlib":
+        n = data.draw(st.integers(transport.COMPRESS_THRESHOLD,
+                                  transport.COMPRESS_THRESHOLD * 2))
+        obj = ("result", 7, "Z" * n)          # compressible, no OOB buffers
+        return obj, lambda got: got == obj
+    if kind in ("oob-array", "oob-empty-array"):
+        n = 0 if kind == "oob-empty-array" else data.draw(
+            st.integers(1, 4096))
+        arr = (np.arange(n, dtype=np.float32)
+               * np.float32(data.draw(st.floats(-4.0, 4.0))))
+        obj = ("result", 3, arr)
+
+        def check(got, arr=arr):
+            g = got[2]
+            return (got[0], got[1]) == ("result", 3) \
+                and g.dtype == arr.dtype and g.shape == arr.shape \
+                and bytes(g.tobytes()) == arr.tobytes()
+        return obj, check
+    if kind == "oob-picklebuf":
+        n = data.draw(st.integers(0, 8192))   # 0: zero-length PickleBuffer
+        blob = bytes(bytearray(
+            data.draw(st.lists(st.integers(0, 255), min_size=0,
+                               max_size=32)))) * (n // 32 + 1)
+        obj = ("put", b"d" * 16, pickle.PickleBuffer(blob))
+        return obj, lambda got, blob=blob: (
+            got[0] == "put" and bytes(got[1]) == b"d" * 16
+            and bytes(got[2]) == blob)
+    # payload codecs: the encoded blob must cross the wire byte-exact
+    n = data.draw(st.integers(0, 2048))
+    if kind == "payload-pickle":
+        value = {"k": list(range(n % 50)), "s": "x" * n}
+        blob = transport.encode_payload(value, int8=False)
+    else:
+        if kind == "payload-int8":
+            n = max(n, 1)        # the int8 quantizer reduces over the array
+        arr = np.arange(n, dtype=np.float32) * np.float32(0.37)
+        blob = transport.encode_payload(
+            arr, name=None, int8=(kind == "payload-int8"),
+            digest=b"p" * 16)
+    obj = ("put", b"p" * 16, pickle.PickleBuffer(blob))
+
+    def check(got, blob=blob, kind=kind):
+        if not (got[0] == "put" and bytes(got[2]) == blob):
+            return False
+        if kind == "payload-raw":             # raw-array codec is lossless
+            val, _cacheable = transport.decode_payload(bytes(got[2]))
+            return val.tobytes() == arr.tobytes() and val.dtype == arr.dtype
+        return True
+    return obj, check
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_transport_roundtrip_property(data):
+    """encode_frame -> FrameReader under arbitrary split reads: every frame
+    codec and payload codec survives byte-exact, including 0-length OOB
+    buffers."""
+    obj, check = _frame_case(data)
+    blob = transport.encode_frame(obj)
+    sizes = data.draw(st.lists(st.integers(1, 2048), min_size=0,
+                               max_size=40))
+    reader = transport.FrameReader(_ScriptedSock(blob, sizes))
+    frames = []
+    for _ in range(len(blob) + 1):
+        frames += reader.feed()
+        if frames:
+            break
+    assert len(frames) == 1
+    assert check(frames[0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_transport_blocking_recv_property(data):
+    """The same cases through the blocking recv_frame path (preallocated
+    recv_into bulk reads)."""
+    obj, check = _frame_case(data)
+    blob = transport.encode_frame(obj)
+    sizes = data.draw(st.lists(st.integers(1, 1024), min_size=0,
+                               max_size=40))
+    got = transport.recv_frame(_ScriptedSock(blob, sizes))
+    assert check(got)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_sendmsg_scatter_property(data):
+    """_sendmsg_all under scripted partial sends emits exactly the
+    contiguous encoding — zero-length views (empty ndarray / 0-byte
+    PickleBuffer) neither hang the resume loop nor corrupt the stream."""
+    obj, _check = _frame_case(data)
+    parts = transport.encode_frame_parts(obj)
+    caps = data.draw(st.lists(st.integers(1, 4096), min_size=0,
+                              max_size=40))
+    sock = _PartialSendSock(caps)
+    transport._sendmsg_all(sock, parts)
+    assert bytes(sock.sent) == transport.encode_frame(obj)
+
+
+def test_empty_array_frame_roundtrip_single_byte_reads():
+    """The PR 3 livelock class, pinned deterministically: an empty ndarray
+    (0-byte out-of-band buffer) crosses both read paths under worst-case
+    1-byte splits."""
+    import numpy as np
+    arr = np.empty((0,), dtype=np.float32)
+    obj = ("result", 1, arr)
+    blob = transport.encode_frame(obj)
+
+    reader = transport.FrameReader(_ScriptedSock(blob, [1] * len(blob)))
+    frames = []
+    while not frames:
+        frames += reader.feed()
+    assert frames[0][2].shape == (0,)
+
+    got = transport.recv_frame(_ScriptedSock(blob, [1] * len(blob)))
+    assert got[2].shape == (0,)
+
+    sock = _PartialSendSock([1] * len(blob))
+    transport._sendmsg_all(sock, transport.encode_frame_parts(obj))
+    assert bytes(sock.sent) == blob
 
 
 def test_no_sleep_polling_in_collection_paths():

@@ -16,11 +16,15 @@ from repro.core import (first, first_successful, future, future_map, gather,
                         value)
 
 BACKENDS = [
-    ("sequential", {}),
-    ("threads", {"workers": 2}),
-    ("processes", {"workers": 2}),
-    ("cluster", {"workers": 2}),
-    ("jax_async", {}),
+    ("sequential", "sequential", {}),
+    ("threads", "threads", {"workers": 2}),
+    ("processes", "processes", {"workers": 2}),
+    ("cluster", "cluster", {"workers": 2}),
+    # the same TCP backend bootstrapping its own fleet through the launcher
+    # subsystem (LocalLauncher is the hosts=N default): the full conformance
+    # surface must hold on *launched* workers, not just pre-connected ones
+    ("cluster+local-launcher", "cluster", {"hosts": 2}),
+    ("jax_async", "jax_async", {}),
 ]
 
 IDS = [b[0] for b in BACKENDS]
@@ -28,7 +32,7 @@ IDS = [b[0] for b in BACKENDS]
 
 @pytest.fixture(params=BACKENDS, ids=IDS)
 def backend(request):
-    name, kw = request.param
+    _id, name, kw = request.param
     rc.plan(name, **kw)
     yield name
     rc.shutdown()

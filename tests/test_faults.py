@@ -3,6 +3,11 @@
 The paper's §Future-work names restart(f)/retry on FutureError and a
 future_either construct; these are first-class here because they are the
 substrate of the multi-pod launcher's failure handling.
+
+The second half drives the launcher subsystem through the fault-injection
+harness (``_cluster_harness.py``): harness-chosen kills land mid-task on a
+chosen worker deterministically, exercising relaunch-with-backoff, chunk
+retry, pre-hello stderr surfacing, and orphan-free shutdown.
 """
 
 import os
@@ -11,7 +16,10 @@ import time
 import pytest
 
 import repro.core as rc
+from _cluster_harness import HarnessLauncher
 from repro.core import future, future_either, future_map, retry, value
+from repro.core.backends.cluster import ClusterBackend
+from repro.core.backends.launchers import CommandLauncher
 
 
 @pytest.fixture
@@ -109,3 +117,294 @@ def test_cancel_running_task(pool):
         value(f)
     # pool healed
     assert value(future(lambda: 1)) == 1
+
+
+# --------------------------------------------------------------------------
+# launcher subsystem under injected faults (tests/_cluster_harness.py)
+# --------------------------------------------------------------------------
+
+#: fast-heal knobs so the fault tests run in seconds, not default backoffs
+_FAST = dict(heartbeat_interval=0.1, heartbeat_timeout=3.0,
+             relaunch_backoff=0.05, relaunch_backoff_cap=0.2)
+
+
+@pytest.mark.launcher
+def test_harness_kill_mid_map_relaunches_and_retries(tmp_path):
+    """A harness-injected SIGKILL lands mid-chunk on the worker running it
+    (deterministically: the body publishes its pid, then blocks); the
+    driver relaunches a replacement and future_map's retry completes the
+    map with correct results."""
+    h = HarnessLauncher()
+    rc.plan("cluster", hosts=2, launcher=h, **_FAST)
+    marker = str(tmp_path / "victim-pid")
+    backend = rc.active_backend()
+    watcher = h.kill_on_pidfile(marker)
+
+    def elem(x, _marker=marker):
+        import os as _os
+        import time as _time
+        if x == 3 and not _os.path.exists(_marker):
+            with open(_marker, "w") as fh:
+                fh.write(str(_os.getpid()))
+                fh.flush()
+            while True:                  # stay mid-task until the kill lands
+                _time.sleep(0.05)
+        return x * 2
+
+    out = future_map(elem, list(range(6)), chunks=6, retries=2)
+    assert out == [0, 2, 4, 6, 8, 10]
+    watcher.join(timeout=10)
+    assert watcher.killed is not None            # the kill really landed...
+    assert watcher.killed.poll() is not None     # ...on a worker that died
+    # the driver-owned relaunch is asynchronous (backoff-delayed): wait for
+    # the replacement bootstrap, 2 initial launches + >=1 relaunch
+    h.wait_launches(3, timeout=15)
+    assert backend._relaunch_log                 # driver-owned self-heal ran
+    rc.shutdown()
+
+
+@pytest.mark.launcher
+def test_worker_dead_before_hello_surfaces_stderr():
+    """A launched worker that crashes before its first hello fails startup
+    with the worker's own stderr quoted in the error."""
+    boom = CommandLauncher(template=(
+        "{python} -c \"import sys; "
+        "sys.stderr.write('boom-before-hello'); sys.exit(7)\""))
+    with pytest.raises(rc.ChannelError, match="boom-before-hello"):
+        ClusterBackend(hosts=1, launcher=boom, connect_timeout=15, **_FAST)
+
+
+@pytest.mark.launcher
+def test_relaunch_backoff_cap_is_honored():
+    """Repeated kills on one host ramp the relaunch delay exponentially
+    and never past relaunch_backoff_cap; the ramp is monotone."""
+    h = HarnessLauncher()
+    backend = ClusterBackend(hosts=1, launcher=h,
+                             heartbeat_interval=0.1, heartbeat_timeout=3.0,
+                             relaunch_backoff=0.05, relaunch_backoff_cap=0.2,
+                             relaunch_reset_after=3600.0)
+    kills = 5
+    try:
+        for i in range(kills):
+            procs = h.wait_launches(i + 1)
+            backend.wait_for_workers(1, timeout=30)
+            h.kill(procs[-1])
+            deadline = time.time() + 15
+            while len(backend._relaunch_log) < i + 1:
+                assert time.time() < deadline, "relaunch never scheduled"
+                time.sleep(0.01)
+        delays = list(backend._relaunch_log)
+        assert len(delays) == kills
+        assert delays == sorted(delays)              # monotone ramp
+        assert max(delays) <= 0.2 + 1e-9             # cap honored
+        assert delays[-1] == pytest.approx(0.2)      # cap actually reached
+        assert delays[0] == pytest.approx(0.05)      # started at the floor
+    finally:
+        backend.shutdown()
+
+
+@pytest.mark.launcher
+def test_shutdown_reaps_all_launched_workers():
+    """shutdown() leaves no orphan processes: every WorkerProc the launcher
+    ever produced has exited (asserted via WorkerProc.poll)."""
+    h = HarnessLauncher()
+    rc.plan("cluster", hosts=2, launcher=h, **_FAST)
+    assert future_map(lambda x: x + 1, [1, 2, 3]) == [2, 3, 4]
+    assert len(h.alive()) == 2
+    rc.shutdown()
+    for wp in h.procs:
+        assert wp.poll() is not None, f"orphaned: {wp.describe()}"
+
+
+@pytest.mark.launcher
+def test_max_idle_does_not_kill_running_task():
+    """--max-idle-s means *unused*, not *slow*: a task outlasting the idle
+    window must complete; only a genuinely idle worker exits."""
+    from repro.core.backends.launchers import LocalLauncher
+    backend = ClusterBackend(
+        hosts=1, launcher=LocalLauncher(worker_args=("--max-idle-s", "1")),
+        **_FAST)
+    try:
+        f = future(lambda: (time.sleep(2.5), "survived")[1], backend=backend)
+        assert value(f) == "survived"
+    finally:
+        backend.shutdown()
+
+
+@pytest.mark.launcher
+def test_relaunch_retries_through_transient_launch_failure():
+    """A relaunch attempt that dies before hello (host mid-reboot: ssh
+    exits immediately) must not burn the slot: the driver re-queues the
+    host with ramping backoff until a launch sticks."""
+    import signal
+
+    from repro.core.backends.launchers import (CommandLauncher, Launcher,
+                                               LocalLauncher)
+
+    class Flaky(Launcher):
+        local_only = True
+
+        def __init__(self):
+            self.ok = LocalLauncher()
+            self.boom = CommandLauncher(
+                "{python} -c \"import sys; sys.exit(3)\"")
+            self.calls = 0
+
+        def launch(self, host, driver_addr, *, tag=None):
+            self.calls += 1
+            inner = self.boom if self.calls in (2, 3) else self.ok
+            return inner.launch(host, driver_addr, tag=tag)
+
+        def describe(self):
+            return "flaky"
+
+    fl = Flaky()
+    backend = ClusterBackend(hosts=1, launcher=fl,
+                             heartbeat_interval=0.1, heartbeat_timeout=3.0,
+                             relaunch_backoff=0.05, relaunch_backoff_cap=0.2,
+                             relaunch_reset_after=3600.0)
+    try:
+        os.kill(backend.worker_pids()[0], signal.SIGKILL)
+        # attempt 2 and 3 die pre-hello; the slot keeps retrying and
+        # attempt 4 heals the pool — blocking dispatch proves it. (A
+        # dispatch racing the undetected death legitimately fails with
+        # WorkerDiedError; retry like future_map would.)
+        deadline = time.time() + 30
+        while True:
+            try:
+                assert value(future(lambda: "healed", backend=backend)) \
+                    == "healed"
+                break
+            except rc.WorkerDiedError:
+                assert time.time() < deadline, "pool never healed"
+        assert fl.calls >= 4
+        with backend._pool_cv:
+            assert backend._capacity == 1    # the slot was never burned
+    finally:
+        backend.shutdown()
+
+
+@pytest.mark.launcher
+def test_idle_exit_retires_instead_of_relaunch_churn():
+    """A worker that exits via --max-idle-s says ("bye") first: the driver
+    shrinks capacity like a retire instead of relaunching — an idle-capped
+    fleet must wind down, not churn launch/idle-exit forever."""
+    from repro.core.backends.launchers import LocalLauncher
+    h = HarnessLauncher(LocalLauncher(worker_args=("--max-idle-s", "0.5")))
+    backend = ClusterBackend(hosts=1, launcher=h, **_FAST)
+    try:
+        assert value(future(lambda: "used once", backend=backend)) \
+            == "used once"
+        wp = h.procs[0]
+        deadline = time.time() + 15
+        while wp.poll() is None and time.time() < deadline:
+            time.sleep(0.05)
+        assert wp.poll() is not None         # idle-exited on its own
+        time.sleep(1.0)                      # would-be relaunch window
+        assert h.launches == 1               # no churn
+        with backend._pool_cv:
+            assert backend._capacity == 0    # slot retired, not respawned
+        # explicit resize to the nominal count regrows the retired slot
+        # (resize is capacity-relative for launcher-owned pools)
+        backend.resize(1)
+        backend.wait_for_workers(1, timeout=30)
+        assert h.launches == 2
+    finally:
+        backend.shutdown()
+
+
+@pytest.mark.launcher
+def test_ssh_launcher_command_shape():
+    """SSHLauncher builds the makeClusterPSOCK bootstrap verbatim-checkably
+    (no sshd in CI): batch-mode ssh, env forwarding, remote module invoke,
+    tag token; reverse_tunnel rewrites the dial address to the worker's
+    side of a -R tunnel."""
+    from repro.core.backends.launchers import SSHLauncher
+    plain = SSHLauncher(user="u", python="python3.11",
+                        pythonpath="/opt/repro/src",
+                        env=(("OMP_NUM_THREADS", "1"),))
+    cmd = plain.command("nodeA", ("driver.example", 45000), tag="t-1")
+    assert cmd[0] == "ssh" and "BatchMode=yes" in cmd
+    assert cmd[-2] == "u@nodeA"
+    remote = cmd[-1]
+    assert "PYTHONPATH=/opt/repro/src" in remote
+    assert "OMP_NUM_THREADS=1" in remote
+    assert "-m repro.core.backends.cluster_worker driver.example:45000" \
+        in remote
+    assert "--tag t-1" in remote
+    assert "-R" not in cmd
+
+    tun = SSHLauncher(reverse_tunnel=True)
+    cmd = tun.command("nodeB", ("driver.example", 45000), tag="t-2")
+    assert cmd[cmd.index("-R") + 1] == "45000:127.0.0.1:45000"
+    assert "cluster_worker 127.0.0.1:45000" in cmd[-1]   # dials the tunnel
+
+
+@pytest.mark.launcher
+def test_resolve_launcher_defaults_and_templates():
+    """launcher= spec-kwarg sugar: hosts shape picks the default, strings
+    name launchers or are command templates, 'external' means hands-off."""
+    from repro.core.backends.launchers import (CommandLauncher,
+                                               LocalLauncher, SSHLauncher,
+                                               resolve_launcher)
+    assert isinstance(resolve_launcher(None, None), LocalLauncher)
+    assert isinstance(resolve_launcher(None, 4), LocalLauncher)
+    assert isinstance(resolve_launcher(None, ("a", "b")), SSHLauncher)
+    assert resolve_launcher("external", 2) is None
+    tmpl = resolve_launcher("srun {python} -m "
+                            "repro.core.backends.cluster_worker {driver}")
+    assert isinstance(tmpl, CommandLauncher)
+    split = resolve_launcher("x {driver_host} {driver_port}")
+    assert isinstance(split, CommandLauncher)    # split-placeholder form
+    with pytest.raises(ValueError):
+        resolve_launcher("sssh")             # typo, not a template
+    # non-placeholder braces (kubectl JSON, shell ${VAR}) pass through
+    cl = CommandLauncher("bash -c true {tag} --x={nope} ${HOME} {driver}")
+    wp = cl.launch("127.0.0.1", ("127.0.0.1", 9), tag="t9")
+    assert "--x={nope}" in wp.cmd and "${HOME}" in wp.cmd
+    assert "127.0.0.1:9" in wp.cmd and "t9" in wp.cmd
+    wp.wait(10)
+    # launchers are hashable (warm-pool key) and picklable (nested stacks)
+    import pickle
+    s = SSHLauncher(reverse_tunnel=True)
+    assert hash(s) == hash(pickle.loads(pickle.dumps(s)))
+    assert {s: 1}[SSHLauncher(reverse_tunnel=True)] == 1
+
+
+@pytest.mark.launcher
+def test_detaching_bootstrap_pairs_tagless_worker():
+    """kubectl-run/sbatch-style bootstraps exit 0 right after submitting
+    and cannot forward --tag: the clean pre-hello exit must not burn the
+    capacity slot, and the tagless hello pairs first-come-first-served so
+    the worker is still driver-owned (relaunch-on-death and all)."""
+    from repro.core.backends.launchers import CommandLauncher
+    tmpl = ("bash -c \"{python} -m repro.core.backends.cluster_worker "
+            "{driver} >/dev/null 2>&1 & exit 0\"")
+    backend = ClusterBackend(hosts=1, launcher=CommandLauncher(tmpl),
+                             connect_timeout=60, **_FAST)
+    try:
+        assert value(future(lambda: 40 + 2, backend=backend)) == 42
+        with backend._pool_cv:
+            owned = [w.proc for w in backend._all if w.ready]
+        assert owned and all(wp is not None for wp in owned)
+        assert owned[0].poll() == 0          # the bootstrap itself detached
+    finally:
+        backend.shutdown()
+
+
+@pytest.mark.launcher
+def test_harness_partition_is_worker_death(tmp_path):
+    """A harness-severed TCP stream (process untouched) surfaces as
+    WorkerDiedError and the pool self-heals with a relaunch."""
+    h = HarnessLauncher()
+    rc.plan("cluster", hosts=1, launcher=h, **_FAST)
+    backend = rc.active_backend()
+    f = future(lambda: time.sleep(60))
+    wp = h.busy_proc(backend, timeout=10)
+    assert h.partition(backend, wp)
+    with pytest.raises(rc.WorkerDiedError):
+        value(f)
+    # the partitioned worker's process is reaped or exits on EOF; the
+    # relaunched one serves new work
+    assert value(future(lambda: "healed")) == "healed"
+    rc.shutdown()
