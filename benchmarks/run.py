@@ -377,6 +377,136 @@ def bench_worker_bootstrap(quick: bool = False) -> None:
         "workers": 2, "reps": reps}
 
 
+def bench_stream_throughput(quick: bool = False) -> None:
+    """Streaming frontend vs the eager ``future_map`` shape: items/s over
+    a 10k-element map with realistically skewed per-item cost, at
+    ``max_in_flight`` in {workers, 2*workers, unbounded} on the processes
+    and cluster backends. The eager shape ships one coarse chunk per
+    worker (the pre-stream default), so skew turns into tail latency;
+    fine-grained admission-controlled chunks load-balance it away. Also
+    probes the peak-RSS cost of materializing a 1M-element source vs
+    streaming it (O(in-flight) memory)."""
+    n_items = 2_000 if quick else 10_000
+
+    def work(i, _n=n_items):
+        # quadratically skewed per-item cost: with one coarse chunk per
+        # worker, 7/8 of the total work lands in the top half — the
+        # straggler shape where fine-grained streamed chunks load-balance
+        # (the paper's §Future-work chunking argument, measured)
+        acc = 0
+        for k in range(100 + (7000 * i * i) // (_n * _n)):
+            acc += k * k
+        return acc
+
+    for name in ("processes", "cluster"):
+        rc.plan(name, workers=2)
+        w = rc.active_backend().workers
+        xs = list(range(n_items))
+        # the stream variants are near-identical configs (admission bounds
+        # in-flight at the worker count), so best-of-N is what separates
+        # real effects from scheduler noise on a small shared box
+        reps = 1 if quick else 5
+        chunk = max(n_items // (4 * w), 1)
+        want = sum(work(i) for i in range(n_items))
+        rc.future_map(work, xs)               # warm workers + shipped code
+
+        def run_eager():
+            rc.future_map(work, xs)
+
+        def run_stream(mif):
+            got = (rc.stream(iter(xs), max_in_flight=mif)
+                   .map(work, chunk=chunk)
+                   .reduce(lambda a, b: a + b))
+            assert got == want
+
+        variants = [("eager_future_map", run_eager),
+                    ("mif_workers", lambda: run_stream(w)),
+                    ("mif_2x_workers", lambda: run_stream(2 * w)),
+                    ("mif_unbounded", lambda: run_stream(n_items))]
+        # interleave reps across variants (best-of): machine drift on a
+        # small shared box lands on every variant equally, not on whoever
+        # ran last
+        times = {tag: [] for tag, _ in variants}
+        for _ in range(reps):
+            for tag, run in variants:
+                t0 = time.perf_counter()
+                run()
+                times[tag].append(time.perf_counter() - t0)
+        eager_s = min(times["eager_future_map"])
+        rows = {"eager_future_map_items_per_s": n_items / eager_s}
+        _row(f"stream/{name}/eager_future_map", eager_s / n_items * 1e6,
+             f"{n_items / eager_s:,.0f} items/s, {w} coarse chunks")
+        for tag, _ in variants[1:]:
+            dt = min(times[tag])
+            rows[f"stream_{tag}_items_per_s"] = n_items / dt
+            _row(f"stream/{name}/{tag}", dt / n_items * 1e6,
+                 f"{n_items / dt:,.0f} items/s, chunk={chunk}, "
+                 f"vs eager {n_items / eager_s:,.0f}")
+            if tag == "mif_2x_workers":
+                rows["us_per_item_stream"] = dt / n_items * 1e6
+                rows["stream_over_eager"] = eager_s / dt
+        rows["workers"] = w
+        rows["chunk"] = chunk
+        _CLUSTER_JSON.setdefault("bench_stream_throughput",
+                                 {})[name] = rows
+        rc.shutdown()
+    rc.plan("sequential")
+
+    # peak-memory: reduce a 1M-element generator streamed vs materialized.
+    # Primary probe is tracemalloc (python allocation high-water mark —
+    # deterministic, and not masked by the process's earlier jax/XLA RSS
+    # peak); the ru_maxrss deltas ride along for the OS view.
+    import resource
+    import tracemalloc
+
+    def _rss_kib() -> float:
+        return float(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
+
+    def _series(n):
+        return (float(i) for i in range(n))   # real objects, not cached ints
+
+    n_big = 100_000 if quick else 1_000_000
+    rc.plan("threads", workers=2)
+    rc.value(rc.future(lambda: 1))            # warm the pool outside tracing
+    rss0 = _rss_kib()
+    tracemalloc.start()
+    streamed = (rc.stream(_series(n_big), max_in_flight=4)
+                .batch(20_000)
+                .map(sum, chunk=1)
+                .reduce(lambda a, b: a + b))
+    _, stream_peak = tracemalloc.get_traced_memory()
+    tracemalloc.reset_peak()
+    rss_after_stream = _rss_kib()
+    xs_big = list(_series(n_big))             # the eager frontend's first act
+    assert sum(xs_big) == streamed
+    _, list_peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    rss_after_list = _rss_kib()
+    del xs_big
+    rc.shutdown()
+    rc.plan("sequential")
+    _row("stream/peak_mem_streamed_1m", stream_peak / 1024,
+         f"KiB python-alloc peak streaming {n_big} elements "
+         f"(rss delta {_fmt_kib(rss_after_stream - rss0)})")
+    _row("stream/peak_mem_materialized_1m", list_peak / 1024,
+         f"KiB python-alloc peak for list() of the same source "
+         f"({list_peak / max(stream_peak, 1):.0f}x, rss delta "
+         f"{_fmt_kib(rss_after_list - rss_after_stream)})")
+    _CLUSTER_JSON.setdefault("bench_stream_throughput", {})["memory"] = {
+        "n_elements": n_big,
+        "streamed_peak_alloc_kib": stream_peak / 1024,
+        "materialized_peak_alloc_kib": list_peak / 1024,
+        "materialized_over_streamed": list_peak / max(stream_peak, 1),
+        "streamed_rss_delta_kib": rss_after_stream - rss0,
+        "materialized_rss_delta_kib": rss_after_list - rss_after_stream,
+    }
+    _CLUSTER_JSON["bench_stream_throughput"]["n_items"] = n_items
+
+
+def _fmt_kib(v: float) -> str:
+    return f"{v:,.0f}KiB"
+
+
 def _write_cluster_artifact(quick: bool) -> None:
     if not _CLUSTER_JSON:
         return
@@ -463,14 +593,14 @@ def bench_roofline(quick: bool = False) -> None:
 BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_chunking, bench_cluster_overhead, bench_wait_vs_poll,
            bench_callback_latency, bench_globals_cache,
-           bench_worker_bootstrap, bench_compression,
-           bench_kernels, bench_roofline]
+           bench_worker_bootstrap, bench_stream_throughput,
+           bench_compression, bench_kernels, bench_roofline]
 
 #: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
 #: exactly these, so CI can re-emit the perf-trajectory artifact cheaply
 CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
                    bench_callback_latency, bench_globals_cache,
-                   bench_worker_bootstrap]
+                   bench_worker_bootstrap, bench_stream_throughput]
 
 
 def main() -> None:

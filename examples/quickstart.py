@@ -1,14 +1,21 @@
-"""Quickstart: the Future API, mirroring the paper's running examples.
+"""Quickstart: the Future API and the streaming frontend built on it.
+
+Mirrors the paper's running examples (the three constructs, plan(),
+relaying, parallel RNG, EITHER, fault tolerance), then shows the layer the
+paper argues those constructs are sufficient to build: `stream()` pipelines
+with bounded in-flight backpressure — map-reduce over sources too large to
+materialize.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 
+import itertools
 import time
 import warnings
 
 import repro.core as rc
 from repro.core import (ListEnv, future, future_either, future_map, plan,
-                        resolved, value)
+                        resolved, stream, value)
 
 
 def slow_fcn(x):
@@ -36,7 +43,31 @@ def main():
         env[i] = future(lambda i=i: slow_fcn(i))
     print("listenv:  ", env.as_list())
 
-    # -- map-reduce with load-balanced chunking (future.apply analogue) ----
+    # -- streaming pipelines (the frontend layer on the three constructs) --
+    #
+    # stream() never materializes its source and keeps at most
+    # max_in_flight futures outstanding (default 2 * workers), dispatching
+    # through the backend admission protocol the moment a worker frees —
+    # not by blocking inside submit. Chain .filter/.batch/.map stages,
+    # then collect ordered, iterate as completed, or fold with .reduce.
+    s = stream(range(12), max_in_flight=4)
+    print("stream:   ", s.map(slow_fcn, chunk=3).collect(ordered=True))
+    print("          peak in-flight:", s.stats["peak_in_flight"],
+          "of cap", s.stats["max_in_flight"])
+
+    # -- streaming reduce over a generator too large to materialize --------
+    #
+    # Ten million squares would need ~GBs as a list; the stream holds
+    # O(in-flight) chunks instead — same code shape at any length,
+    # including unbounded generators.
+    big = (i for i in range(10_000_000))
+    total = (stream(big, max_in_flight=4)
+             .batch(500_000)               # one future per 500k-element slab
+             .map(lambda xs: sum(v * v for v in xs), chunk=1)
+             .reduce(lambda a, b: a + b))  # folds as results complete
+    print("streamed sum of 10M squares:", total)
+
+    # -- eager map-reduce (future.apply analogue; now sugar over stream) ---
     print("future_map:", future_map(slow_fcn, range(8)))
 
     # -- exception + condition relay (paper §Exception handling/§Relaying) -
@@ -66,8 +97,8 @@ def main():
 
     a = future_map(draw, [0, 0, 0], seed=True, chunks=1)
     rc.set_session_seed(42)
-    b = future_map(draw, [0, 0, 0], seed=True, chunks=3)
-    print("rng invariant to chunking:", a == b, a)
+    b = stream([0, 0, 0], max_in_flight=1).map(draw, seed=True).collect()
+    print("rng invariant to frontend/chunking/in-flight:", a == b, a)
 
     # -- EITHER construct (paper §Other uses) -------------------------------
     winner = future_either(
@@ -90,6 +121,17 @@ def main():
     except rc.WorkerDiedError as e:
         print("node failure detected:", e)
     print("pool self-healed:", value(future(lambda: "alive")))
+
+    # -- streaming + retries ride the same fault model ----------------------
+    # (an unbounded source with as_completed(): take five results and move
+    # on; breaking out cancels the in-flight tail)
+    first_five = []
+    for r in stream(itertools.count()).map(lambda v: v * 10, chunk=2) \
+            .as_completed():
+        first_five.append(r)
+        if len(first_five) >= 5:
+            break
+    print("first five from an unbounded stream:", sorted(first_five))
     rc.shutdown()
 
 

@@ -40,6 +40,12 @@ METRICS = [
 INFO_METRICS = [
     ("us_cold_launch", ("bench_worker_bootstrap", "us_cold_launch")),
     ("us_warm_reattach", ("bench_worker_bootstrap", "us_warm_reattach")),
+    # streaming frontend throughput (per-item latency at max_in_flight =
+    # 2*workers) — informational while the bench accumulates a baseline
+    ("us_per_item_stream/processes",
+     ("bench_stream_throughput", "processes", "us_per_item_stream")),
+    ("us_per_item_stream/cluster",
+     ("bench_stream_throughput", "cluster", "us_per_item_stream")),
 ]
 
 

@@ -9,6 +9,13 @@
 
 Backends: "sequential" (default), "threads", "processes", "cluster",
 "jax_async". See DESIGN.md §2 for the paper↔framework mapping.
+
+The streaming frontend (`core/stream.py`) builds lazy, backpressured
+map-reduce pipelines on the same three constructs::
+
+    from repro.core import stream
+
+    total = stream(huge_generator()).map(score, seed=True).reduce(add)
 """
 
 from . import rng                                            # noqa: F401
@@ -30,7 +37,8 @@ from .future import (Future, Waiter, as_completed, first,  # noqa: F401
                      first_successful, future, gather, merge, resolve,
                      resolved, value, wait_any)
 from .mapreduce import (future_either, future_lapply, future_map,  # noqa: F401
-                        future_map_chunked_lazy, retry)
+                        future_map_chunked_lazy, retry, retry_future)
+from .stream import Stream, stream                           # noqa: F401
 from .planning import (available_cores, plan, shutdown, spec, tweak,  # noqa: F401
                    active_backend)
 from .rng import set_session_seed                            # noqa: F401
@@ -41,8 +49,8 @@ __all__ = [
     "plan", "spec", "tweak", "shutdown", "available_cores", "active_backend",
     "Launcher", "LocalLauncher", "SSHLauncher", "CommandLauncher",
     "WorkerProc",
-    "future_map", "future_lapply", "future_either", "retry",
-    "future_map_chunked_lazy",
+    "future_map", "future_lapply", "future_either", "retry", "retry_future",
+    "future_map_chunked_lazy", "stream", "Stream",
     "FutureError", "WorkerDiedError", "ChannelError", "FutureCancelledError",
     "GlobalsError", "NonExportableObjectError", "RNGMisuseWarning",
     "signal_progress", "message", "ListEnv", "set_session_seed",

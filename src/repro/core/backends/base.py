@@ -56,6 +56,50 @@ class Backend(abc.ABC):
         """Begin resolving; returns an opaque handle. May block when all
         workers are busy (paper: future() blocks until a worker frees up)."""
 
+    # -- admission control ---------------------------------------------------
+    #
+    # The streaming frontend (``core/stream.py``) and the continuation
+    # dispatcher do not want the paper's "future() blocks" semantics: they
+    # hold a queue of runnable work and need to dispatch *exactly when
+    # capacity exists*. ``free_slots``/``try_submit`` are that protocol —
+    # submission becomes an admission decision the caller can take without
+    # parking a thread inside ``submit``.
+
+    #: whether continuation steps may run through this backend's
+    #: ``try_submit``. Only safe for backends whose submission is
+    #: synchronous and slot-free (sequential): a continuation *holding a
+    #: bounded worker slot* deadlocks when user code inside it blocks on a
+    #: nested eager future, and process/socket backends only run pickled
+    #: blobs anyway. Everything else takes the slot-free continuation pool.
+    dispatches_continuations: bool = False
+
+    def free_slots(self) -> int:
+        """How many tasks this backend could begin resolving right now
+        without blocking in ``submit()``.
+
+        The default (for third-party backends that predate the admission
+        protocol) optimistically reports ``workers`` — their ``try_submit``
+        therefore degrades to plain ``submit`` and may block, which is
+        exactly the legacy behaviour. Built-in backends report real counts:
+        free pool threads/processes, or the cluster driver's idle-worker
+        set (relaunch-pending slots count as absent — a slot that is being
+        respawned cannot accept work *now*).
+        """
+        return self.workers
+
+    def try_submit(self, task: TaskSpec) -> Any:
+        """Non-blocking submit: begin resolving ``task`` iff a worker is
+        free, else return ``None`` (the caller keeps the task queued and
+        re-offers it when capacity frees — e.g. after the next completion
+        callback). Never blocks on built-in backends.
+
+        The default routes through :meth:`free_slots`, which makes it
+        exact wherever ``free_slots`` is.
+        """
+        if self.free_slots() <= 0:
+            return None
+        return self.submit(task)
+
     @abc.abstractmethod
     def poll(self, handle: Any) -> bool:
         """Non-blocking: is the future resolved?"""
@@ -227,6 +271,39 @@ class EventWaitMixin:
                     if remaining <= 0:
                         return []
                     self._done_cv.wait(remaining)
+
+
+class SlotCounterMixin:
+    """Exact free-slot accounting for pool backends (threads/processes):
+    one cv-guarded counter shared by the blocking ``submit`` path
+    (``_acquire_slot()``), the admission path (``_acquire_slot(blocking=
+    False)`` / :meth:`free_slots`), and elastic ``resize``.
+
+    The backend calls :meth:`_init_slots` in ``__init__`` and releases
+    from whatever thread completes the task.
+    """
+
+    def _init_slots(self, n: int) -> None:
+        self._free = n
+        self._slot_cv = threading.Condition()
+
+    def _acquire_slot(self, blocking: bool = True) -> bool:
+        with self._slot_cv:
+            while self._free <= 0:
+                if not blocking:
+                    return False
+                self._slot_cv.wait()
+            self._free -= 1
+            return True
+
+    def _release_slot(self) -> None:
+        with self._slot_cv:
+            self._free += 1
+            self._slot_cv.notify()
+
+    def free_slots(self) -> int:
+        with self._slot_cv:
+            return max(self._free, 0)
 
 
 BACKEND_REGISTRY: dict[str, type] = {}

@@ -321,6 +321,27 @@ class ClusterBackend(EventWaitMixin, Backend):
                         "respawnable)")
                 self._pool_cv.wait(0.5)
 
+    def _try_checkout(self) -> "_SockWorker | None":
+        """Non-blocking acquire for the admission protocol: an idle live
+        worker or None — never waits for capacity. Relaunch-pending slots
+        are absent by construction (they are not in the idle set until
+        their replacement says hello)."""
+        with self._pool_cv:
+            if not self._open:
+                raise ChannelError("cluster backend is shut down")
+            while self._idle:
+                w = self._idle.pop()
+                if w.sock is not None:
+                    return w
+            return None
+
+    def free_slots(self) -> int:
+        """Live idle workers, i.e. dispatches that would not block right
+        now. A dead-but-unreaped socket in the idle set does not count; a
+        slot awaiting its relaunched worker does not count either."""
+        with self._pool_cv:
+            return sum(1 for w in self._idle if w.sock is not None)
+
     def resize(self, workers: int) -> None:
         """Elastic scaling: grow by launching connect-back workers (round-
         robin over the host list; external mode just raises the expected
@@ -755,10 +776,19 @@ class ClusterBackend(EventWaitMixin, Backend):
     # -- Backend API ---------------------------------------------------------
 
     def submit(self, task: TaskSpec) -> _Handle:
+        worker = self._checkout()
+        return self._dispatch(task, worker)
+
+    def try_submit(self, task: TaskSpec) -> "_Handle | None":
+        worker = self._try_checkout()
+        if worker is None:
+            return None
+        return self._dispatch(task, worker)
+
+    def _dispatch(self, task: TaskSpec, worker: _SockWorker) -> _Handle:
         handle = _Handle(task)
         blob = task.shipped
         assert blob is not None, "cluster backend requires a shipped fn"
-        worker = self._checkout()
         worker.busy = handle
         handle.worker = worker
         # Encode payloads this worker does not hold yet *before* sending

@@ -38,6 +38,17 @@ class JaxAsyncBackend(Backend):
     def __init__(self):
         self._cb_lock = threading.Lock()
 
+    def free_slots(self) -> int:
+        # Dispatch is asynchronous at the XLA level: submit() traces/
+        # enqueues and returns immediately, the device stream queues depth-
+        # unbounded. Admission therefore always grants one more slot (the
+        # inherited try_submit always forwards to submit) — the caller's
+        # own ``max_in_flight`` is what bounds outstanding work.
+        # (dispatches_continuations stays False: submit() would run the
+        # continuation inline on the *completion watcher* thread, which
+        # must stay non-blocking — continuations take the bounced path.)
+        return 1
+
     def submit(self, task: TaskSpec) -> CapturedRun:
         # Dispatch happens now (async); python-level errors are captured now,
         # device-level errors surface at collect() via block_until_ready.

@@ -33,8 +33,8 @@ from ..conditions import CapturedRun, ImmediateCondition
 from ..errors import WorkerDiedError
 from ..globals_capture import ship_function
 from .. import planning as plan_mod
-from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
-                   register_backend)
+from .base import (Backend, CompletionHandle, EventWaitMixin,
+                   SlotCounterMixin, TaskSpec, register_backend)
 from .blobstore import encode_backfill
 
 
@@ -90,7 +90,7 @@ class _Handle(CompletionHandle):
 
 
 @register_backend("processes")
-class ProcessBackend(EventWaitMixin, Backend):
+class ProcessBackend(SlotCounterMixin, EventWaitMixin, Backend):
     """Pool of persistent worker processes with fault detection/restart."""
 
     supports_immediate = True
@@ -114,7 +114,9 @@ class ProcessBackend(EventWaitMixin, Backend):
                                      for _ in range(self._n)]
         for w in self._idle:
             w.wait_ready()
-        self._slots = threading.Semaphore(self._n)
+        # exact free-slot counter (not a bare Semaphore) so the admission
+        # protocol can report real capacity
+        self._init_slots(self._n)
         self._open = True
 
     # -- pool management ----------------------------------------------------
@@ -155,10 +157,10 @@ class ProcessBackend(EventWaitMixin, Backend):
             for _ in range(delta):
                 with self._lock:
                     self._idle.append(self._spawn())
-                self._slots.release()
+                self._release_slot()
         else:
             for _ in range(-delta):
-                self._slots.acquire()
+                self._acquire_slot()
                 with self._lock:
                     if self._idle:
                         self._idle.pop().terminate()
@@ -166,8 +168,16 @@ class ProcessBackend(EventWaitMixin, Backend):
     # -- Backend API ---------------------------------------------------------
 
     def submit(self, task: TaskSpec) -> _Handle:
+        self._acquire_slot()             # paper semantics: block for a worker
+        return self._start(task)
+
+    def try_submit(self, task: TaskSpec) -> "_Handle | None":
+        if not self._acquire_slot(blocking=False):
+            return None
+        return self._start(task)
+
+    def _start(self, task: TaskSpec) -> _Handle:
         handle = _Handle(task)
-        self._slots.acquire()            # paper semantics: block for a worker
         th = threading.Thread(target=self._drive, args=(handle,),
                               name=f"future-io-{task.task_id}", daemon=True)
         th.start()
@@ -247,7 +257,7 @@ class ProcessBackend(EventWaitMixin, Backend):
                 worker.busy_task = None
                 self._checkin(worker, healthy and not handle.cancelled)
         finally:
-            self._slots.release()
+            self._release_slot()
             # push completion: fires done-callbacks from this I/O thread
             self._complete(handle)
 

@@ -17,6 +17,19 @@ from .base import Backend, TaskSpec, register_backend
 @register_backend("sequential")
 class SequentialBackend(Backend):
     supports_immediate = True        # relayed, err, immediately
+    # the caller's thread *is* the worker: submission never blocks waiting
+    # for capacity, and a continuation dispatched here runs inline —
+    # consistent with the plan's fully synchronous semantics. The
+    # dispatcher additionally requires the firing thread to be outside any
+    # worker's nested-plan context (see _spawn_continuation): a borrowed
+    # thread that holds a bounded slot must never run continuations inline.
+    dispatches_continuations = True
+
+    def free_slots(self) -> int:
+        # evaluation is synchronous at submit(): there is always exactly
+        # one slot, and it is always free by the time anyone can ask —
+        # the inherited try_submit therefore always forwards to submit()
+        return 1
 
     def submit(self, task: TaskSpec) -> CapturedRun:
         with plan_mod.use_nested_stack():

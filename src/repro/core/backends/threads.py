@@ -20,8 +20,8 @@ from ..conditions import CapturedRun, ImmediateCondition, capture_run
 from ..errors import FutureCancelledError
 from .. import planning as plan_mod
 from ..rng import rng_scope
-from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
-                   register_backend)
+from .base import (Backend, CompletionHandle, EventWaitMixin,
+                   SlotCounterMixin, TaskSpec, register_backend)
 
 
 class _Handle(CompletionHandle):
@@ -34,20 +34,36 @@ class _Handle(CompletionHandle):
 
 
 @register_backend("threads")
-class ThreadBackend(EventWaitMixin, Backend):
+class ThreadBackend(SlotCounterMixin, EventWaitMixin, Backend):
     supports_immediate = True
+    # dispatches_continuations stays False: a continuation occupying one
+    # of these *bounded* slots deadlocks the moment user code inside it
+    # creates/waits a nested eager future (workers=1: the continuation
+    # holds the only slot the nested submit blocks on). Continuations take
+    # the slot-free continuation pool, which preserves the old liveness
+    # guarantee while still bounding and reusing threads.
 
     def __init__(self, workers: int | None = None):
         from ..planning import available_cores
         self._n = int(workers) if workers else available_cores()
-        self._slots = threading.Semaphore(self._n)
+        # exact free-slot counter (not a bare Semaphore) so the admission
+        # protocol can report real capacity
+        self._init_slots(self._n)
         self._nested = plan_mod.nested_stack()
         self._init_wait()
         self._open = True
 
     def submit(self, task: TaskSpec) -> _Handle:
+        self._acquire_slot()             # paper semantics: block for a worker
+        return self._start(task)
+
+    def try_submit(self, task: TaskSpec) -> "_Handle | None":
+        if not self._acquire_slot(blocking=False):
+            return None
+        return self._start(task)
+
+    def _start(self, task: TaskSpec) -> _Handle:
         handle = _Handle(task)
-        self._slots.acquire()            # paper semantics: block for a worker
         th = threading.Thread(target=self._worker, args=(handle,),
                               name=f"future-{task.task_id}", daemon=True)
         th.start()
@@ -71,7 +87,7 @@ class ThreadBackend(EventWaitMixin, Backend):
                         )
             handle.run = run
         finally:
-            self._slots.release()
+            self._release_slot()
             # push completion: fires done-callbacks from this worker thread
             self._complete(handle)
 

@@ -168,13 +168,95 @@ class _ChainKernel(EventWaitMixin, Backend):
 _CHAIN = _ChainKernel()
 
 
-def _spawn_continuation(out: "Future", job: Callable[[], None]) -> None:
-    """Run one continuation step on its own daemon thread.
+class _ContinuationPool:
+    """Cached continuation executor: the bounced-dispatch path for
+    continuations whose parent backend cannot run local callables
+    (processes/cluster/jax_async and derived futures).
+
+    Replaces the old thread-per-continuation spawn: a worker that finishes
+    a job parks on the queue and serves the next one, and only spawns when
+    every live worker is busy (so concurrency is bounded by the number of
+    *simultaneously running* continuations, with thread reuse in between).
+    Idle workers exit after a short grace, so a quiet process holds no
+    continuation threads at all. Liveness is unconditional: a submit that
+    finds no idle worker always spawns, so a continuation can never
+    deadlock behind user code blocking inside another continuation.
+    """
+
+    _IDLE_GRACE_S = 1.0
+
+    def __init__(self):
+        import queue
+        self._q: "queue.SimpleQueue" = queue.SimpleQueue()
+        self._lock = threading.Lock()
+        self._idle = 0
+        self._pending = 0
+
+    def submit(self, job: Callable[[], None]) -> None:
+        with self._lock:
+            self._pending += 1
+            spawn = self._pending > self._idle
+        self._q.put(job)
+        if spawn:
+            threading.Thread(target=self._drain, name="continuation-pool",
+                             daemon=True).start()
+
+    def _drain(self) -> None:
+        import queue
+        while True:
+            with self._lock:
+                self._idle += 1
+            try:
+                job = self._q.get(timeout=self._IDLE_GRACE_S)
+            except queue.Empty:
+                with self._lock:
+                    self._idle -= 1
+                    if self._pending == 0:
+                        return           # truly quiet: retire
+                # a submit() decided not to spawn because it saw us idle
+                # in the instant our grace timeout was expiring — the job
+                # is enqueued with no other worker committed to it, so
+                # loop and claim it rather than stranding it (the lock
+                # orders the two: either we see its pending increment
+                # here, or it sees our idle decrement and spawns)
+                continue
+            with self._lock:
+                self._idle -= 1
+                self._pending -= 1
+            try:
+                job()
+            except BaseException:                    # noqa: BLE001
+                traceback.print_exc()
+
+
+_CONT_POOL = _ContinuationPool()
+
+
+def _spawn_continuation(out: "Future", job: Callable[[], None], *,
+                        backend: "Backend | None" = None) -> None:
+    """Dispatch one continuation step.
 
     Backend done-callbacks fire from completing threads / the cluster
     select loop and must stay non-blocking, so user continuations
-    (arbitrary code — possibly slow, possibly creating futures) bounce
-    here. An escaped exception resolves ``out`` instead of vanishing.
+    (arbitrary code — possibly slow, possibly creating futures) cannot run
+    there. Dispatch is admission-controlled instead of thread-per-step:
+
+    * when the parent's ``backend`` declares ``dispatches_continuations``
+      (sequential: submission is synchronous and slot-free) *and* the
+      firing thread is not inside a worker's nested-plan context (TLS
+      override unset — i.e. this thread holds no bounded worker slot),
+      the step is offered through ``Backend.try_submit`` and runs inline —
+      the fully synchronous plan keeps fully synchronous chains;
+    * everything else bounces to the shared :class:`_ContinuationPool`.
+      Deliberately: a continuation running on a thread that *holds a
+      bounded worker slot* deadlocks as soon as user code inside it
+      creates/waits an eager future with no slots left — that rules out
+      dispatching through the slot-bounded backends (threads/processes)
+      *and* inlining on their worker threads (processes/cluster
+      additionally only run pickled blobs, and jax_async would run the
+      step on its completion watcher).
+
+    An escaped exception resolves ``out`` instead of vanishing.
     """
     def _run():
         try:
@@ -182,8 +264,29 @@ def _spawn_continuation(out: "Future", job: Callable[[], None]) -> None:
         except BaseException as exc:                 # noqa: BLE001
             _CHAIN.complete(out._handle, error=exc)
 
-    threading.Thread(target=_run, name=f"continuation-{out.label}",
-                     daemon=True).start()
+    if backend is not None and backend.dispatches_continuations \
+            and plan_mod.thread_stack_override() is None:
+        # capture off, seed "declared": the step does its own capture_run
+        # around user code, and must not trip RNG-misuse detection on the
+        # user's behalf (declaration happened on the futures involved).
+        # The global-stack scope undoes the worker's use_nested_stack so
+        # futures created by the continuation land on the end-user's plan,
+        # exactly as they did on parent-side threads (the pool path below
+        # runs on fresh threads whose TLS override is already unset).
+        def _run_on_backend():
+            with plan_mod.use_global_stack():
+                _run()
+
+        task = TaskSpec(task_id=out.id, fn=_run_on_backend,
+                        label=f"cont:{out.label}",
+                        capture_stdout=False, capture_conditions=False,
+                        seed_declared=True)
+        try:
+            if backend.try_submit(task) is not None:
+                return
+        except Exception:                            # noqa: BLE001
+            pass                                     # shut-down race: bounce
+    _CONT_POOL.submit(_run)
 
 
 def _outcome(f: "Future") -> "tuple[CapturedRun | None, Exception | None]":
@@ -305,6 +408,29 @@ class Future:
             self._handle = backend.submit(self._task(backend))
             self._state = _SUBMITTED
 
+    def _submit_nowait(self) -> bool:
+        """Admission-controlled dispatch: offer this (lazy/created) future
+        through ``Backend.try_submit``. Returns ``True`` when the future is
+        submitted (now or previously), ``False`` when the backend had no
+        free capacity — the future stays created and can be re-offered.
+
+        This is the streaming pump's primitive: dispatch exactly when
+        capacity exists, never park inside ``submit``.
+        """
+        with self._lock:
+            if self._state != _CREATED:
+                return True
+            backend = self._backend or plan_mod.active_backend()
+            if backend.free_slots() <= 0:
+                return False             # cheap pre-check: skip task build
+            handle = backend.try_submit(self._task(backend))
+            if handle is None:
+                return False             # lost the slot race — re-offer later
+            self._backend = backend
+            self._handle = handle
+            self._state = _SUBMITTED
+            return True
+
     def _register(self, cb: Callable[[Any], None]) -> None:
         """Register ``cb(handle)`` on this future's completion (launching a
         lazy future first). Fires synchronously if already resolved."""
@@ -358,7 +484,8 @@ class Future:
         """
         out = Future._derived(label or f"{self.label}.then")
         self._register(lambda _h: _spawn_continuation(
-            out, lambda: _step_then(self, fn, out, flatten=True)))
+            out, lambda: _step_then(self, fn, out, flatten=True),
+            backend=self._backend))
         return out
 
     def map(self, fn: Callable[[Any], Any], *,
@@ -368,7 +495,8 @@ class Future:
         return value is the chained value as-is."""
         out = Future._derived(label or f"{self.label}.map")
         self._register(lambda _h: _spawn_continuation(
-            out, lambda: _step_then(self, fn, out, flatten=False)))
+            out, lambda: _step_then(self, fn, out, flatten=False),
+            backend=self._backend))
         return out
 
     def recover(self, fn: Callable[[BaseException], Any], *,
@@ -378,7 +506,8 @@ class Future:
         resolve to ``fn(exception)`` instead; successes pass through."""
         out = Future._derived(label or f"{self.label}.recover")
         self._register(lambda _h: _spawn_continuation(
-            out, lambda: _step_recover(self, fn, out)))
+            out, lambda: _step_recover(self, fn, out),
+            backend=self._backend))
         return out
 
     def fallback(self, other: "Future | Callable[[], Any]", *,
@@ -389,7 +518,8 @@ class Future:
         (speculation cleanup)."""
         out = Future._derived(label or f"{self.label}.fallback")
         self._register(lambda _h: _spawn_continuation(
-            out, lambda: _step_fallback(self, other, out)))
+            out, lambda: _step_fallback(self, other, out),
+            backend=self._backend))
         return out
 
     # -- extras ------------------------------------------------------------------

@@ -51,11 +51,42 @@ _CORE_ENV_VARS = (
     "OMP_NUM_THREADS",
 )
 
+#: cgroup v2 unified-hierarchy CPU controller file ("QUOTA PERIOD" in us,
+#: QUOTA == "max" when unlimited). Module-level so tests can point it at a
+#: fake file.
+_CGROUP_CPU_MAX = "/sys/fs/cgroup/cpu.max"
+
+
+def _cgroup_cpu_limit(path: "str | None" = None) -> "int | None":
+    """Effective CPU count granted by a cgroup v2 ``cpu.max`` quota, or
+    None when absent/unlimited/unparseable. A 0.5-CPU container rounds up
+    to 1 (quota ceil), never to the host's core count."""
+    try:
+        with open(path or _CGROUP_CPU_MAX) as fh:
+            fields = fh.read().split()
+    except OSError:
+        return None
+    if not fields or fields[0] == "max":
+        return None
+    try:
+        quota = int(fields[0])
+        period = int(fields[1]) if len(fields) > 1 else 100_000
+    except ValueError:
+        return None
+    if quota <= 0 or period <= 0:
+        return None
+    return max(1, -(-quota // period))             # ceil(quota / period)
+
 
 def available_cores() -> int:
-    """Respect scheduler/env limits instead of blindly using every core —
-    the paper's multi-tenant-friendly ``availableCores()`` (vs the
-    ``detectCores()`` anti-pattern)."""
+    """Respect scheduler/env/container limits instead of blindly using
+    every core — the paper's multi-tenant-friendly ``availableCores()``
+    (vs the ``detectCores()`` anti-pattern).
+
+    Order: an explicit env override wins outright; otherwise the host
+    count is clamped by the scheduler CPU affinity mask
+    (``os.sched_getaffinity``) and the cgroup v2 ``cpu.max`` quota, so a
+    2-CPU container on a 64-core host gets 2 workers, not 64."""
     for var in _CORE_ENV_VARS:
         val = os.environ.get(var)
         if val:
@@ -65,7 +96,17 @@ def available_cores() -> int:
                     return n
             except ValueError:
                 pass
-    return os.cpu_count() or 1
+    limit = os.cpu_count() or 1
+    try:
+        affinity = len(os.sched_getaffinity(0))
+        if affinity:
+            limit = min(limit, affinity)
+    except (AttributeError, OSError):
+        pass                                       # not on this platform
+    quota = _cgroup_cpu_limit()
+    if quota is not None:
+        limit = min(limit, quota)
+    return max(limit, 1)
 
 
 # --------------------------------------------------------------------------
@@ -246,6 +287,45 @@ class use_nested_stack:
         return self
 
     def __exit__(self, *exc):
+        created = _TLS.nested_backend
+        _TLS.stack, _TLS.nested_backend, _TLS.nested_spec = self._prev
+        if created is not None:
+            created.shutdown()
+        return False
+
+
+def thread_stack_override() -> "tuple[BackendSpec, ...] | None":
+    """This thread's plan-stack override, or None outside any worker /
+    continuation context. ``None`` doubles as the "this thread holds no
+    bounded worker slot" signal the continuation dispatcher keys on:
+    backend worker threads always run under :class:`use_nested_stack`, so
+    a set override marks a thread that must never execute blocking
+    continuation work inline."""
+    return _TLS.stack
+
+
+class use_global_stack:
+    """Continuation scope: evaluate under the *global* plan stack.
+
+    Continuation steps used to run on fresh parent-side threads, whose
+    thread-local plan override is unset — i.e. they saw the end-user's
+    global plan. Now that they dispatch through a backend's worker pool
+    (which installs ``use_nested_stack`` around everything it runs), this
+    scope restores that contract: futures created inside a ``then``/
+    ``map``/``recover``/``fallback`` callback land on the active global
+    plan, not the worker's popped (sequential) stack.
+    """
+
+    def __enter__(self):
+        self._prev = (_TLS.stack, _TLS.nested_backend, _TLS.nested_spec)
+        _TLS.stack = None
+        _TLS.nested_backend = None
+        _TLS.nested_spec = None
+        return self
+
+    def __exit__(self, *exc):
+        # with stack=None, active_backend() takes the global branch and
+        # never populates the TLS nested cache — but guard anyway
         created = _TLS.nested_backend
         _TLS.stack, _TLS.nested_backend, _TLS.nested_spec = self._prev
         if created is not None:

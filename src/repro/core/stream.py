@@ -1,0 +1,369 @@
+"""Lazy streaming pipelines over the Future API (the frontend redesign).
+
+The paper argues the three Future constructs are sufficient to build every
+higher-level map-reduce frontend; the follow-up frontend work (arXiv
+2601.17578) argues the frontend itself should be one composable layer, and
+the optimised-flow work (arXiv 2107.07298) shows that *when work is
+admitted* dominates throughput. This module is that layer::
+
+    from repro.core import stream
+
+    total = (stream(samples())                 # any iterable — never
+             .filter(lambda s: s.ok)           # materialized, unbounded
+             .batch(32)                        # generators welcome
+             .map(score, seed=True, chunk=4)   # futures on the active plan
+             .reduce(operator.add))            # folds as results complete
+
+Contrast with the eager ``future_map``: ``stream()`` never calls
+``list(xs)``, never blocks inside ``Backend.submit``, and holds at most
+``max_in_flight`` futures outstanding (default ``2 * backend.workers``) —
+so memory is O(in-flight), not O(len(xs)), and dispatch happens *exactly
+when capacity exists* via the backend admission protocol
+(``Backend.free_slots`` / ``Backend.try_submit``).
+
+Mechanics of the pump (one per ``.map`` stage):
+
+* elements are pulled from upstream lazily, grouped into chunks
+  (``chunk=`` elements per future; ``future_map`` passes its exact
+  chunk-size plan through), and each chunk becomes one lazy future;
+* a chunk is dispatched through ``try_submit`` the moment the backend
+  reports a free slot; when nothing is in flight the pump falls back to
+  one blocking ``submit`` (progress guarantee — the paper's "future()
+  blocks until a worker is available" semantics, but only at the edge);
+* completions are push-delivered through one :class:`~.future.Waiter`;
+  the pump harvests, re-dispatches ``retries=`` failed chunks
+  (``FutureError`` only — evaluation errors propagate, like
+  ``future_map``), and refills from upstream;
+* ``seed=`` gives every *element* ``fold_in(session_key, base + i)`` with
+  ``i`` the element's position in the stage's input stream — invariant to
+  chunking, backend, worker count *and* ``max_in_flight`` (the same CMRG
+  guarantee ``future_map`` makes);
+* intermediate ``.map`` stages always emit in input order (determinism
+  for downstream ``filter``/RNG); only the final stage emits in
+  completion order, and only for ``.as_completed()`` / ``.reduce()`` /
+  ``.collect(ordered=False)``.
+
+``Stream`` objects are immutable — each combinator returns a new stream
+sharing the source. A stream over a one-shot iterator is single-use.
+After a terminal runs, ``.stats`` on the terminal stream records
+``dispatched`` / ``retried`` chunk counts and ``peak_in_flight`` (always
+``<= max_in_flight`` — asserted by the conformance suite).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from typing import Any, Callable, Iterable, Iterator
+
+from . import planning as plan_mod
+from . import rng as rng_mod
+from .errors import FutureError
+from .future import Future, Waiter, _accepts_kwarg, future
+
+_MISSING = object()
+
+#: waiter timeout used only while admission is refused with work queued:
+#: our own completions push-wake the waiter, but capacity can also free
+#: through *foreign* futures completing, which nothing pushes to us.
+_CONTENTION_WAIT_S = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class _MapOp:
+    fn: Callable
+    seed: "bool | int | None"
+    seed_declared: bool
+    base_index: int
+    pass_key: bool
+    retries: int
+    chunk: int
+    chunk_sizes: "tuple | None"        # exact plan (future_map sugar)
+    label: str
+
+
+def _filtered(it: Iterator, pred: Callable) -> Iterator:
+    for x in it:
+        if pred(x):
+            yield x
+
+
+def _batched(it: Iterator, n: int) -> Iterator:
+    while True:
+        group = list(itertools.islice(it, n))
+        if not group:
+            return
+        yield group
+
+
+def _chunked(it: Iterator, op: _MapOp) -> Iterator:
+    """Group upstream elements into ``(index_list, items)`` chunks, pulled
+    lazily. Indices number the stage's input stream consecutively — the
+    per-element RNG coordinate."""
+    if op.chunk_sizes:
+        sizes: Iterator[int] = itertools.chain(
+            op.chunk_sizes, itertools.repeat(op.chunk_sizes[-1]))
+    else:
+        sizes = itertools.repeat(op.chunk)
+    idx = 0
+    for size in sizes:
+        items = list(itertools.islice(it, max(int(size), 1)))
+        if not items:
+            return
+        yield (list(range(idx, idx + len(items))), items)
+        idx += len(items)
+
+
+def _chunk_runner(op: _MapOp) -> Callable:
+    """The shipped chunk body — identical to ``future_map``'s: applies
+    ``fn`` per element, passing the element's stream key when declared."""
+    def run_chunk(idx: "list[int]", items: "list", _fn=op.fn,
+                  _pass_key=op.pass_key, _base=op.base_index):
+        out = []
+        for i, x in zip(idx, items):
+            if _pass_key:
+                out.append(_fn(x, key=rng_mod.stream_key(_base + i)))
+            else:
+                out.append(_fn(x))
+        return out
+    return run_chunk
+
+
+def _pump(op: _MapOp, upstream: Iterator, *, max_in_flight: "int | None",
+          ordered: bool, stats: dict) -> Iterator:
+    """The streaming dispatch loop for one ``.map`` stage."""
+    backend = plan_mod.active_backend()
+    mif = max_in_flight if max_in_flight is not None \
+        else 2 * max(backend.workers, 1)
+    mif = max(int(mif), 1)
+    stats["max_in_flight"] = mif
+    run_chunk = _chunk_runner(op)
+
+    def make(cid: int, idx: list, items: list, tries: int) -> Future:
+        return future(run_chunk, idx, items,
+                      seed=op.seed if op.seed_declared else None,
+                      lazy=True,
+                      label=f"{op.label}[{cid}]" if tries == 0
+                      else f"{op.label}-retry")
+
+    chunk_iter = _chunked(upstream, op)
+    queue: "collections.deque" = collections.deque()  # (f, cid, idx, items, tries)
+    pending: "dict[Future, tuple]" = {}
+    done_buf: "dict[int, list]" = {}   # cid -> values (ordered mode)
+    emit: "collections.deque" = collections.deque()   # values (unordered)
+    waiter = Waiter()
+    src_done = False
+    cid_seq = 0
+    emit_id = 0
+    try:
+        while True:
+            # 1. emit everything ready
+            if ordered:
+                while emit_id in done_buf:
+                    for v in done_buf.pop(emit_id):
+                        yield v
+                    emit_id += 1
+            else:
+                while emit:
+                    yield emit.popleft()
+            # 2. refill from upstream — queued + in-flight + buffered
+            #    results together never exceed mif, so memory stays
+            #    O(in-flight) no matter how long the source is
+            while (not src_done
+                   and len(queue) + len(pending) + len(done_buf) < mif):
+                batch = next(chunk_iter, None)
+                if batch is None:
+                    src_done = True
+                    break
+                idx, items = batch
+                queue.append((make(cid_seq, idx, items, 0),
+                              cid_seq, idx, items, 0))
+                cid_seq += 1
+            # 3. admission-controlled dispatch: exactly when capacity
+            #    exists; one blocking submit only when nothing is in
+            #    flight (progress guarantee — nothing else would wake us)
+            contended = False
+            while queue:
+                rec = queue[0]
+                if pending:
+                    if not rec[0]._submit_nowait():
+                        contended = True
+                        break
+                else:
+                    rec[0]._submit()
+                queue.popleft()
+                pending[rec[0]] = rec
+                waiter.add(rec[0])
+                stats["dispatched"] = stats.get("dispatched", 0) + 1
+                stats["peak_in_flight"] = max(
+                    stats.get("peak_in_flight", 0), len(pending))
+            if not pending:
+                if src_done and not queue and not done_buf and not emit:
+                    return
+                continue
+            # 4. sleep until a completion pushes (briefly, when foreign
+            #    futures hold the slots we were refused)
+            got = waiter.wait(_CONTENTION_WAIT_S
+                              if contended and queue else None)
+            # 5. harvest in completion order (relays stdout/conditions,
+            #    like future_map); FutureError -> bounded re-dispatch
+            for f in got:
+                _, cid, idx, items, tries = pending.pop(f)
+                try:
+                    vals = f.value()
+                except FutureError:
+                    if tries >= op.retries:
+                        raise
+                    queue.appendleft((make(cid, idx, items, tries + 1),
+                                      cid, idx, items, tries + 1))
+                    stats["retried"] = stats.get("retried", 0) + 1
+                    continue
+                if ordered:
+                    done_buf[cid] = vals
+                else:
+                    emit.extend(vals)
+    finally:
+        # consumer abandoned the stream mid-flight (GeneratorExit from
+        # breaking out of as_completed()), or a chunk failure is
+        # propagating out of the harvest: don't leave up to mif-1 chunks
+        # occupying backend workers. Best-effort — a no-op on normal
+        # completion (pending and queue are empty by then).
+        for rec in itertools.chain(pending.values(), queue):
+            try:
+                rec[0].cancel()
+            except Exception:                        # noqa: BLE001
+                pass
+
+
+class Stream:
+    """A lazy, chainable pipeline. Build with :func:`stream`; add stages
+    with :meth:`map` / :meth:`filter` / :meth:`batch`; run with a terminal
+    (:meth:`collect`, :meth:`reduce`, :meth:`as_completed`)."""
+
+    def __init__(self, source: Iterable, *,
+                 max_in_flight: "int | None" = None,
+                 label: "str | None" = None):
+        self._source = source
+        self._ops: tuple = ()
+        self._max_in_flight = max_in_flight
+        self._label = label or "stream"
+        self._map_count = 0
+        #: populated by the last terminal run on *this* object
+        self.stats: dict = {}
+
+    def _with(self, op, is_map: bool = False) -> "Stream":
+        s = Stream.__new__(Stream)
+        s._source = self._source
+        s._ops = self._ops + (op,)
+        s._max_in_flight = self._max_in_flight
+        s._label = self._label
+        s._map_count = self._map_count + (1 if is_map else 0)
+        s.stats = self.stats             # shared along the chain: the stats
+        return s                         # of the last terminal run anywhere
+
+    # -- stages --------------------------------------------------------------
+
+    def map(self, fn: Callable, *, seed: "bool | int | None" = None,
+            retries: int = 0, chunk: int = 1,
+            label: "str | None" = None,
+            _chunk_sizes: "Iterable[int] | None" = None) -> "Stream":
+        """Parallel transform: every element becomes ``fn(x)`` resolved via
+        futures on the active plan, ``chunk`` elements per future.
+
+        ``seed=`` gives each element its backend/chunking-invariant stream
+        key (passed as ``key=`` when ``fn`` accepts it; an int seed offsets
+        the element index like ``future_map``). ``retries=`` re-dispatches
+        a chunk whose future failed with an *infrastructure*
+        :class:`FutureError` (worker death); evaluation errors propagate
+        immediately.
+        """
+        seed_declared = seed is not None and seed is not False
+        base = int(seed) if isinstance(seed, int) \
+            and not isinstance(seed, bool) else 0
+        op = _MapOp(
+            fn=fn, seed=seed, seed_declared=seed_declared, base_index=base,
+            pass_key=seed_declared and _accepts_kwarg(fn, "key"),
+            retries=int(retries), chunk=max(int(chunk), 1),
+            chunk_sizes=tuple(_chunk_sizes) if _chunk_sizes else None,
+            label=label or f"{self._label}.map{self._map_count}")
+        return self._with(op, is_map=True)
+
+    def filter(self, pred: Callable) -> "Stream":
+        """Keep elements where ``pred(x)`` is truthy (runs driver-side,
+        lazily — element indices downstream number the *kept* stream)."""
+        return self._with(("filter", pred))
+
+    def batch(self, n: int) -> "Stream":
+        """Group consecutive elements into lists of ``n`` (last one may be
+        short). Before a ``.map``, each batch is one element of the map's
+        input; after one, it groups results."""
+        if int(n) < 1:
+            raise ValueError("batch size must be >= 1")
+        return self._with(("batch", int(n)))
+
+    # -- terminals -----------------------------------------------------------
+
+    def _run(self, ordered: bool) -> Iterator:
+        self.stats.clear()
+        self.stats.update({"dispatched": 0, "retried": 0,
+                           "peak_in_flight": 0, "max_in_flight": None})
+        it: Iterator = iter(self._source)
+        maps = [i for i, o in enumerate(self._ops) if isinstance(o, _MapOp)]
+        last_map = maps[-1] if maps else None
+        for i, op in enumerate(self._ops):
+            if isinstance(op, _MapOp):
+                # intermediate stages stay ordered so downstream element
+                # numbering (RNG) and filters are deterministic
+                it = _pump(op, it, max_in_flight=self._max_in_flight,
+                           ordered=ordered or i != last_map,
+                           stats=self.stats)
+            elif op[0] == "filter":
+                it = _filtered(it, op[1])
+            elif op[0] == "batch":
+                it = _batched(it, op[1])
+        return it
+
+    def collect(self, ordered: bool = True) -> list:
+        """Run the pipeline to a list — input order by default,
+        completion order with ``ordered=False``."""
+        return list(self._run(ordered=ordered))
+
+    def as_completed(self) -> Iterator:
+        """Iterate results in completion order, streaming: O(in-flight)
+        memory, safe over unbounded sources (breaking out cancels the
+        in-flight tail)."""
+        return self._run(ordered=False)
+
+    def reduce(self, op: Callable, init: Any = _MISSING) -> Any:
+        """Fold results *as they complete* (lowest memory, lowest latency;
+        use an associative+commutative ``op`` for deterministic results).
+        Without ``init``, the first completed result seeds the fold."""
+        acc = init
+        for v in self._run(ordered=False):
+            acc = v if acc is _MISSING else op(acc, v)
+        if acc is _MISSING:
+            raise ValueError("reduce() of an empty stream with no init")
+        return acc
+
+    def __iter__(self) -> Iterator:
+        return self._run(ordered=True)
+
+    def __repr__(self):
+        return (f"<Stream {self._label} stages={len(self._ops)} "
+                f"max_in_flight={self._max_in_flight}>")
+
+
+def stream(xs: Iterable, *, max_in_flight: "int | None" = None,
+           label: "str | None" = None) -> Stream:
+    """Open a streaming pipeline over any iterable (lists, generators —
+    including unbounded ones; the source is never materialized).
+
+    ``max_in_flight`` bounds outstanding futures per ``.map`` stage
+    (default ``2 * backend.workers``: one wave computing, one wave of
+    results/refills in the pipe).
+    """
+    return Stream(xs, max_in_flight=max_in_flight, label=label)
+
+
+__all__ = ["Stream", "stream"]

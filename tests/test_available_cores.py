@@ -1,0 +1,70 @@
+"""available_cores(): env overrides, CPU affinity, and cgroup v2 quotas.
+
+The paper's ``availableCores()`` must be container-aware: a 2-CPU cgroup
+on a 64-core host gets 2 workers, not 64. Asserted against a fake
+``cpu.max`` file so the tests run identically on any host.
+"""
+
+import pytest
+
+from repro.core import planning
+from repro.core.planning import _cgroup_cpu_limit, available_cores
+
+
+@pytest.fixture
+def no_env(monkeypatch):
+    for var in planning._CORE_ENV_VARS:
+        monkeypatch.delenv(var, raising=False)
+
+
+def _fake_cpu_max(tmp_path, text):
+    f = tmp_path / "cpu.max"
+    f.write_text(text)
+    return str(f)
+
+
+def test_cgroup_quota_parsing(tmp_path):
+    assert _cgroup_cpu_limit(_fake_cpu_max(tmp_path, "200000 100000\n")) == 2
+    assert _cgroup_cpu_limit(_fake_cpu_max(tmp_path, "max 100000\n")) is None
+    # fractional CPUs round up to 1, never to the host count
+    assert _cgroup_cpu_limit(_fake_cpu_max(tmp_path, "50000 100000\n")) == 1
+    # ceil, not floor: 1.5 CPUs -> 2
+    assert _cgroup_cpu_limit(_fake_cpu_max(tmp_path, "150000 100000\n")) == 2
+    # period defaults to 100ms when missing
+    assert _cgroup_cpu_limit(_fake_cpu_max(tmp_path, "300000\n")) == 3
+    assert _cgroup_cpu_limit(_fake_cpu_max(tmp_path, "banana 100000\n")) is None
+    assert _cgroup_cpu_limit(_fake_cpu_max(tmp_path, "")) is None
+    assert _cgroup_cpu_limit(str(tmp_path / "missing")) is None
+
+
+def test_available_cores_respects_cgroup_limit(tmp_path, monkeypatch, no_env):
+    monkeypatch.setattr(planning, "_CGROUP_CPU_MAX",
+                        _fake_cpu_max(tmp_path, "200000 100000\n"))
+    assert available_cores() <= 2
+    assert available_cores() >= 1
+
+
+def test_available_cores_unlimited_cgroup_falls_through(tmp_path, monkeypatch,
+                                                        no_env):
+    monkeypatch.setattr(planning, "_CGROUP_CPU_MAX",
+                        _fake_cpu_max(tmp_path, "max 100000\n"))
+    import os
+    host = os.cpu_count() or 1
+    try:
+        host = min(host, len(os.sched_getaffinity(0)))
+    except (AttributeError, OSError):
+        pass
+    assert available_cores() == max(host, 1)
+
+
+def test_env_override_beats_cgroup(tmp_path, monkeypatch, no_env):
+    monkeypatch.setattr(planning, "_CGROUP_CPU_MAX",
+                        _fake_cpu_max(tmp_path, "100000 100000\n"))
+    monkeypatch.setenv("REPRO_WORKERS", "7")
+    assert available_cores() == 7
+
+
+def test_missing_cgroup_file_is_fine(tmp_path, monkeypatch, no_env):
+    monkeypatch.setattr(planning, "_CGROUP_CPU_MAX",
+                        str(tmp_path / "does-not-exist"))
+    assert available_cores() >= 1

@@ -176,6 +176,33 @@ def test_first_successful_all_failures_propagates_first(backend):
         value(f)
 
 
+# --------------------------------------------------------------------------
+# streaming frontend: same values/ordering/semantics on every backend
+# (the deeper stream behaviours — backpressure, unbounded sources, faults —
+# live in test_stream.py; this is the conformance-matrix `stream` row)
+# --------------------------------------------------------------------------
+
+def test_stream_matches_map(backend):
+    xs = list(range(10))
+    s = rc.stream(iter(xs))              # generator input, never re-listed
+    assert s.map(lambda v: v * 3, chunk=4).collect(ordered=True) \
+        == [v * 3 for v in xs]
+    assert 0 < s.stats["peak_in_flight"] <= s.stats["max_in_flight"]
+
+
+def test_stream_reduce_over_generator(backend):
+    got = (rc.stream(i for i in range(30))
+           .filter(lambda v: v % 2 == 0)
+           .map(lambda v: v + 1, chunk=5)
+           .reduce(lambda a, b: a + b))
+    assert got == sum(v + 1 for v in range(30) if v % 2 == 0)
+
+
+def test_stream_error_relayed_as_is(backend):
+    with pytest.raises(ValueError):
+        rc.stream([1, 2, 3]).map(lambda v: int("nope")).collect()
+
+
 @pytest.mark.parametrize("name", ["processes", "cluster"])
 def test_worker_isolation(name):
     """Process-family backends really do run elsewhere — including the TCP

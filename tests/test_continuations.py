@@ -204,6 +204,109 @@ def test_deep_chain():
     assert value(f) == 30
 
 
+def test_continuation_sees_global_plan():
+    """Futures created inside a then/map callback land on the end-user's
+    *global* plan (as they did on parent-side threads), even though the
+    continuation itself may run inside a backend worker whose nested
+    stack is popped to sequential."""
+    rc.plan("threads", workers=4)
+
+    def cont(_v):
+        from repro.core import active_backend
+        inner = future(lambda: 1)
+        return (type(active_backend()).__name__, value(inner))
+
+    name, v = value(future(lambda: 0).then(cont))
+    assert v == 1
+    assert name == "ThreadBackend"
+    rc.shutdown()
+
+
+def test_continuation_nested_future_no_deadlock_single_slot(tmp_path):
+    """A continuation that creates and waits a nested eager future must
+    complete even at workers=1 — continuations never occupy a bounded
+    backend slot (regression: routing them through ThreadBackend.try_submit
+    wedged exactly this shape forever)."""
+    rc.plan("threads", workers=1)
+    f = future(lambda: 0).then(lambda v: value(future(lambda: 41)) + 1)
+    assert value(f) == 42
+
+    # retry's re-attempt runs as such a continuation and creates an eager
+    # future inline — same single-slot shape
+    marker = str(tmp_path / "attempted")
+
+    def flaky():
+        import os as _os
+        if not _os.path.exists(marker):
+            open(marker, "w").close()
+            raise ValueError("first attempt fails")
+        return "ok"
+
+    assert rc.retry(flaky, times=3, on=Exception) == "ok"
+    rc.shutdown()
+
+
+def test_fire_and_forget_chain_from_inside_worker_completes():
+    """A chain built *inside* a worker (nested sequential parent, fired on
+    the slot-holding worker thread) whose continuation creates an eager
+    future on the global plan must complete at workers=1 — inline
+    dispatch is forbidden on threads inside a nested-plan context, so the
+    step bounces to the slot-free pool."""
+    rc.plan("threads", workers=1)
+
+    def body():
+        g = future(lambda: 1)            # nested -> sequential, eager
+        return g.then(lambda v: value(future(lambda: v + 1)))
+
+    h = value(future(body))              # worker returns without waiting
+    assert value(h) == 2
+    rc.shutdown()
+
+
+def test_retry_inside_worker_single_slot_completes(tmp_path):
+    """retry() called inside a worker that holds the only global slot:
+    re-attempts fire from continuation/timer threads but must run under
+    the *caller's* nested plan (like the old caller-thread retry), not
+    block on the global slot the waiting worker holds."""
+    rc.plan("threads", workers=1)
+    marker = str(tmp_path / "first-attempt")
+
+    def body(_marker=marker):
+        def flaky():
+            import os as _os
+            if not _os.path.exists(_marker):
+                open(_marker, "w").close()
+                raise ValueError("first attempt fails")
+            return "ok"
+        return rc.retry(flaky, times=3, on=ValueError)
+
+    assert value(future(body)) == "ok"
+    rc.shutdown()
+
+
+def test_continuation_pool_grace_expiry_race():
+    """A continuation enqueued exactly as the pool's only idle worker
+    times out must still run (regression: the job used to strand in the
+    queue until an unrelated later submit)."""
+    from repro.core.future import _ContinuationPool
+    pool = _ContinuationPool()
+    pool._IDLE_GRACE_S = 0.01            # make the race window hot
+    done = []
+    lock = threading.Lock()
+    n = 200
+    for i in range(n):
+        pool.submit(lambda i=i: (lock.acquire(), done.append(i),
+                                 lock.release()))
+        time.sleep(0.01)                 # land submits on the grace edge
+    deadline = time.monotonic() + 10
+    while time.monotonic() < deadline:
+        with lock:
+            if len(done) == n:
+                break
+        time.sleep(0.01)
+    assert len(done) == n, f"{n - len(done)} continuations stranded"
+
+
 # --------------------------------------------------------------------------
 # default Backend.wait(): bounded timeout for third-party backends
 # --------------------------------------------------------------------------

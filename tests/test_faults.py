@@ -64,6 +64,54 @@ def test_retry_succeeds_on_flaky(pool, tmp_path):
     assert retry(flaky, times=3) == "recovered"
 
 
+def test_retry_backoff_never_sleeps_the_caller(pool, tmp_path):
+    """Backoff is completion-callback-scheduled (a timer re-dispatches),
+    so building the retrying future returns immediately and the caller
+    only blocks in value()'s event wait — many retries can be held
+    concurrently without a parked thread each."""
+    marker = str(tmp_path / "flaky-ran")
+
+    def flaky():
+        import os as _os
+        if not _os.path.exists(marker):
+            open(marker, "w").close()
+            _os._exit(9)
+        return "recovered"
+
+    assert value(future(lambda: "warm")) == "warm"   # pool spawn != timing
+    t0 = time.monotonic()
+    rf = rc.retry_future(flaky, times=3, backoff_s=0.4)
+    created_in = time.monotonic() - t0
+    assert created_in < 0.3, f"creation blocked {created_in:.2f}s"
+    assert value(rf) == "recovered"
+    assert time.monotonic() - t0 >= 0.4          # the backoff really ran
+
+
+def test_retry_attempt_creation_failure_resolves_not_hangs(monkeypatch):
+    """A timer-scheduled re-attempt whose future() *creation* fails (e.g.
+    the backend vanished between attempts) must resolve the retry future
+    with that error — not die on the timer thread leaving value() hung."""
+    import repro.core.mapreduce as mr
+
+    real_future = mr.future
+    calls = {"n": 0}
+
+    def flaky_future(fn, **kw):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise RuntimeError("backend gone between attempts")
+        return real_future(fn, **kw)
+
+    monkeypatch.setattr(mr, "future", flaky_future)
+
+    def bad():
+        raise ValueError("attempt fails")
+
+    rf = rc.retry_future(bad, times=3, backoff_s=0.05, on=Exception)
+    with pytest.raises(RuntimeError, match="backend gone"):
+        value(rf)
+
+
 def test_evaluation_errors_do_not_retry(pool):
     calls = []
 

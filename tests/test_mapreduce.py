@@ -68,6 +68,46 @@ def test_empty_input():
     assert future_map(lambda v: v, []) == []
 
 
+def test_future_map_straggler_does_not_stall_dispatch():
+    """A slow early chunk must not stall dispatch of later chunks behind
+    the ordered-result buffer (regression: the stream sugar's default
+    in-flight cap introduced a head-of-line stall the eager frontend
+    never had)."""
+    import threading
+    import time
+
+    rc.plan("threads", workers=2)
+    release = threading.Event()
+    lock = threading.Lock()
+    started = []
+
+    def elem(x):
+        with lock:
+            started.append(x)
+        if x == 0:
+            release.wait(10)             # chunk 0 is the straggler
+        return x
+
+    result = []
+    t = threading.Thread(
+        target=lambda: result.append(future_map(elem, list(range(6)),
+                                                chunks=6)))
+    t.start()
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline:
+        with lock:
+            if len(started) == 6:
+                break
+        time.sleep(0.01)
+    with lock:
+        n_before_release = len(started)
+    release.set()
+    t.join(10)
+    rc.shutdown()
+    assert n_before_release == 6         # all chunks ran past the straggler
+    assert result and result[0] == list(range(6))
+
+
 def test_rng_misuse_warning():
     """Undeclared RNG use inside a future warns (paper §parallel RNG)."""
     from repro.core import rng
