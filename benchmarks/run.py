@@ -338,6 +338,62 @@ def bench_globals_cache(quick: bool = False) -> None:
     }
 
 
+def bench_dataflow_chain(quick: bool = False) -> None:
+    """Worker-to-worker dataflow: a 3-link continuation chain
+    ``f.then(g).then(h).then(reduce)`` over 8 MiB intermediates.
+
+    With worker-resident results (the default) every hop is locality-
+    scheduled onto the worker already holding the parent's bytes, so the
+    driver carries ~500 B control frames per link; with
+    ``remote_results=False`` each intermediate value rides a result frame
+    back to the driver and the continuation runs driver-side. Reports the
+    driver's total wire traffic (sent+received) per chain and us/link for
+    both modes — the byte reduction is the tentpole claim (~1000x for
+    8 MiB intermediates)."""
+    from repro.core.backends import transport
+
+    mib = 1 if quick else 8
+    n = mib << 17                        # mib MiB of float64
+    reps = 2 if quick else 5
+    links = 3
+    expected = float((np.arange(n, dtype=np.float64) + 1.0)[-1] * 2.0)
+
+    rows: dict = {}
+    for remote in (True, False):
+        tag = "worker_resident" if remote else "driver_gathered"
+        rc.plan("cluster", workers=2, remote_results=remote)
+        rc.value(rc.future(lambda: 1))   # warm connections + shipped code
+        # one unmeasured chain first: the arange body ships once per worker
+        out = (rc.future(lambda _n=n: np.arange(_n, dtype=np.float64))
+               .then(lambda a: a + 1.0).then(lambda a: a * 2.0)
+               .then(lambda a: float(a[-1])))
+        assert out.value() == expected
+        transport.reset_wire_stats()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = (rc.future(lambda _n=n: np.arange(_n, dtype=np.float64))
+                   .then(lambda a: a + 1.0).then(lambda a: a * 2.0)
+                   .then(lambda a: float(a[-1])))
+            assert out.value() == expected
+        dt_us = (time.perf_counter() - t0) * 1e6
+        stats = transport.wire_stats()
+        per_chain = (stats["bytes_sent"] + stats["bytes_recv"]) / reps
+        rows[f"{tag}_driver_bytes_per_chain"] = per_chain
+        rows[f"{tag}_us_per_link"] = dt_us / reps / links
+        _row(f"dataflow/{tag}", dt_us / reps / links,
+             f"us/link, {per_chain:,.0f}B through driver per "
+             f"{mib}MiB x {links}-link chain")
+        rc.shutdown()
+    rc.plan("sequential")
+    reduction = rows["driver_gathered_driver_bytes_per_chain"] \
+        / max(rows["worker_resident_driver_bytes_per_chain"], 1)
+    rows.update({"driver_byte_reduction": reduction,
+                 "intermediate_mib": mib, "links": links, "reps": reps})
+    _row("dataflow/driver_byte_reduction", reduction,
+         "x fewer driver bytes with locality-scheduled chains")
+    _CLUSTER_JSON["bench_dataflow_chain"] = rows
+
+
 def bench_worker_bootstrap(quick: bool = False) -> None:
     """Launcher subsystem: time-to-first-future for a cold
     ``plan("cluster", hosts=2)`` (LocalLauncher spawn -> hello -> dispatch)
@@ -593,14 +649,16 @@ def bench_roofline(quick: bool = False) -> None:
 BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_chunking, bench_cluster_overhead, bench_wait_vs_poll,
            bench_callback_latency, bench_globals_cache,
-           bench_worker_bootstrap, bench_stream_throughput,
+           bench_dataflow_chain, bench_worker_bootstrap,
+           bench_stream_throughput,
            bench_compression, bench_kernels, bench_roofline]
 
 #: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
 #: exactly these, so CI can re-emit the perf-trajectory artifact cheaply
 CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
                    bench_callback_latency, bench_globals_cache,
-                   bench_worker_bootstrap, bench_stream_throughput]
+                   bench_dataflow_chain, bench_worker_bootstrap,
+                   bench_stream_throughput]
 
 
 def main() -> None:

@@ -46,6 +46,14 @@ INFO_METRICS = [
      ("bench_stream_throughput", "processes", "us_per_item_stream")),
     ("us_per_item_stream/cluster",
      ("bench_stream_throughput", "cluster", "us_per_item_stream")),
+    # worker-to-worker dataflow chains (locality-scheduled continuations):
+    # informational for the first PR while the bench accumulates a baseline
+    ("us_per_link/worker_resident",
+     ("bench_dataflow_chain", "worker_resident_us_per_link")),
+    ("us_per_link/driver_gathered",
+     ("bench_dataflow_chain", "driver_gathered_us_per_link")),
+    ("driver_byte_reduction",
+     ("bench_dataflow_chain", "driver_byte_reduction")),
 ]
 
 

@@ -16,10 +16,10 @@ python -m pip install -r requirements-dev.txt \
     || echo "warning: dev-dep install failed (offline?); running with what's available"
 
 # Lint, scoped to the Future/stream core + tests (config: ruff.toml).
-# Non-gating by default while the baseline settles; REPRO_RUFF_GATING=1
-# makes findings fail the build — flip the default once the fleet is clean.
+# Gating by default now that the fleet is clean; REPRO_RUFF_GATING=0
+# drops back to warn-only for machines with a stale ruff.
 if command -v ruff >/dev/null 2>&1; then
-    if [ "${REPRO_RUFF_GATING:-0}" = "1" ]; then
+    if [ "${REPRO_RUFF_GATING:-1}" = "1" ]; then
         ruff check src/repro/core tests
     else
         ruff check src/repro/core tests \

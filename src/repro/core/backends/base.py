@@ -37,6 +37,10 @@ class TaskSpec:
     # backfills can always be served). ``refs`` is the digest tuple the
     # worker must hold before evaluating.
     payload_sources: dict = dataclasses.field(default_factory=dict)
+    # Digests whose current holders make *better homes* for this task: the
+    # cluster backend prefers an idle worker already holding them (locality
+    # scheduling for continuation chains); other backends may ignore it.
+    affinity: tuple = ()
 
     @property
     def refs(self) -> tuple:

@@ -36,6 +36,22 @@ a task frame carries the digests it references; the driver prepends
 hold; a worker that is missing a digest anyway (eviction, self-healed
 replacement with a cold cache) asks with ``("need", digest)`` and the driver
 re-serves it from the in-flight task's pinned sources.
+
+Since the worker-to-worker dataflow PR the same store also holds *results*:
+a cluster task whose result encodes to ``RESULT_REF_THRESHOLD`` bytes or
+more stays worker-resident — the worker puts the encoded blob in its own
+store and sends back ``run.value = PayloadRef(digest)`` plus a ``held``
+manifest. Driver-side those refs surface as:
+
+* :class:`RemoteValue` — the lazy driver-side face of a worker-resident
+  result. ``Future.value()`` calls :meth:`RemoteValue.fetch` to pull the
+  blob on demand; continuation chains never do — they ship the ref back
+  out (see ``future._remote_chain``) so the bytes stay on the workers.
+* :class:`RemoteSource` — a :class:`PayloadSource` stand-in whose
+  ``encode()`` *pulls* the blob from a live holder instead of re-encoding a
+  local value. It slots into the existing put/need/nak machinery unchanged,
+  which is what makes remote args work on day one for every shipping
+  backend (including ``processes``).
 """
 
 from __future__ import annotations
@@ -51,6 +67,12 @@ from typing import Any, Callable
 #: snapshot values whose payload reaches this size become content-addressed
 #: refs instead of travelling inline in every task blob
 PAYLOAD_REF_THRESHOLD = 16 * 1024
+
+#: cluster task results whose lossless encoding reaches this size stay
+#: worker-resident as a PayloadRef/RemoteValue instead of riding the result
+#: frame; small results travel inline exactly as before
+RESULT_REF_THRESHOLD = int(os.environ.get(
+    "REPRO_RESULT_REF_BYTES", str(64 * 1024)))
 
 #: default worker-side blob cache bound (encoded bytes)
 DEFAULT_STORE_BYTES = int(os.environ.get(
@@ -91,10 +113,24 @@ class PayloadRef:
         self.digest = digest
 
     def __reduce__(self):
-        return (PayloadRef, (self.digest,))
+        return (_resolve_or_ref, (self.digest,))
 
     def __repr__(self):
         return f"PayloadRef({self.digest.hex()[:12]})"
+
+
+def _resolve_or_ref(digest: bytes):
+    """Unpickle-time face of :class:`PayloadRef`: under an ambient payload
+    resolver (a worker decoding a task, see ``globals_capture.
+    payload_resolver``) the ref resolves straight to its store value, so a
+    content-addressed ref may ride *anywhere* inside shipped args / kwargs /
+    snapshot structures — not only at the top level the explicit
+    ``unship_function`` swap covers. Without a resolver (driver-side frame
+    decode, plain tooling) it reconstructs as an inert ``PayloadRef``."""
+    from ..globals_capture import _RESOLVER
+    fn = getattr(_RESOLVER, "fn", None)
+    ref = PayloadRef(digest)
+    return ref if fn is None else fn(ref)
 
 
 # --------------------------------------------------------------------------
@@ -258,6 +294,102 @@ def encode_backfill(src: "PayloadSource | None") -> "bytes | None":
         return src.encode()
     except Exception:                        # noqa: BLE001
         return None
+
+
+# --------------------------------------------------------------------------
+# Worker-resident results (remote values)
+# --------------------------------------------------------------------------
+
+class RemoteValue:
+    """Driver-side face of a result blob that stayed on its producing
+    worker. ``Future.value()`` pulls it on demand via :meth:`fetch`; a
+    continuation chained onto the future never pulls — the digest ships
+    back out as a ~500 B control frame and the holder (or a peer, via the
+    fetch/offer protocol) supplies the bytes worker-side.
+
+    Holds only a *weak* reference to the owning backend: a remote value
+    must not keep a shut-down cluster pool alive, and a dead referent turns
+    into a clean :class:`~..errors.ChannelError` at fetch time.
+    """
+
+    is_remote_value = True
+
+    __slots__ = ("digest", "nbytes", "label", "_backend", "__weakref__")
+
+    def __init__(self, digest: bytes, nbytes: int, backend, label: str = ""):
+        self.digest = digest
+        self.nbytes = int(nbytes)
+        self.label = label
+        self._backend = weakref.ref(backend)
+
+    def backend(self):
+        return self._backend()
+
+    def fetch(self, writable: bool = True):
+        """Pull and decode the blob from whoever holds it (driver store,
+        holder, any peer). ``writable`` hands back a private mutable copy
+        of array payloads, matching what an inline result frame would have
+        delivered."""
+        backend = self._backend()
+        if backend is None:
+            from ..errors import ChannelError
+            raise ChannelError(
+                f"remote result {self!r} outlived its cluster backend; "
+                f"fetch the value (Future.value()) before shutdown()")
+        value = backend.pull_value(self.digest, label=self.label)
+        if writable:
+            import numpy as np
+            if isinstance(value, np.ndarray) and not value.flags.writeable:
+                value = value.copy()
+        return value
+
+    def source(self) -> "RemoteSource":
+        return RemoteSource(self.digest, self.nbytes, self._backend,
+                            label=self.label)
+
+    def __reduce__(self):
+        raise TypeError(
+            f"{self!r} is a worker-resident result and cannot be pickled "
+            f"directly; pass it to a future (it ships as a content-"
+            f"addressed ref) or materialize it with Future.value()")
+
+    def __repr__(self):
+        tag = f" {self.label!r}" if self.label else ""
+        return (f"RemoteValue({self.digest.hex()[:12]}, "
+                f"{self.nbytes}B{tag})")
+
+
+class RemoteSource:
+    """A :class:`PayloadSource` stand-in for a digest whose bytes live on a
+    worker, not the driver. ``encode()`` *pulls* the blob from a live
+    holder (landing it in ``DRIVER_STORE`` for replay), so the existing
+    put / need / nak machinery — cluster pre-puts, processes backfills —
+    serves remote args without knowing they are remote. Dispatch paths
+    that *can* avoid the pull check :attr:`remote` and send peer-fetch
+    hints instead."""
+
+    remote = True
+
+    __slots__ = ("name", "digest", "nbytes", "_backend")
+
+    def __init__(self, digest: bytes, nbytes: int, backend_ref,
+                 label: str = ""):
+        self.name = label or f"<remote:{digest.hex()[:12]}>"
+        self.digest = digest
+        self.nbytes = int(nbytes)
+        self._backend = backend_ref
+
+    def holder_backend(self):
+        return self._backend()
+
+    def encode(self) -> bytes:
+        backend = self._backend()
+        if backend is None:
+            from ..errors import ChannelError
+            raise ChannelError(
+                f"remote payload {self.digest.hex()[:12]} outlived the "
+                f"cluster backend that held it")
+        return backend.pull_blob(self.digest, label=self.name)
 
 
 # --------------------------------------------------------------------------

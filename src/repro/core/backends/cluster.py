@@ -35,6 +35,31 @@ Spec kwargs (``plan("cluster", ...)`` / ``spec("cluster", ...)``):
   ``relaunch_reset_after=30.0`` — relaunch policy for launched workers
   (see below).
 
+Worker-to-worker dataflow (locality scheduling + the location map): a task
+dispatched with ``keep`` parks any large result in the producing worker's
+blob store and answers with ``run.value = PayloadRef(digest)`` plus a
+``held`` manifest; the driver records ``digest -> {holder wids}`` in its
+location map and surfaces the value as a lazy
+:class:`~.blobstore.RemoteValue`. A continuation chained onto such a future
+ships the *digest* back out (``TaskSpec.affinity`` names it) and
+``submit``/``try_submit`` prefer an idle worker already holding it — the
+holder receives a ~500 B control frame instead of the multi-MB value. When
+locality is impossible (holder busy or dead, cross-worker ``gather``), the
+task frame carries per-digest peer addresses (``hints``) from the location
+map and the assigned worker fetches the blob worker-to-worker over the
+``fetch``/``offer``/``onak`` frames; a peer that cannot serve (partitioned,
+evicted) degrades to the ordinary ``("need", digest)`` driver fallback, for
+which the driver itself pulls the blob from a live holder over the same
+fetch protocol (results are content-addressed, so every copy is
+self-validating). ``Future.value()`` triggers an explicit driver pull via
+:meth:`ClusterBackend.pull_value`. Holder death prunes the location map:
+digests whose last holder died are remembered as *lost* and any dependent
+dispatch / pull fails fast with a clean :class:`WorkerDiedError` instead of
+hanging. ``remote_results=False`` disables the whole mechanism (results
+always travel inline — the pre-dataflow wire shape, kept for parity
+testing). The location map lives on the backend object, so warm-pool
+re-attach (``planning._WARM_POOL``) preserves it across ``plan()`` swaps.
+
 Fault model: EOF / reset / heartbeat loss on a busy worker surfaces as
 :class:`WorkerDiedError` on that future, and the driver — which **owns**
 every launched :class:`~.launchers.WorkerProc` — relaunches a replacement
@@ -55,6 +80,7 @@ lands.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import itertools
 import os
 import pickle
@@ -69,7 +95,8 @@ from ..errors import ChannelError, FutureCancelledError, WorkerDiedError
 from .. import planning as plan_mod
 from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
                    register_backend)
-from .blobstore import encode_backfill
+from .blobstore import (DRIVER_STORE, PayloadRef, RemoteValue,
+                        encode_backfill)
 from .launchers import WorkerProc, resolve_launcher
 from .transport import FrameReader, send_frame
 
@@ -131,6 +158,9 @@ class ClusterBackend(EventWaitMixin, Backend):
     """TCP socket cluster: select-driven driver + connect-back workers."""
 
     supports_immediate = True
+    #: the Future layer may route continuations on RemoteValue parents back
+    #: through this backend (locality-scheduled chains)
+    remote_chains = True
 
     def __init__(self, workers: int | None = None,
                  hosts: "int | tuple | list | None" = None,
@@ -143,8 +173,12 @@ class ClusterBackend(EventWaitMixin, Backend):
                  relaunch_backoff: float = 0.1,
                  relaunch_backoff_cap: float = 5.0,
                  relaunch_reset_after: float = 30.0,
-                 blob_store_bytes: "int | None" = None):
+                 blob_store_bytes: "int | None" = None,
+                 remote_results: bool = True):
         self._blob_store_bytes = blob_store_bytes
+        #: keep large results worker-resident (RemoteValue dataflow); False
+        #: restores the pre-dataflow wire shape: every result travels inline
+        self._remote_results = bool(remote_results)
         self._hb_interval = float(heartbeat_interval or 0.0)
         # no heartbeats flowing -> a liveness deadline would falsely kill
         # every quiet worker; either knob at 0 disables the check
@@ -189,6 +223,21 @@ class ClusterBackend(EventWaitMixin, Backend):
             collections.deque(maxlen=256)
         self._capacity = self._n               # live-or-expected worker count
         self._shrink_debt = 0
+        # -- worker-to-worker dataflow state (guarded by _pool_cv) --
+        #: digest -> set of wids currently holding that result blob
+        self._locations: dict[bytes, set] = {}
+        #: digests whose *last* holder died with no driver copy: dependent
+        #: dispatches/pulls fail fast instead of hanging (bounded memory)
+        self._lost: "collections.OrderedDict[bytes, str]" = \
+            collections.OrderedDict()
+        # -- driver-side fetch waits (guarded by _fetch_lock, NOT _pool_cv:
+        # offers land on the select loop, which must never need _pool_cv
+        # held by a blocked puller) --
+        self._fetch_lock = threading.Lock()
+        #: (wid, digest) -> [(event, result_slot), ...]
+        self._fetch_waits: dict = {}
+        self._fetch_timeout = max(30.0, self._hb_timeout * 3.0) \
+            if self._hb_timeout else 60.0
         self._open = True
         self._cleaned = False
         self._cleanup_lock = threading.Lock()
@@ -304,15 +353,29 @@ class ClusterBackend(EventWaitMixin, Backend):
                     + "\n  ".join(failures))
         raise ChannelError(msg)
 
-    def _checkout(self) -> _SockWorker:
+    def _pick_idle_locked(self, prefer) -> "_SockWorker | None":
+        """Pop one live idle worker, preferring wids in ``prefer`` (locality
+        scheduling: an idle holder of the task's affinity digests beats any
+        other idle worker). Caller holds ``_pool_cv``."""
+        if prefer:
+            for w in reversed(self._idle):
+                if w.wid in prefer and w.sock is not None:
+                    self._idle.remove(w)
+                    return w
+        while self._idle:
+            w = self._idle.pop()
+            if w.sock is not None:
+                return w
+        return None
+
+    def _checkout(self, prefer=frozenset()) -> _SockWorker:
         """Blocking acquire of an idle worker (paper: future() blocks until
-        a worker frees up)."""
+        a worker frees up). ``prefer`` biases towards affinity holders."""
         with self._pool_cv:
             while True:
-                while self._idle:
-                    w = self._idle.pop()
-                    if w.sock is not None:
-                        return w
+                w = self._pick_idle_locked(prefer)
+                if w is not None:
+                    return w
                 if not self._open:
                     raise ChannelError("cluster backend is shut down")
                 if self._capacity <= 0:
@@ -321,7 +384,7 @@ class ClusterBackend(EventWaitMixin, Backend):
                         "respawnable)")
                 self._pool_cv.wait(0.5)
 
-    def _try_checkout(self) -> "_SockWorker | None":
+    def _try_checkout(self, prefer=frozenset()) -> "_SockWorker | None":
         """Non-blocking acquire for the admission protocol: an idle live
         worker or None — never waits for capacity. Relaunch-pending slots
         are absent by construction (they are not in the idle set until
@@ -329,11 +392,34 @@ class ClusterBackend(EventWaitMixin, Backend):
         with self._pool_cv:
             if not self._open:
                 raise ChannelError("cluster backend is shut down")
-            while self._idle:
-                w = self._idle.pop()
-                if w.sock is not None:
-                    return w
-            return None
+            return self._pick_idle_locked(prefer)
+
+    def _holders(self, digests) -> frozenset:
+        """Wids currently holding any of ``digests`` (affinity -> prefer)."""
+        if not digests:
+            return frozenset()
+        with self._pool_cv:
+            out: set = set()
+            for d in digests:
+                out |= self._locations.get(d, set())
+            return frozenset(out)
+
+    def _note_location_locked(self, digest: bytes, wid: int) -> None:
+        self._locations.setdefault(digest, set()).add(wid)
+        self._lost.pop(digest, None)         # re-held (e.g. re-executed)
+
+    def _drop_location(self, digest: bytes, wid: int) -> None:
+        with self._pool_cv:
+            wids = self._locations.get(digest)
+            if wids is not None:
+                wids.discard(wid)
+                if not wids:
+                    self._locations.pop(digest, None)
+
+    def locations(self, digest: bytes) -> frozenset:
+        """Wids believed to hold ``digest`` (diagnostics/tests)."""
+        with self._pool_cv:
+            return frozenset(self._locations.get(digest, ()))
 
     def free_slots(self) -> int:
         """Live idle workers, i.e. dispatches that would not block right
@@ -526,6 +612,14 @@ class ClusterBackend(EventWaitMixin, Backend):
             elif tag == "result":
                 h = w.busy
                 if h is not None and frame[1] == h.task.task_id:
+                    held = frame[3] if len(frame) > 3 else ()
+                    if held:
+                        # even a discarded late result stays in the
+                        # holder's store — record it either way
+                        with self._pool_cv:
+                            for digest, _nbytes in held:
+                                w.known.add(digest)
+                                self._note_location_locked(digest, w.wid)
                     if h.done.is_set():
                         # soft-cancelled future (external worker): discard
                         # the late result, worker rejoins the pool healthy
@@ -534,8 +628,25 @@ class ClusterBackend(EventWaitMixin, Backend):
                             self._idle.append(w)
                             self._pool_cv.notify_all()
                     else:
-                        h.run = frame[2]
+                        run = frame[2]
+                        if held and isinstance(run.value, PayloadRef):
+                            sizes = dict(held)
+                            nbytes = sizes.get(run.value.digest, 0)
+                            run = dataclasses.replace(
+                                run, value=RemoteValue(
+                                    run.value.digest, nbytes, self,
+                                    label=h.task.label))
+                        h.run = run
                         self._finish(w, h)
+            elif tag == "offer":
+                # answer to a driver-side ("fetch", digest): hand the blob
+                # to every puller parked on (wid, digest)
+                self._resolve_fetch(w.wid, frame[1], bytes(frame[2]))
+            elif tag == "onak":
+                # holder no longer has the digest (evicted): forget the
+                # location and fail the parked pullers over to other holders
+                self._drop_location(frame[1], w.wid)
+                self._resolve_fetch(w.wid, frame[1], None)
 
     def _match_pending_locked(self, meta: dict) -> "WorkerProc | None":
         """Pair a hello with the WorkerProc that bootstrapped it: by the
@@ -641,12 +752,25 @@ class ClusterBackend(EventWaitMixin, Backend):
                 reason += ("; worker stderr:\n    "
                            + "\n    ".join(tail.splitlines()[-10:]))
         h, w.busy = w.busy, None
+        self._fail_fetches(w.wid)
         relaunch = False
         with self._pool_cv:
             if w in self._idle:
                 self._idle.remove(w)
             if w in self._all:
                 self._all.remove(w)
+            # prune the location map: digests whose *last* holder this was
+            # (and that the driver never pulled) are now lost — remember
+            # why, so dependent work fails fast with the holder's name
+            for digest, wids in list(self._locations.items()):
+                if w.wid in wids:
+                    wids.discard(w.wid)
+                    if not wids:
+                        del self._locations[digest]
+                        if digest not in DRIVER_STORE:
+                            self._lost[digest] = w.describe()
+                            while len(self._lost) > 512:
+                                self._lost.popitem(last=False)
             if self._open and not w.retired:
                 if w.proc is not None and self._launcher is not None:
                     relaunch = True                  # self-heal, same capacity
@@ -773,14 +897,146 @@ class ClusterBackend(EventWaitMixin, Backend):
         for w in stale:
             self._on_dead(w, f"heartbeat timeout ({self._hb_timeout}s)")
 
+    # -- remote-result pulls (driver side of the fetch protocol) ------------
+    #
+    # ``pull_blob``/``pull_value`` run on *caller* threads (a user thread in
+    # Future.value(), a payload-backfill thread serving a worker's ``need``)
+    # — never on the select loop, which is the thread that pumps the
+    # ``offer``/``onak`` answers they wait for.
+
+    def _resolve_fetch(self, wid: int, digest: bytes,
+                       blob: "bytes | None") -> None:
+        with self._fetch_lock:
+            entries = self._fetch_waits.pop((wid, digest), [])
+        for event, slot in entries:
+            slot[0] = blob
+            event.set()
+
+    def _fail_fetches(self, wid: int) -> None:
+        """Unblock every puller parked on a now-dead worker (blob=None:
+        they move on to the next holder or raise cleanly)."""
+        with self._fetch_lock:
+            keys = [k for k in self._fetch_waits if k[0] == wid]
+            entries = [e for k in keys for e in self._fetch_waits.pop(k)]
+        for event, _slot in entries:
+            event.set()
+
+    def _fail_all_fetches(self) -> None:
+        with self._fetch_lock:
+            waits, self._fetch_waits = list(self._fetch_waits.values()), {}
+        for entries in waits:
+            for event, _slot in entries:
+                event.set()
+
+    def _fetch_blob_from(self, w: _SockWorker, digest: bytes
+                         ) -> "bytes | None":
+        """Ask one worker for one blob over its control socket; block until
+        the select loop pumps the offer/onak (or the worker dies / times
+        out). None = this holder could not serve it."""
+        event = threading.Event()
+        slot: list = [None]
+        key = (w.wid, digest)
+        entry = (event, slot)
+        with self._fetch_lock:
+            self._fetch_waits.setdefault(key, []).append(entry)
+        try:
+            try:
+                send_frame(w.sock, ("fetch", digest), w.send_lock)
+            except (OSError, AttributeError):
+                return None
+            if not event.wait(self._fetch_timeout):
+                return None
+            return slot[0]
+        finally:
+            with self._fetch_lock:
+                entries = self._fetch_waits.get(key)
+                if entries and entry in entries:
+                    entries.remove(entry)
+                    if not entries:
+                        self._fetch_waits.pop(key, None)
+
+    def _live_holder(self, digest: bytes) -> "_SockWorker | None":
+        with self._pool_cv:
+            wids = self._locations.get(digest, ())
+            for w in self._all:
+                if w.wid in wids and w.sock is not None and w.ready:
+                    return w
+        return None
+
+    def _peer_addrs(self, digest: bytes, exclude: "int | None" = None
+                    ) -> "tuple[list, str | None]":
+        """Peer-server addresses of live holders of ``digest`` (excluding
+        wid ``exclude`` — the dispatch target itself), plus a lost-holder
+        description when *no* live holder remains and the driver store
+        cannot serve it either (the fail-fast signal for _dispatch)."""
+        with self._pool_cv:
+            wids = self._locations.get(digest, set())
+            addrs, live = [], 0
+            for w in self._all:
+                if w.wid in wids and w.sock is not None and w.ready:
+                    live += 1
+                    if w.wid != exclude:
+                        peer = w.meta.get("peer")
+                        if peer:
+                            addrs.append(tuple(peer))
+            lost = None
+            if not live and digest not in DRIVER_STORE:
+                lost = self._lost.get(digest)
+        return addrs, lost
+
+    def pull_blob(self, digest: bytes, label: str = "") -> bytes:
+        """Materialize one remote result blob on the driver: driver store
+        first, then each live holder over the fetch protocol (caching the
+        copy in DRIVER_STORE — later pulls, backfills, and holder deaths
+        are then served locally). Raises WorkerDiedError when the bytes
+        died with their last holder, ChannelError when every holder
+        evicted them."""
+        blob = DRIVER_STORE.get(digest)
+        if blob is not None:
+            return blob
+        tag = f"{digest.hex()[:12]}" + (f" ({label})" if label else "")
+        while True:
+            with self._pool_cv:
+                if not self._open:
+                    raise ChannelError(
+                        f"cluster backend shut down before remote payload "
+                        f"{tag} was fetched")
+            w = self._live_holder(digest)
+            if w is None:
+                with self._pool_cv:
+                    where = self._lost.get(digest)
+                if where is not None:
+                    raise WorkerDiedError(
+                        f"remote payload {tag} was lost: its last holder "
+                        f"{where} died before the bytes were fetched")
+                raise ChannelError(
+                    f"remote payload {tag} is not held by any live worker "
+                    f"(evicted everywhere?)")
+            blob = self._fetch_blob_from(w, digest)
+            if blob is not None:
+                DRIVER_STORE.put(digest, blob)
+                return blob
+            # this holder could not serve it (onak / died / timed out):
+            # forget the location and try the next holder, if any
+            self._drop_location(digest, w.wid)
+
+    def pull_value(self, digest: bytes, label: str = "") -> Any:
+        """Pull + decode one remote result (Future.value()'s explicit
+        materialization). Arrays decode zero-copy read-only; RemoteValue.
+        fetch(writable=True) copies on top of this."""
+        from . import transport
+        value, _cacheable = transport.decode_payload(
+            self.pull_blob(digest, label=label))
+        return value
+
     # -- Backend API ---------------------------------------------------------
 
     def submit(self, task: TaskSpec) -> _Handle:
-        worker = self._checkout()
+        worker = self._checkout(prefer=self._holders(task.affinity))
         return self._dispatch(task, worker)
 
     def try_submit(self, task: TaskSpec) -> "_Handle | None":
-        worker = self._try_checkout()
+        worker = self._try_checkout(prefer=self._holders(task.affinity))
         if worker is None:
             return None
         return self._dispatch(task, worker)
@@ -796,10 +1052,29 @@ class ClusterBackend(EventWaitMixin, Backend):
         # this future cleanly and returns the still-healthy worker to the
         # pool, instead of leaking a checked-out worker mid-dispatch.
         # (A digest the worker evicted comes back via the ("need", d) path.)
+        # Remote-result inputs are NOT pre-put: the whole point of the
+        # dataflow path is that their bytes never route through the driver
+        # unless they must. The task frame instead carries per-digest peer
+        # addresses (hints); the worker's resolution order is own store ->
+        # peer fetch -> ("need", d) driver fallback, and a digest whose
+        # last holder died fails fast here with the holder's name.
         try:
-            puts = [(digest, src.encode())
-                    for digest, src in task.payload_sources.items()
-                    if digest not in worker.known]
+            puts, hints = [], {}
+            for digest, src in task.payload_sources.items():
+                if getattr(src, "remote", False):
+                    addrs, lost = self._peer_addrs(digest,
+                                                   exclude=worker.wid)
+                    if lost is not None and digest not in worker.known:
+                        raise WorkerDiedError(
+                            f"cannot dispatch future "
+                            f"{task.label or task.task_id!r}: its remote "
+                            f"input payload {digest.hex()[:12]} was lost "
+                            f"when its holder {lost} died",
+                            future_label=task.label)
+                    if addrs:
+                        hints[digest] = addrs
+                elif digest not in worker.known:
+                    puts.append((digest, src.encode()))
         except Exception as exc:                     # noqa: BLE001
             handle.error = exc
             # _finish does the full healthy-worker return (shrink-debt /
@@ -814,7 +1089,8 @@ class ClusterBackend(EventWaitMixin, Backend):
                            worker.send_lock)
                 worker.known.add(digest)
             send_frame(worker.sock,
-                       ("task", task.task_id, blob, task.refs),
+                       ("task", task.task_id, blob, task.refs,
+                        hints, self._remote_results),
                        worker.send_lock)
         except (OSError, AttributeError):
             worker.busy = None
@@ -894,6 +1170,8 @@ class ClusterBackend(EventWaitMixin, Backend):
             if self._cleaned:
                 return
             self._cleaned = True
+        self._fail_all_fetches()     # unblock pull_blob callers (they see
+        #                              _open=False and raise ChannelError)
         with self._pool_cv:
             workers = list(self._all)
             self._all, self._idle = [], []

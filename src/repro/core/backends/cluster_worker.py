@@ -33,12 +33,30 @@ Protocol (see transport.py): the driver sends ``init`` (nested plan stack,
 session seed, heartbeat interval, extras) immediately on accept; the worker
 replies ``hello`` and from then on pushes a heartbeat frame every interval
 from a side thread so the driver can tell a wedged/partitioned worker from
-a slow task. Tasks arrive as ``("task", id, blob, refs)`` — large globals
-referenced by digest, their bytes delivered in preceding ``("put", digest,
-blob)`` frames at most once per worker and cached in a bounded LRU
-:class:`BlobStore` (``("need", digest)`` asks evicted ones back) — and are
-answered with ``("progress", id, cond)`` streams and one
-``("result", id, run)``.
+a slow task. Tasks arrive as ``("task", id, blob, refs[, hints, keep])`` —
+large globals referenced by digest, their bytes delivered in preceding
+``("put", digest, blob)`` frames at most once per worker and cached in a
+bounded LRU :class:`BlobStore` (``("need", digest)`` asks evicted ones
+back) — and are answered with ``("progress", id, cond)`` streams and one
+``("result", id, run[, held])``.
+
+Worker-to-worker dataflow: each worker also runs a tiny *peer server* on an
+ephemeral port, advertised as ``meta["peer"]`` in the hello frame. Any
+requester (a sibling worker following the driver's per-task location
+``hints``, or the driver itself pulling a ``Future.value()``) connects —
+peers dial the advertised port, the driver just reuses this control socket
+— and speaks the symmetric fetch protocol: ``("fetch", digest)`` is
+answered with ``("offer", digest, blob)`` when the store holds the bytes,
+``("onak", digest)`` when it does not (evicted — the requester falls back
+to the driver's ``need`` path; never a silent wrong answer, since blobs
+are content-addressed). A dedicated reader thread owns every read on the
+driver socket and serves ``fetch`` frames *inline*, so a holder busy with
+a long task still serves its blobs; all other frames are queued to the
+main loop in arrival order. When a task arrives with ``keep`` set, a large
+result is parked in the local store and the result frame carries
+``run.value = PayloadRef(digest)`` plus a ``held`` manifest instead of the
+bytes — the driver records holder locations and schedules continuations
+onto them (see ``cluster.py``).
 
 Tip for hand-launched workers: export ``OMP_NUM_THREADS=1`` (and friends)
 before launching several per machine — by the time this module runs, numeric
@@ -51,12 +69,104 @@ from __future__ import annotations
 import argparse
 import os
 import pickle
+import queue
 import socket
 import threading
 import time
 
 from ..errors import ChannelError
 from .transport import recv_frame, send_frame
+
+
+def _answer_fetch(sock, send_lock, store, digest) -> None:
+    """Answer one ``("fetch", digest)``: offer the blob out-of-band, or
+    onak when the store no longer holds it (LRU eviction) — the requester
+    falls back to the driver. Send failures are the requester's problem."""
+    blob = store.get(digest)
+    try:
+        if blob is None:
+            send_frame(sock, ("onak", digest), send_lock)
+        else:
+            send_frame(sock, ("offer", digest, pickle.PickleBuffer(blob)),
+                       send_lock)
+    except OSError:
+        pass
+
+
+class _PeerServer:
+    """Ephemeral listener serving this worker's blob store to sibling
+    workers (the worker-to-worker half of the fetch/offer protocol).
+    Best-effort: if the bind fails, ``addr`` stays ``None`` and peers
+    simply use the driver-fallback path."""
+
+    def __init__(self, store, host_hint: str):
+        self._store = store
+        self.addr: "tuple[str, int] | None" = None
+        self._ls: "socket.socket | None" = None
+        try:
+            ls = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            ls.bind(("", 0))
+            ls.listen(16)
+        except OSError:
+            return
+        self._ls = ls
+        self.addr = (host_hint, ls.getsockname()[1])
+        threading.Thread(target=self._accept_loop, name="peer-serve",
+                         daemon=True).start()
+
+    def _accept_loop(self):
+        while True:
+            try:
+                conn, _ = self._ls.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve_one, args=(conn,),
+                             name="peer-conn", daemon=True).start()
+
+    def _serve_one(self, conn):
+        try:
+            conn.settimeout(30.0)
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            while True:
+                msg = recv_frame(conn)
+                if msg[0] != "fetch":
+                    return
+                _answer_fetch(conn, None, self._store, msg[1])
+        except (EOFError, ChannelError, OSError):
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    def close(self):
+        if self._ls is not None:
+            try:
+                self._ls.close()
+            except OSError:
+                pass
+
+
+def _peer_fetch(digest, addrs, timeout: float = 5.0) -> "bytes | None":
+    """Try each peer address for ``digest``; first offer wins. ``None``
+    when no peer can serve it (unreachable, partitioned, evicted) — the
+    caller falls back to the driver's ``need`` path. Failures are bounded
+    by ``timeout`` per address, so a partitioned peer costs seconds, not a
+    stuck task."""
+    for addr in addrs or ():
+        try:
+            with socket.create_connection(tuple(addr),
+                                          timeout=timeout) as ps:
+                ps.settimeout(timeout)
+                ps.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                send_frame(ps, ("fetch", digest))
+                msg = recv_frame(ps)
+                if msg[0] == "offer" and msg[1] == digest:
+                    return bytes(msg[2])
+        except (EOFError, ChannelError, OSError):
+            continue
+    return None
 
 
 def _serve(sock: socket.socket, *, tag: str = "",
@@ -136,15 +246,53 @@ def _serve(sock: socket.socket, *, tag: str = "",
     plan_mod._TLS.stack = tuple(pickle.loads(nested_blob))
     rng_mod.set_session_seed(session_seed)
 
+    from .blobstore import BlobStore
+    from .worker import ensure_refs, error_run, execute_shipped, hold_result
+
+    store = BlobStore(extras.get("blob_store_bytes"))
+    try:
+        local_ip = sock.getsockname()[0]
+    except OSError:
+        local_ip = "127.0.0.1"
+    peer_srv = _PeerServer(store, local_ip)
+
     meta = {"pid": os.getpid(), "host": socket.gethostname()}
     if tag:
         meta["tag"] = tag
+    if peer_srv.addr is not None:
+        meta["peer"] = peer_srv.addr
     send_frame(sock, ("hello", meta), send_lock)
 
-    from .blobstore import BlobStore
-    from .worker import ensure_refs, error_run, execute_shipped
+    # One reader thread owns every read on the driver socket: it serves
+    # ("fetch", digest) frames inline — so this worker keeps offering its
+    # held blobs even while the main thread is deep in a long task — and
+    # queues everything else to the main loop in arrival order (pre-task
+    # puts still precede their task frame). Read errors surface as a
+    # ("__down__", exc) sentinel so the main loop keeps the existing
+    # stop/idle/eof return semantics.
+    inbox: "queue.SimpleQueue" = queue.SimpleQueue()
 
-    store = BlobStore(extras.get("blob_store_bytes"))
+    def _reader():
+        while True:
+            try:
+                msg = recv_frame(sock)
+            except BaseException as exc:             # noqa: BLE001
+                inbox.put(("__down__", exc))
+                return
+            state["last"] = time.monotonic()
+            if msg[0] == "fetch":
+                _answer_fetch(sock, send_lock, store, msg[1])
+                continue
+            inbox.put(msg)
+
+    threading.Thread(target=_reader, name="cluster-read",
+                     daemon=True).start()
+
+    def recv_msg():
+        msg = inbox.get()
+        if msg[0] == "__down__":
+            raise msg[1]
+        return msg
 
     def _reason() -> str:
         return "idle" if state["idle"] else "eof"
@@ -152,10 +300,9 @@ def _serve(sock: socket.socket, *, tag: str = "",
     try:
         while True:
             try:
-                msg = recv_frame(sock)
+                msg = recv_msg()
             except (EOFError, ChannelError, OSError):
                 return _reason()
-            state["last"] = time.monotonic()
             if msg[0] == "stop":
                 return "stop"
             if msg[0] == "put":
@@ -165,6 +312,8 @@ def _serve(sock: socket.socket, *, tag: str = "",
                 continue
             task_id, blob = msg[1], msg[2]
             refs = msg[3] if len(msg) > 3 else ()
+            hints = msg[4] if len(msg) > 4 else None
+            keep = bool(msg[5]) if len(msg) > 5 else False
 
             def emit(cond, _tid=task_id):
                 try:
@@ -178,7 +327,10 @@ def _serve(sock: socket.socket, *, tag: str = "",
                     stopped = ensure_refs(
                         store, refs,
                         lambda d: send_frame(sock, ("need", d), send_lock),
-                        lambda: recv_frame(sock))
+                        recv_msg,
+                        peer_fetch=(
+                            (lambda d: _peer_fetch(d, hints.get(d)))
+                            if hints else None))
                     if stopped == "stop":
                         return "stop"
                     run = execute_shipped(
@@ -186,17 +338,25 @@ def _serve(sock: socket.socket, *, tag: str = "",
                         resolve_ref=lambda r: store.resolve(r.digest))
             except (EOFError, OSError):
                 return _reason()
-            except ChannelError as exc:
+            except Exception as exc:                 # noqa: BLE001
+                # a task blob that fails to decode (e.g. a function pickled
+                # by reference to a module this worker cannot import) is
+                # that task's failure, not the worker's: relay a clean
+                # error run and keep serving
                 run = error_run(exc)
             finally:
                 state["last"] = time.monotonic()
                 state["busy"] = False
+            held = ()
+            if keep:
+                run, held = hold_result(store, run)
             try:
-                send_frame(sock, ("result", task_id, run), send_lock)
+                send_frame(sock, ("result", task_id, run, held), send_lock)
             except OSError:
                 return _reason()
     finally:
         stop.set()
+        peer_srv.close()
         try:
             sock.close()
         except OSError:

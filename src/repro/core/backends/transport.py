@@ -21,18 +21,44 @@ then the payload. Frame codecs:
 Tags in use on a cluster connection (driver <-> worker):
 
   worker -> driver : ("hello", meta)       handshake; meta = {"pid", "host"
-                                           [, "tag"]} (tag: launcher pairing)
+                                           [, "tag", "peer"]} (tag: launcher
+                                           pairing; peer: (host, port) of the
+                                           worker's blob peer-server)
                      ("hb",)               heartbeat (liveness only)
                      ("bye", reason)       deliberate exit (--max-idle-s):
                                            retire my slot, don't relaunch
                      ("progress", task_id, cond)    live ImmediateCondition
-                     ("result", task_id, run)       CapturedRun (sanitized)
+                     ("result", task_id, run[, held])  CapturedRun
+                                           (sanitized); held = ((digest,
+                                           nbytes), ...) manifest of result
+                                           blobs parked worker-resident
                      ("need", digest)      blob-store backfill request
   driver -> worker : ("init", nested_blob, seed, hb_interval_s, extras)
                      ("put", digest, blob)          content-addressed payload
-                     ("task", task_id, blob, refs)  shipped fn + payload refs
+                     ("task", task_id, blob, refs[, hints, keep])
+                                           shipped fn + payload refs; hints =
+                                           {digest: [(host, port), ...]} peer
+                                           addresses for worker-to-worker
+                                           fetch; keep = park large results
+                                           in the worker's store (dataflow)
                      ("nak", digest)       driver cannot serve the digest
                      ("stop",)
+
+Blob fetch (symmetric — driver -> worker over the control socket, or any
+peer -> a worker's peer-server listener, from ``hello.meta["peer"]``):
+
+  requester -> holder : ("fetch", digest)  send me this blob
+  holder -> requester : ("offer", digest, blob)   the exact stored bytes
+                        ("onak", digest)   not (or no longer) held — the
+                                           requester falls back to the next
+                                           holder or the ("need", d) driver
+                                           path; the driver drops the
+                                           holder from its location map
+
+Fetched blobs are content-addressed (digest over the encoded bytes), so
+every copy is self-validating regardless of which holder served it. The
+worker answers ``fetch`` from a dedicated reader thread, so a holder busy
+with a long task still serves its blobs.
 
 The ref protocol: any snapshotted global whose payload reaches
 ``blobstore.PAYLOAD_REF_THRESHOLD`` ships as a ``PayloadRef`` digest inside

@@ -334,7 +334,12 @@ class Future:
         self._backend = backend
 
         self.seed_declared = seed is not None and seed is not False
-        if isinstance(seed, bool) or seed is None:
+        if seed is False:
+            # internal futures (e.g. locality-routed continuation hops) must
+            # not consume a stream index: user futures created afterwards
+            # get identical keys whether or not the hop happened
+            self._stream_index = None
+        elif seed is True or seed is None:
             self._stream_index = rng_mod.next_stream_index()
         else:
             self._stream_index = int(seed)
@@ -374,29 +379,41 @@ class Future:
     def _task(self, backend: Backend) -> TaskSpec:
         shipped = None
         sources: dict = {}
+        args, kwargs = self._args, self._kwargs
         if backend.name in ("processes", "cluster"):
             # Content-addressed shipping: large globals leave the task blob
             # as PayloadRef digests (shipped at most once per worker); the
             # extraction doubles as the exportability scan, raising
             # NonExportableObjectError at creation like assert_exportable.
             from .globals_capture import (dumps_robust,
+                                          extract_call_refs,
                                           extract_payload_refs)
             refd, sources = extract_payload_refs(
                 self._snapshot, backend=backend.name)
+            if backend.name == "cluster":
+                # large call args ride the same content-addressed channel
+                # as globals; RemoteValue args stay worker-resident digests
+                # (the dataflow path — cluster-only: its read-only shared-
+                # array contract does not extend to the pipe backend's args)
+                args, kwargs, asrc = extract_call_refs(
+                    args, kwargs, backend=backend.name)
+                sources.update(asrc)
             shipped = dumps_robust({
                 "fn": ship_function(self._fn, refd, self._packages,
                                     ref_sink=sources),
-                "args": self._args, "kwargs": self._kwargs,
+                "args": args, "kwargs": kwargs,
                 "capture_stdout": self._stdout,
                 "capture_conditions": self._conditions,
                 "seed_declared": self.seed_declared,
             }, ref_sink=sources)
         return TaskSpec(
-            task_id=self.id, fn=self._fn, args=self._args,
-            kwargs=self._kwargs, label=self.label,
+            task_id=self.id, fn=self._fn, args=args,
+            kwargs=kwargs, label=self.label,
             capture_stdout=self._stdout, capture_conditions=self._conditions,
             seed_declared=self.seed_declared, shipped=shipped,
             payload_sources=sources,
+            affinity=tuple(d for d, s in sources.items()
+                           if getattr(s, "remote", False)),
         )
 
     def _submit(self) -> None:
@@ -457,6 +474,10 @@ class Future:
             self._submit()
         if self._state != _COLLECTED:
             run = self._backend.collect(self._handle)   # may raise FutureError
+            # worker-resident result: value() is the explicit pull — fetch
+            # the blob from its holder and hand back a writable copy (may
+            # raise WorkerDiedError/ChannelError like any infra failure)
+            run = _materialize_run(run)
             with self._lock:
                 self._run, self._state = run, _COLLECTED
         assert self._run is not None
@@ -543,6 +564,53 @@ class Future:
 # Continuation steps (run on continuation threads, never in backend loops)
 # --------------------------------------------------------------------------
 
+def _materialize_run(run: CapturedRun) -> CapturedRun:
+    """Pull a worker-resident result down to the driver: a RemoteValue
+    value is fetched (writable copy) in place. Raises what the fetch
+    raises (WorkerDiedError when the bytes died with their holder)."""
+    if getattr(run.value, "is_remote_value", False):
+        run = dataclasses.replace(run, value=run.value.fetch())
+    return run
+
+
+def _chain_apply(v, _fn=None, _flatten=False):
+    """Worker-side body of a locality-routed continuation hop: run the
+    user's fn against the (peer-resolved) parent value; flatten a returned
+    Future by resolving it in place (nested futures on a worker run on the
+    worker's popped plan)."""
+    r = _fn(v)
+    if _flatten and isinstance(r, Future):
+        r = r.value()
+    return r
+
+
+def _remote_chain(prun: CapturedRun, fn: Callable, out: Future, *,
+                  flatten: bool) -> bool:
+    """Try to route a continuation on a worker-resident parent value back
+    through the holding cluster: the hop ships ~500 B of control frame (fn
+    + the parent digest) and ``TaskSpec.affinity`` steers it to a worker
+    already holding the bytes. Returns False when routing is impossible
+    (backend gone / shut down) — the caller falls back to pulling the
+    value and running the continuation driver-side."""
+    rv = prun.value
+    backend = rv.backend()
+    if backend is None or not getattr(backend, "remote_chains", False):
+        return False
+    try:
+        g = Future(_chain_apply, (rv,), {"_fn": fn, "_flatten": flatten},
+                   backend=backend, seed=False, lazy=True,
+                   label=f"{out.label}@worker")
+        # continuation convention (see _spawn_continuation): the hop must
+        # not trip RNG-misuse detection on the user's behalf
+        g.seed_declared = True
+        prefix = dataclasses.replace(prun, value=None)
+        g._register(lambda _h: _spawn_continuation(
+            out, lambda: _step_adopt(g, out, prefix=prefix)))
+    except Exception:                                # noqa: BLE001
+        return False                   # shut-down race etc.: pull instead
+    return True
+
+
 def _step_then(parent: Future, fn: Callable, out: Future, *,
                flatten: bool) -> None:
     prun, infra = _outcome(parent)
@@ -554,6 +622,16 @@ def _step_then(parent: Future, fn: Callable, out: Future, *,
         # behaviour matches value(parent)
         _CHAIN.complete(out._handle, run=dataclasses.replace(prun))
         return
+    if getattr(prun.value, "is_remote_value", False):
+        # locality-scheduled continuation: dispatch fn to the worker that
+        # already holds the parent's result instead of pulling it here
+        if _remote_chain(prun, fn, out, flatten=flatten):
+            return
+        try:
+            prun = _materialize_run(prun)
+        except Exception as exc:                     # noqa: BLE001
+            _CHAIN.complete(out._handle, error=exc)
+            return
     crun = capture_run(lambda: fn(prun.value))
     if flatten and crun.error is None and isinstance(crun.value, Future):
         inner = crun.value
@@ -866,6 +944,13 @@ def _step_gather(fs: list[Future], out: Future) -> None:
         run, infra = _outcome(f)
         if infra is not None:
             _CHAIN.complete(out._handle, error=infra)
+            return
+        try:
+            # gather crosses workers by construction: pull each worker-
+            # resident input down (driver fallback of the dataflow path)
+            run = _materialize_run(run)
+        except Exception as exc:                     # noqa: BLE001
+            _CHAIN.complete(out._handle, error=exc)
             return
         runs.append(run)
     merged = CapturedRun(value=[r.value for r in runs])

@@ -175,6 +175,12 @@ def extract_payload_refs(snapshot: dict[str, Any], *, backend: str,
         if isinstance(val, types.ModuleType):
             out[name] = val
             continue
+        if getattr(val, "is_remote_value", False):
+            # a worker-resident result captured as a global: ship the ref,
+            # let the holder (or a peer / the driver fallback) move the bytes
+            sources[val.digest] = val.source()
+            out[name] = blobstore.PayloadRef(val.digest)
+            continue
         arr, _kind = blobstore.as_ndarray(val)
         if arr is not None:
             if arr.nbytes >= threshold:
@@ -198,6 +204,50 @@ def extract_payload_refs(snapshot: dict[str, Any], *, backend: str,
         else:
             out[name] = val
     return out, sources
+
+
+def extract_call_refs(args: tuple, kwargs: dict, *, backend: str,
+                      threshold: "int | None" = None,
+                      ) -> "tuple[tuple, dict, dict]":
+    """Content-address large *call arguments* the same way globals are:
+    returns ``(args, kwargs, sources)`` with big top-level values replaced
+    by :class:`~.backends.blobstore.PayloadRef` markers (resolved worker-
+    side through the ambient payload resolver at task decode).
+
+    Covered: arrays (``content_digest`` over raw bytes, memoized),
+    ``bytes``/``str`` at or over ``threshold`` (cheap ``len`` probe), and
+    worker-resident :class:`~.backends.blobstore.RemoteValue` results —
+    the fuel of continuation chains, which ship as a ~500 B ref plus
+    peer-fetch hints instead of the multi-MB value. Other values travel
+    inline as before (no speculative pickling on the small-arg fast path);
+    a ``RemoteValue`` *nested* inside a container is still converted during
+    the shipping pickle via ``_ShippingPickler.reducer_override``.
+    """
+    from .backends import blobstore
+    if threshold is None:
+        threshold = blobstore.PAYLOAD_REF_THRESHOLD
+    sources: dict[bytes, Any] = {}
+
+    def convert(val, name):
+        if getattr(val, "is_remote_value", False):
+            sources[val.digest] = val.source()
+            return blobstore.PayloadRef(val.digest)
+        arr, _kind = blobstore.as_ndarray(val)
+        if arr is not None and arr.nbytes >= threshold:
+            digest = blobstore.content_digest(val)
+            sources[digest] = blobstore.PayloadSource(name, digest, val)
+            return blobstore.PayloadRef(digest)
+        if isinstance(val, (bytes, str)) and len(val) >= threshold:
+            blob = dumps_robust(val)
+            digest = blobstore.blob_digest(blob)
+            sources[digest] = blobstore.PayloadSource(name, digest, val,
+                                                      pickled=blob)
+            return blobstore.PayloadRef(digest)
+        return val
+
+    args = tuple(convert(v, f"<arg{i}>") for i, v in enumerate(args))
+    kwargs = {k: convert(v, f"<kwarg:{k}>") for k, v in kwargs.items()}
+    return args, kwargs, sources
 
 
 # --------------------------------------------------------------------------
@@ -279,6 +329,15 @@ class _ShippingPickler(pickle.Pickler):
         if isinstance(obj, types.ModuleType):
             import importlib
             return (importlib.import_module, (obj.__name__,))
+        if getattr(obj, "is_remote_value", False) \
+                and self._ref_sink is not None:
+            # a worker-resident result nested anywhere in the shipped
+            # structure: pickle the digest marker (resolved worker-side by
+            # the ambient resolver) and sink a RemoteSource so the dispatch
+            # layer can move (or hint at) the bytes
+            from .backends.blobstore import _resolve_or_ref
+            self._ref_sink[obj.digest] = obj.source()
+            return (_resolve_or_ref, (obj.digest,))
         return NotImplemented
 
 

@@ -169,6 +169,12 @@ _lock = threading.RLock()
 # re-attaches to its live workers (blob caches intact, no jax re-import)
 # instead of cold-starting a new pool. Only worker-owning backends are
 # parked; explicit shutdown() still tears everything down.
+#
+# The cluster backend's dataflow state — the digest->holder location map
+# behind locality-scheduled continuations and peer fetch — lives on the
+# backend *object*, so parking/re-attaching preserves it structurally: a
+# RemoteValue produced before a plan() swap still knows where its bytes
+# live after planning back, and chains on it keep their locality.
 # --------------------------------------------------------------------------
 
 #: parked backends, key -> Backend (insertion-ordered for LRU eviction)

@@ -81,6 +81,13 @@ class _MapOp:
     chunk: int
     chunk_sizes: "tuple | None"        # exact plan (future_map sugar)
     label: str
+    #: fused downstream stages: (fn, pass_key, base_index) per stage.
+    #: Adjacent ``.map``s collapse into one pump at terminal time (see
+    #: Stream._run) — the intermediate value never leaves the worker, the
+    #: dataflow analogue of locality-scheduled ``then`` chains. Per-element
+    #: stream keys stay per *stage* (fold_in(session, base_s + i)), so
+    #: fused and unfused pipelines draw identical randomness.
+    extra: tuple = ()
 
 
 def _filtered(it: Iterator, pred: Callable) -> Iterator:
@@ -117,15 +124,19 @@ def _chunked(it: Iterator, op: _MapOp) -> Iterator:
 
 def _chunk_runner(op: _MapOp) -> Callable:
     """The shipped chunk body — identical to ``future_map``'s: applies
-    ``fn`` per element, passing the element's stream key when declared."""
-    def run_chunk(idx: "list[int]", items: "list", _fn=op.fn,
-                  _pass_key=op.pass_key, _base=op.base_index):
+    each (possibly fused) stage's ``fn`` per element, passing the
+    element's per-stage stream key when that stage declared one."""
+    specs = ((op.fn, op.pass_key, op.base_index),) + op.extra
+
+    def run_chunk(idx: "list[int]", items: "list", _specs=specs):
         out = []
         for i, x in zip(idx, items):
-            if _pass_key:
-                out.append(_fn(x, key=rng_mod.stream_key(_base + i)))
-            else:
-                out.append(_fn(x))
+            for _fn, _pass_key, _base in _specs:
+                if _pass_key:
+                    x = _fn(x, key=rng_mod.stream_key(_base + i))
+                else:
+                    x = _fn(x)
+            out.append(x)
         return out
     return run_chunk
 
@@ -304,14 +315,41 @@ class Stream:
 
     # -- terminals -----------------------------------------------------------
 
+    @staticmethod
+    def _fuse(ops: tuple) -> tuple:
+        """Collapse *adjacent* ``.map`` stages into single pumps: the
+        intermediate values never come back to the driver (one future runs
+        the whole fn chain per element — worker-resident dataflow). Never
+        fuses across ``filter``/``batch`` (they run driver-side and
+        renumber the element stream). Chunking follows the first stage;
+        ``retries`` is the chain's max; per-element RNG keys stay
+        per-stage, so results are bit-identical to the unfused pipeline."""
+        fused: list = []
+        for op in ops:
+            if (isinstance(op, _MapOp) and fused
+                    and isinstance(fused[-1], _MapOp)):
+                head = fused[-1]
+                fused[-1] = dataclasses.replace(
+                    head,
+                    seed=head.seed if head.seed_declared else op.seed,
+                    seed_declared=head.seed_declared or op.seed_declared,
+                    retries=max(head.retries, op.retries),
+                    label=f"{head.label}+{op.label.rsplit('.', 1)[-1]}",
+                    extra=head.extra
+                    + ((op.fn, op.pass_key, op.base_index),))
+            else:
+                fused.append(op)
+        return tuple(fused)
+
     def _run(self, ordered: bool) -> Iterator:
         self.stats.clear()
         self.stats.update({"dispatched": 0, "retried": 0,
                            "peak_in_flight": 0, "max_in_flight": None})
         it: Iterator = iter(self._source)
-        maps = [i for i, o in enumerate(self._ops) if isinstance(o, _MapOp)]
+        ops = self._fuse(self._ops)
+        maps = [i for i, o in enumerate(ops) if isinstance(o, _MapOp)]
         last_map = maps[-1] if maps else None
-        for i, op in enumerate(self._ops):
+        for i, op in enumerate(ops):
             if isinstance(op, _MapOp):
                 # intermediate stages stay ordered so downstream element
                 # numbering (RNG) and filters are deterministic

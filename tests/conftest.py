@@ -20,6 +20,10 @@ def pytest_configure(config):
         "markers",
         "launcher: worker-launcher subsystem tests (select with "
         "'-m launcher', skip with '-m \"not launcher\"')")
+    config.addinivalue_line(
+        "markers",
+        "dataflow: worker-to-worker dataflow tests (locality-scheduled "
+        "chains, peer blob fetch; select with '-m dataflow')")
 
 
 def pytest_collection_modifyitems(config, items):

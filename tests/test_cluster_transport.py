@@ -464,6 +464,123 @@ def test_empty_array_frame_roundtrip_single_byte_reads():
     assert bytes(sock.sent) == blob
 
 
+# --------------------------------------------------------------------------
+# dataflow frames (fetch / offer / onak, task hints, held manifests): the
+# worker-to-worker protocol rides the same framing layer — property-check it
+# under split reads / partial sends like every other frame family
+# --------------------------------------------------------------------------
+
+def _digest16(data):
+    return bytes(bytearray(data.draw(
+        st.lists(st.integers(0, 255), min_size=16, max_size=16))))
+
+
+def _dataflow_frame_case(data):
+    """Draw one (frame-object, comparator) case from the dataflow frame
+    family added for worker-resident results."""
+    import pickle
+
+    kind = data.draw(st.sampled_from(
+        ["fetch", "offer", "offer-empty", "onak", "task-hints",
+         "result-held"]))
+    d = _digest16(data)
+    if kind == "fetch":
+        obj = ("fetch", d)
+        return obj, lambda got: got[0] == "fetch" and bytes(got[1]) == d
+    if kind in ("offer", "offer-empty"):
+        # an offered blob may be empty (a 0-byte payload is a legal store
+        # entry) — the 0-length OOB buffer class again
+        n = 0 if kind == "offer-empty" else data.draw(st.integers(1, 8192))
+        unit = bytes(bytearray(data.draw(
+            st.lists(st.integers(0, 255), min_size=1, max_size=32))))
+        blob = (unit * (n // len(unit) + 1))[:n]
+        obj = ("offer", d, pickle.PickleBuffer(blob))
+        return obj, lambda got, blob=blob: (
+            got[0] == "offer" and bytes(got[1]) == d
+            and bytes(got[2]) == blob)
+    if kind == "onak":
+        obj = ("onak", d)
+        return obj, lambda got: got[0] == "onak" and bytes(got[1]) == d
+    if kind == "task-hints":
+        addrs = [("127.0.0.1", data.draw(st.integers(1024, 65535)))
+                 for _ in range(data.draw(st.integers(0, 3)))]
+        hints, keep = {d: addrs}, data.draw(st.booleans())
+        obj = ("task", data.draw(st.integers(1, 1 << 30)), b"blob",
+               (d,), hints, keep)
+        return obj, lambda got, hints=hints, keep=keep: (
+            got[0] == "task" and got[4] == hints and bool(got[5]) is keep)
+    nbytes = data.draw(st.integers(0, 1 << 40))
+    held = ((d, nbytes),)
+    obj = ("result", data.draw(st.integers(1, 1 << 30)), "run", held)
+    return obj, lambda got, held=held: (
+        got[0] == "result" and got[3] == held)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_dataflow_frames_roundtrip_split_reads(data):
+    obj, check = _dataflow_frame_case(data)
+    blob = transport.encode_frame(obj)
+    sizes = data.draw(st.lists(st.integers(1, 2048), min_size=0,
+                               max_size=40))
+    reader = transport.FrameReader(_ScriptedSock(blob, sizes))
+    frames = []
+    for _ in range(len(blob) + 1):
+        frames += reader.feed()
+        if frames:
+            break
+    assert len(frames) == 1
+    assert check(frames[0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_dataflow_frames_roundtrip_blocking_recv(data):
+    obj, check = _dataflow_frame_case(data)
+    blob = transport.encode_frame(obj)
+    sizes = data.draw(st.lists(st.integers(1, 1024), min_size=0,
+                               max_size=40))
+    assert check(transport.recv_frame(_ScriptedSock(blob, sizes)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_dataflow_frames_partial_sendmsg(data):
+    obj, _check = _dataflow_frame_case(data)
+    parts = transport.encode_frame_parts(obj)
+    caps = data.draw(st.lists(st.integers(1, 4096), min_size=0,
+                              max_size=40))
+    sock = _PartialSendSock(caps)
+    transport._sendmsg_all(sock, parts)
+    assert bytes(sock.sent) == transport.encode_frame(obj)
+
+
+def test_fetch_offer_roundtrip_single_byte_reads():
+    """Deterministic pin: every fetch-protocol frame shape — including a
+    0-length offered blob — survives worst-case 1-byte split reads on both
+    read paths and 1-byte partial sends."""
+    import pickle
+    d = bytes(range(16))
+    cases = [(("fetch", d), None), (("onak", d), None),
+             (("offer", d, pickle.PickleBuffer(b"")), b""),
+             (("offer", d, pickle.PickleBuffer(b"x" * 257)), b"x" * 257)]
+    for obj, payload in cases:
+        blob = transport.encode_frame(obj)
+        reader = transport.FrameReader(_ScriptedSock(blob, [1] * len(blob)))
+        frames = []
+        while not frames:
+            frames += reader.feed()
+        got = frames[0]
+        got2 = transport.recv_frame(_ScriptedSock(blob, [1] * len(blob)))
+        for g in (got, got2):
+            assert g[0] == obj[0] and bytes(g[1]) == d
+            if payload is not None:
+                assert bytes(g[2]) == payload
+        sock = _PartialSendSock([1] * len(blob))
+        transport._sendmsg_all(sock, transport.encode_frame_parts(obj))
+        assert bytes(sock.sent) == blob
+
+
 def test_no_sleep_polling_in_collection_paths():
     """The acceptance criterion, mechanically: no time.sleep-based polling
     left in the future_map / future_either / resolve collection loops."""

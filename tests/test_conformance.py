@@ -203,6 +203,77 @@ def test_stream_error_relayed_as_is(backend):
         rc.stream([1, 2, 3]).map(lambda v: int("nope")).collect()
 
 
+# --------------------------------------------------------------------------
+# remote-result chains (worker-to-worker dataflow): on cluster rows the
+# intermediates stay worker-resident as content-addressed blobs and the
+# hops are locality-routed — none of which may be visible in the values,
+# the exception relay, or the RNG streams on any row
+# --------------------------------------------------------------------------
+
+_CHAIN_N = 1 << 14       # 128 KiB float64: crosses RESULT_REF_THRESHOLD
+
+
+def test_remote_result_chain_values(backend):
+    import numpy as np
+    f = future(lambda: np.arange(_CHAIN_N, dtype=np.float64))
+    g = f.then(lambda a: np.sqrt(a + 1.0)).map(lambda a: float(a.sum()))
+    expected = float(np.sqrt(
+        np.arange(_CHAIN_N, dtype=np.float64) + 1.0).sum())
+    assert value(g) == expected          # bit-identical, not approx
+
+
+def test_remote_result_chain_exception_and_recover(backend):
+    import numpy as np
+    f = future(lambda: np.arange(_CHAIN_N, dtype=np.float64))
+    with pytest.raises(ValueError):      # relayed as-is through the hop
+        value(f.then(lambda a: int("nope")))
+    h = f.then(lambda a: int("nope")).recover(lambda e: type(e).__name__)
+    assert value(h) == "ValueError"
+
+
+def test_remote_result_chain_rng_stream_invariance(backend):
+    """A locality-routed hop must not consume a stream index: a seeded
+    future created *after* the chain draws the same stream on every row."""
+    import jax
+    import numpy as np
+    rc.set_session_seed(77)
+    f = future(lambda: np.arange(_CHAIN_N, dtype=np.float64))   # index 0
+    assert value(f.then(lambda a: float(a[0]))) == 0.0          # no index
+    tail = future(lambda key: float(jax.random.normal(key, ())),
+                  seed=True)                                    # index 1
+    expected = float(jax.random.normal(
+        jax.random.fold_in(jax.random.PRNGKey(77), 1), ()))
+    assert value(tail) == pytest.approx(expected)
+
+
+def test_stream_two_maps_fused_parity(backend):
+    xs = list(range(12))
+    s = (rc.stream(iter(xs))
+         .map(lambda v: v * 2, chunk=3)
+         .map(lambda v: float(v) + 0.5))
+    assert s.collect(ordered=True) == [v * 2 + 0.5 for v in xs]
+    assert s.stats["dispatched"] == 4    # adjacent maps fused into one hop
+
+
+def test_stream_fused_seeded_maps_rng_parity(backend):
+    """Fusion keeps per-stage RNG streams: the two-map seeded pipeline is
+    bit-identical to the sequential reference on every row."""
+    import jax
+
+    def run():
+        rc.set_session_seed(9)
+        return (rc.stream(i for i in range(6))
+                .map(lambda v, key: v + float(jax.random.uniform(key)),
+                     seed=True, chunk=2)
+                .map(lambda v, key: v * float(jax.random.uniform(key)),
+                     seed=True)
+                .collect(ordered=True))
+
+    got = run()
+    rc.plan("sequential")
+    assert got == run()                  # bit-identical floats
+
+
 @pytest.mark.parametrize("name", ["processes", "cluster"])
 def test_worker_isolation(name):
     """Process-family backends really do run elsewhere — including the TCP

@@ -1,0 +1,419 @@
+"""Worker-to-worker dataflow: remote results, locality-scheduled chains,
+peer blob fetch.
+
+The tentpole contract under test: a cluster task's large result stays on
+the producing worker as a content-addressed blob (the driver holds a lazy
+``RemoteValue``), continuation chains are scheduled onto the holder and
+ship ~500 B of control frame instead of the value, and when locality is
+impossible the bytes move worker-to-worker over the fetch/offer protocol —
+with the driver as fallback, and clean ``WorkerDiedError`` /
+``ChannelError`` failures (never hangs, never silent corruption) when
+holders die or evict. Synchronization is always on observable driver /
+file-marker state — no sleeps-as-synchronization.
+"""
+
+import os
+import pickle
+import socket
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as rc
+from _cluster_harness import HarnessLauncher
+from repro.core import future, gather, stream, value
+from repro.core.backends import transport
+from repro.core.backends.blobstore import (DRIVER_STORE, RemoteValue,
+                                           blob_digest)
+
+pytestmark = pytest.mark.dataflow
+
+#: big enough to cross RESULT_REF_THRESHOLD (64 KiB), small enough for fast
+#: tests; the byte-reduction *bench* uses 8 MiB intermediates instead
+_N = 1 << 17          # 1 MiB of float64
+
+#: fast-heal knobs (same as test_faults) so fault cases run in seconds
+_FAST = dict(heartbeat_interval=0.1, heartbeat_timeout=3.0,
+             relaunch_backoff=0.05, relaunch_backoff_cap=0.2)
+
+
+def _big(bias=0.0):
+    """1 MiB payload; ``bias`` gives a test a digest no other test shares
+    (DRIVER_STORE is process-global and content-addressed, so a digest
+    pulled by an earlier test stays cached — loss/eviction tests need
+    bytes nobody pulled before)."""
+    return np.arange(_N, dtype=np.float64) + bias
+
+
+def _remote_value_of(f):
+    """The RemoteValue a resolved future's run carries (before value()
+    materializes it)."""
+    run = f._backend.collect(f._handle)
+    assert isinstance(run.value, RemoteValue), run.value
+    return run.value
+
+
+def _holder_pids(backend, digest):
+    wids = backend.locations(digest)
+    with backend._pool_cv:
+        return {w.meta.get("pid") for w in backend._all if w.wid in wids}
+
+
+def _wait(pred, timeout=15.0, what="condition"):
+    """Poll an observable driver-state predicate to a deadline."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.01)
+    raise TimeoutError(f"{what} not reached within {timeout}s")
+
+
+def _make_blocker(pidfile, release):
+    """Chain body that parks its worker: publish my pid, hold the slot
+    until the release marker appears, then compute. Built as a *local*
+    function so it ships by value — a test-module global would pickle by
+    reference to a module the workers cannot import."""
+    def body(a, _p=pidfile, _r=release):
+        import os as _os
+        import time as _time
+        with open(_p, "w") as fh:
+            fh.write(str(_os.getpid()))
+        while not _os.path.exists(_r):
+            _time.sleep(0.005)
+        return float(a[0])
+    return body
+
+
+# --------------------------------------------------------------------------
+# Remote results + locality scheduling
+# --------------------------------------------------------------------------
+
+def test_large_result_stays_worker_resident_and_pulls_writable():
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    f = future(_big)
+    rv = _remote_value_of(f)
+    # the driver holds a digest + a location, not the bytes
+    assert rv.nbytes >= _N * 8
+    assert backend.locations(rv.digest)
+    assert rv.digest not in DRIVER_STORE
+    # value() is the explicit pull: correct bytes, writable copy
+    v = f.value()
+    assert isinstance(v, np.ndarray) and v.flags.writeable
+    assert np.array_equal(v, _big())
+    # pulled bytes are cached driver-side (holder death no longer loses them)
+    assert rv.digest in DRIVER_STORE
+
+
+def test_small_results_travel_inline():
+    rc.plan("cluster", workers=2)
+    f = future(lambda: np.arange(16, dtype=np.float64))
+    run = f._backend.collect(f._handle)
+    assert isinstance(run.value, np.ndarray)      # no RemoteValue detour
+    assert np.array_equal(f.value(), np.arange(16, dtype=np.float64))
+
+
+def test_chain_runs_on_holder_and_skips_the_driver_bytes():
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    f = future(_big)
+    rv = _remote_value_of(f)
+    holder_pids = _holder_pids(backend, rv.digest)
+    transport.reset_wire_stats()
+    g = f.then(lambda a: (os.getpid(), float(a.sum())))
+    pid, total = g.value()
+    sent = transport.wire_stats()["bytes_sent"]
+    assert total == float(_big().sum())
+    # locality: the continuation hop landed on the worker holding f's bytes
+    assert pid in holder_pids
+    # ~500 B control frame, not the ~1 MiB value, went through the driver
+    assert sent < _N * 8 // 10, sent
+
+
+def test_remote_value_refuses_direct_pickle():
+    rc.plan("cluster", workers=1)
+    f = future(_big)
+    rv = _remote_value_of(f)
+    with pytest.raises(TypeError, match="cannot be pickled directly"):
+        pickle.dumps(rv)
+
+
+def _driver_only_helper():
+    return "never runs on a worker"
+
+
+def test_undecodable_task_is_clean_error_not_worker_death():
+    """A body referencing a test-module global function pickles it by
+    reference to a module the worker cannot import: the decode failure is
+    *that task's* error (relayed at value()), and the worker survives to
+    serve the next future."""
+    rc.plan("cluster", workers=1)
+    backend = rc.active_backend()
+    with pytest.raises(Exception, match="test_dataflow|_driver_only_helper"):
+        future(lambda: _driver_only_helper()).value()
+    # the worker did not die on the bad blob
+    assert future(lambda: 41 + 1).value() == 42
+    assert not backend._relaunch_log
+
+
+def test_error_and_recover_mid_chain_with_remote_parent():
+    rc.plan("cluster", workers=2)
+
+    def boom(a):
+        raise ValueError(f"boom:{int(a[0])}")
+
+    f = future(_big)
+    g = f.then(boom)
+    with pytest.raises(ValueError, match="boom:0"):
+        g.value()
+    h = f.then(boom).recover(lambda exc: f"recovered:{exc}")
+    assert h.value().startswith("recovered:")
+
+
+def test_gather_pulls_cross_worker_results():
+    rc.plan("cluster", workers=2)
+    fs = [future(lambda k=k: np.full(_N, float(k))) for k in range(3)]
+    got = value(gather(fs))
+    for k, v in enumerate(got):
+        assert np.array_equal(v, np.full(_N, float(k)))
+
+
+def test_large_call_args_are_content_addressed_and_deduped():
+    rc.plan("cluster", workers=1)
+    big = np.full(_N, 3.0)
+    assert future(lambda a: float(a.sum()), big).value() == float(big.sum())
+    transport.reset_wire_stats()
+    # same arg content again, same worker: the digest is known — no re-ship
+    assert future(lambda a: float(a.sum()), big).value() == float(big.sum())
+    assert transport.wire_stats()["bytes_sent"] < _N * 8 // 10
+
+
+def test_remote_results_off_restores_inline_results():
+    rc.plan("cluster", workers=2, remote_results=False)
+    f = future(_big)
+    run = f._backend.collect(f._handle)
+    assert isinstance(run.value, np.ndarray)      # legacy wire shape
+    g = f.then(lambda a: float(a.sum()))
+    assert g.value() == float(_big().sum())
+
+
+def test_worker_resident_and_gathered_values_are_bit_identical():
+    """The dataflow path must be invisible in the numbers: the same seeded
+    program yields byte-equal results with results worker-resident vs
+    driver-gathered (remote_results=False)."""
+    def prog():
+        rc.set_session_seed(42)
+        f = future(_big)
+        g = f.then(lambda a: np.sqrt(a + 1.0))
+        h = g.then(lambda a: a.tobytes())
+        return h.value()
+
+    rc.plan("cluster", workers=2, remote_results=True)
+    via_workers = prog()
+    rc.plan("cluster", workers=2, remote_results=False)
+    via_driver = prog()
+    assert via_workers == via_driver
+
+
+def test_warm_pool_reattach_preserves_location_map():
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    f = future(_big)
+    rv = _remote_value_of(f)
+    assert backend.locations(rv.digest)
+    rc.plan("sequential")                 # parks the cluster warm
+    rc.plan("cluster", workers=2)         # re-attach, same spec/seed
+    assert rc.active_backend() is backend
+    assert backend.locations(rv.digest)   # map survived structurally
+    assert np.array_equal(f.value(), _big())
+
+
+def test_fused_stream_maps_match_cluster_and_sequential():
+    ref = [float(np.sqrt(v * 2.0 + 1.0)) for v in range(12)]
+    for name, kw in (("sequential", {}), ("cluster", {"workers": 2})):
+        rc.plan(name, **kw)
+        s = (stream(range(12))
+             .map(lambda v: v * 2.0, chunk=3)
+             .map(lambda v: float(np.sqrt(v + 1.0))))
+        assert s.collect(ordered=True) == ref, name
+        # adjacent maps fused into one pump: one future per chunk, total
+        assert s.stats["dispatched"] == 4, (name, s.stats)
+
+
+# --------------------------------------------------------------------------
+# Peer fetch: protocol pin, busy holder, partition fallback, eviction
+# --------------------------------------------------------------------------
+
+def test_peer_server_protocol_pin():
+    """Speak the fetch protocol to a worker's peer listener directly:
+    a held digest comes back as a self-validating offer, a bogus digest
+    as onak."""
+    rc.plan("cluster", workers=1)
+    backend = rc.active_backend()
+    f = future(_big)
+    rv = _remote_value_of(f)
+    with backend._pool_cv:
+        peers = [w.meta.get("peer") for w in backend._all]
+    peer = next(p for p in peers if p)
+    with socket.create_connection(tuple(peer), timeout=10) as s:
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        transport.send_frame(s, ("fetch", rv.digest))
+        msg = transport.recv_frame(s)
+        assert msg[0] == "offer" and msg[1] == rv.digest
+        blob = bytes(msg[2])
+        assert blob_digest(blob) == rv.digest     # content self-validates
+        assert len(blob) == rv.nbytes
+        transport.send_frame(s, ("fetch", b"\x00" * 16))
+        msg = transport.recv_frame(s)
+        assert msg[0] == "onak" and msg[1] == b"\x00" * 16
+
+
+def test_peer_fetch_serves_chain_while_holder_is_busy(tmp_path):
+    """Locality impossible (holder busy) -> the hop runs on the other
+    worker, which fetches f's bytes worker-to-worker; the driver never
+    routes the value."""
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    pidfile, release = str(tmp_path / "pid"), str(tmp_path / "go")
+    f = future(_big)
+    rv = _remote_value_of(f)
+    holder_pids = _holder_pids(backend, rv.digest)
+    # occupy the holder deterministically: this chain is locality-routed
+    blocker = f.then(_make_blocker(pidfile, release))
+    _wait(lambda: os.path.exists(pidfile), what="blocker pinned on holder")
+    with open(pidfile) as fh:
+        assert int(fh.read()) in holder_pids
+    transport.reset_wire_stats()
+    g = f.then(lambda a: (os.getpid(), float(a.sum())))
+    pid, total = g.value()
+    sent = transport.wire_stats()["bytes_sent"]
+    open(release, "w").close()
+    assert total == float(_big().sum())
+    assert pid not in holder_pids            # ran on the non-holder
+    # peer fetch moved the bytes worker-to-worker: driver sent ~no payload
+    assert sent < _N * 8 // 10, sent
+    assert blocker.value() == 0.0
+
+
+def test_partitioned_peer_falls_back_to_driver(tmp_path):
+    """Peers unreachable mid-fetch -> the worker degrades to ("need", d)
+    and the driver serves the blob (pulling it off the busy holder's
+    control socket) — correct value, no hang."""
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    pidfile, release = str(tmp_path / "pid"), str(tmp_path / "go")
+    f = future(_big)
+    rv = _remote_value_of(f)
+    holder_pids = _holder_pids(backend, rv.digest)
+    blocker = f.then(_make_blocker(pidfile, release))
+    _wait(lambda: os.path.exists(pidfile), what="blocker pinned on holder")
+    # partition the peer path: hints point at a dead port (connection
+    # refused instantly — the simulated network partition)
+    probe = socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    dead_addr = probe.getsockname()
+    probe.close()
+    real_peer_addrs = backend._peer_addrs
+    backend._peer_addrs = lambda digest, exclude=None: (
+        ([dead_addr], None) if real_peer_addrs(digest, exclude)[0]
+        else real_peer_addrs(digest, exclude))
+    try:
+        g = f.then(lambda a: (os.getpid(), float(a.sum())))
+        pid, total = g.value()
+    finally:
+        backend._peer_addrs = real_peer_addrs
+        open(release, "w").close()
+    assert total == float(_big().sum())
+    assert pid not in holder_pids
+    assert blocker.value() == 0.0
+
+
+def test_eviction_under_fetch_naks_then_driver_backfills():
+    """A holder that evicted the digest answers onak — a requester with a
+    driver-side copy gets backfilled, one without gets a clean
+    ChannelError. Never stale bytes."""
+    blob_bytes = int(_N * 8 * 1.5)       # room for ~one held result
+    rc.plan("cluster", workers=2, blob_store_bytes=blob_bytes)
+    backend = rc.active_backend()
+    f = future(_big)
+    rv = _remote_value_of(f)
+    f.value()                             # driver now holds a copy
+    assert rv.digest in DRIVER_STORE
+    # locality-route a second big result onto the holder: its store is too
+    # small for both, so f's blob is evicted there
+    f2 = f.then(lambda a: a * 2.0)
+    rv2 = _remote_value_of(f2)
+    assert backend.locations(rv2.digest)
+    # chain on f again: the worker's peer/need fetch meets the eviction;
+    # the driver's cached copy backfills and the value is still correct
+    g = f.then(lambda a: float(a.sum()))
+    assert g.value() == float(_big().sum())
+
+
+def test_evicted_everywhere_is_clean_channel_error():
+    blob_bytes = int(_N * 8 * 1.5)
+    rc.plan("cluster", workers=1, blob_store_bytes=blob_bytes)
+    backend = rc.active_backend()
+    f = future(_big, 3.25)               # digest no earlier test pulled
+    rv = _remote_value_of(f)
+    # displace f's blob from its only holder (never pulled driver-side)
+    f2 = f.then(lambda a: a + 1.0)
+    _remote_value_of(f2)
+    f2.value()                           # f2's blob now driver-side too
+    # f's bytes are gone everywhere: the pull must fail fast and clean
+    with pytest.raises(rc.ChannelError, match="evicted"):
+        f.value()
+    assert rv.digest not in DRIVER_STORE  # no partial/stale cache entry
+
+
+# --------------------------------------------------------------------------
+# Holder death (harness launcher, hosts=2)
+# --------------------------------------------------------------------------
+
+@pytest.mark.launcher
+def test_holder_death_fails_dependent_chain_cleanly():
+    """SIGKILL the worker holding f's result before g dispatches: the
+    chain (and the pull) fail with WorkerDiedError naming the loss — no
+    hang — and the relaunched pool keeps serving fresh work."""
+    h = HarnessLauncher()
+    rc.plan("cluster", hosts=2, launcher=h, **_FAST)
+    backend = rc.active_backend()
+    f = future(_big, 5.5)                # digest no earlier test pulled
+    rv = _remote_value_of(f)
+    pid = next(iter(_holder_pids(backend, rv.digest)))
+    wp = h.by_pid(pid)
+    assert wp is not None
+    h.kill(wp)
+    # deterministic gate: the driver has processed the death once the
+    # location map no longer lists any holder for the digest
+    _wait(lambda: not backend.locations(rv.digest), what="death detected")
+    g = f.then(lambda a: float(a.sum()))
+    with pytest.raises(rc.WorkerDiedError, match="lost"):
+        g.value()
+    with pytest.raises(rc.WorkerDiedError, match="lost"):
+        f.value()
+    # self-heal: the replacement joins and fresh chains work end to end
+    h.wait_launches(3)
+    f2 = future(_big)
+    assert f2.then(lambda a: float(a.sum())).value() == float(_big().sum())
+
+
+@pytest.mark.launcher
+def test_pulled_result_survives_holder_death():
+    """A result pulled to the driver before its holder dies stays
+    available: DRIVER_STORE is a location too."""
+    h = HarnessLauncher()
+    rc.plan("cluster", hosts=2, launcher=h, **_FAST)
+    backend = rc.active_backend()
+    f = future(_big, 6.5)                # digest no earlier test pulled
+    rv = _remote_value_of(f)
+    v1 = f.value()                        # pull + cache driver-side
+    pid = next(iter(_holder_pids(backend, rv.digest)))
+    h.kill(h.by_pid(pid))
+    _wait(lambda: not backend.locations(rv.digest), what="death detected")
+    # chain after the death: driver-fallback serves the cached bytes
+    g = f.then(lambda a: float(a.sum()))
+    assert g.value() == float(_big(6.5).sum())
+    assert np.array_equal(v1, _big(6.5))

@@ -203,6 +203,10 @@ def test_harness_kill_mid_map_relaunches_and_retries(tmp_path):
     assert out == [0, 2, 4, 6, 8, 10]
     watcher.join(timeout=10)
     assert watcher.killed is not None            # the kill really landed...
+    deadline = time.time() + 10                  # SIGKILL delivery is async:
+    while watcher.killed.poll() is None \
+            and time.time() < deadline:          # wait for the death, don't
+        time.sleep(0.01)                         # race the signal
     assert watcher.killed.poll() is not None     # ...on a worker that died
     # the driver-owned relaunch is asynchronous (backoff-delayed): wait for
     # the replacement bootstrap, 2 initial launches + >=1 relaunch
