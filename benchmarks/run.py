@@ -559,6 +559,89 @@ def bench_stream_throughput(quick: bool = False) -> None:
     _CLUSTER_JSON["bench_stream_throughput"]["n_items"] = n_items
 
 
+def bench_state_ops(quick: bool = False) -> None:
+    """Shared-state service costs (state.py): small put/get RPC round-trip
+    rate from a cluster worker, CAS retry rate under full-pool update
+    contention on one counter, and the repeated large-value get — the
+    content-addressed reply path means the second get of an 8 MiB entry
+    ships a known digest, not 8 MiB of bytes."""
+    from repro.core import future, gather, state, value
+
+    workers = 4 if quick else 8
+    rc.plan("cluster", workers=workers)
+
+    # small ops: one worker hammering put+get round-trips over TCP
+    n_small = 60 if quick else 300
+
+    def small(_n=n_small):
+        import time as _t
+        from repro.core import state
+        t0 = _t.perf_counter()
+        for i in range(_n):
+            state.put("bench.small", i)
+            state.get("bench.small")
+        return (_t.perf_counter() - t0) / (2 * _n)     # s per op
+
+    s_per_op = value(future(small))
+    ops_per_s = 1.0 / s_per_op
+    _row("state/small_put_get", s_per_op * 1e6,
+         f"{ops_per_s:,.0f} ops/s, 1 worker, TCP RPC")
+
+    # contention: every worker folds one counter via update (CAS loop)
+    per = 10 if quick else 25
+
+    def fold(_per=per):
+        import time as _t
+        from repro.core import state
+        t0 = _t.perf_counter()
+        for _ in range(_per):
+            state.update("bench.acc", lambda v: (v or 0) + 1)
+        return (_t.perf_counter() - t0) / _per, state.stats()["cas_retries"]
+
+    got = value(gather([future(fold) for _ in range(workers)]))
+    commits = workers * per
+    assert state.get("bench.acc") == commits           # exact fold, always
+    retries = sum(r for _, r in got)
+    retry_rate = retries / commits
+    us_update = sum(t for t, _ in got) / workers * 1e6
+    _row("state/update_contention", us_update,
+         f"{workers} workers, retry_rate={retry_rate:.2f} "
+         f"({retries} retries / {commits} commits)")
+
+    # large value: first get ships the blob, repeats hit the known-digest
+    # dedup (reply carries the digest; worker decodes from its own store)
+    large_mib = 2 if quick else 8
+    state.put("bench.big", np.ones((large_mib << 20) // 8))
+    reps = 5 if quick else 20
+
+    def lg(_reps=reps):
+        import time as _t
+        from repro.core import state
+        a = state.get("bench.big")                     # cold: bytes move
+        t0 = _t.perf_counter()
+        for _ in range(_reps):
+            state.get("bench.big")
+        return (_t.perf_counter() - t0) / _reps, float(a[0])
+
+    us_large, first = value(future(lg))
+    us_large *= 1e6
+    assert first == 1.0
+    _row("state/large_get_warm", us_large,
+         f"{large_mib}MiB entry, known-digest reply (no byte re-ship)")
+
+    _CLUSTER_JSON["bench_state_ops"] = {
+        "workers": workers, "n_small": n_small,
+        "small_put_get_ops_per_s": ops_per_s,
+        "cas_retry_rate": retry_rate,
+        "commits": commits,
+        "us_update_contended": us_update,
+        "us_large_get": us_large,
+        "large_mib": large_mib,
+    }
+    rc.shutdown()
+    rc.plan("sequential")
+
+
 def _fmt_kib(v: float) -> str:
     return f"{v:,.0f}KiB"
 
@@ -650,7 +733,7 @@ BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_chunking, bench_cluster_overhead, bench_wait_vs_poll,
            bench_callback_latency, bench_globals_cache,
            bench_dataflow_chain, bench_worker_bootstrap,
-           bench_stream_throughput,
+           bench_stream_throughput, bench_state_ops,
            bench_compression, bench_kernels, bench_roofline]
 
 #: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
@@ -658,7 +741,7 @@ BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
 CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
                    bench_callback_latency, bench_globals_cache,
                    bench_dataflow_chain, bench_worker_bootstrap,
-                   bench_stream_throughput]
+                   bench_stream_throughput, bench_state_ops]
 
 
 def main() -> None:

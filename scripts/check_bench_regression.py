@@ -53,7 +53,16 @@ INFO_METRICS = [
     ("us_per_link/driver_gathered",
      ("bench_dataflow_chain", "driver_gathered_us_per_link")),
     ("driver_byte_reduction",
-     ("bench_dataflow_chain", "driver_byte_reduction")),
+     ("bench_dataflow_chain", "driver_byte_reduction"), "x"),
+    # shared-state service (state.py): informational while the bench
+    # accumulates a baseline; the retry rate is workload-shaped (full-pool
+    # contention on one key), not a latency
+    ("state_small_ops_per_s",
+     ("bench_state_ops", "small_put_get_ops_per_s"), "ops/s"),
+    ("state_cas_retry_rate",
+     ("bench_state_ops", "cas_retry_rate"), "x"),
+    ("state_us_large_get",
+     ("bench_state_ops", "us_large_get")),
 ]
 
 
@@ -107,11 +116,13 @@ def main(argv=None) -> int:
               f"(limit {limit:.1f}us)")
         if f > limit:
             failed = True
-    for label, path in INFO_METRICS:
+    for entry in INFO_METRICS:
+        label, path = entry[0], entry[1]
+        unit = entry[2] if len(entry) > 2 else "us"
         b, f = _lookup(baseline, path), _lookup(fresh, path)
         if b is None and f is None:
             continue
-        fmt = lambda v: "n/a" if v is None else f"{v:.1f}us"  # noqa: E731
+        fmt = lambda v: "n/a" if v is None else f"{v:.1f}{unit}"  # noqa: E731
         print(f"bench-guard:       info {label}: "
               f"baseline {fmt(b)} -> fresh {fmt(f)} "
               f"(informational, never fails)")

@@ -19,6 +19,7 @@ map-reduce pipelines on the same three constructs::
 """
 
 from . import rng                                            # noqa: F401
+from . import state                                          # noqa: F401
 from .backends import base as _base                          # noqa: F401
 from .backends import sequential as _sequential              # noqa: F401
 from .backends import threads as _threads                    # noqa: F401
@@ -50,7 +51,7 @@ __all__ = [
     "Launcher", "LocalLauncher", "SSHLauncher", "CommandLauncher",
     "WorkerProc",
     "future_map", "future_lapply", "future_either", "retry", "retry_future",
-    "future_map_chunked_lazy", "stream", "Stream",
+    "future_map_chunked_lazy", "stream", "Stream", "state",
     "FutureError", "WorkerDiedError", "ChannelError", "FutureCancelledError",
     "GlobalsError", "NonExportableObjectError", "RNGMisuseWarning",
     "signal_progress", "message", "ListEnv", "set_session_seed",

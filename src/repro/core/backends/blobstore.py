@@ -345,7 +345,7 @@ class RemoteValue:
 
     def source(self) -> "RemoteSource":
         return RemoteSource(self.digest, self.nbytes, self._backend,
-                            label=self.label)
+                            label=self.label, anchor=self)
 
     def __reduce__(self):
         raise TypeError(
@@ -370,14 +370,18 @@ class RemoteSource:
 
     remote = True
 
-    __slots__ = ("name", "digest", "nbytes", "_backend")
+    __slots__ = ("name", "digest", "nbytes", "_backend", "_anchor")
 
     def __init__(self, digest: bytes, nbytes: int, backend_ref,
-                 label: str = ""):
+                 label: str = "", anchor=None):
         self.name = label or f"<remote:{digest.hex()[:12]}>"
         self.digest = digest
         self.nbytes = int(nbytes)
         self._backend = backend_ref
+        # strong ref to the originating RemoteValue: while a chained task
+        # holds this source (pinned on its in-flight handle), the handle's
+        # GC-driven release must not evict the blob out from under it
+        self._anchor = anchor
 
     def holder_backend(self):
         return self._backend()
@@ -463,6 +467,23 @@ class BlobStore:
             self._blobs.move_to_end(digest)
             self.hits += 1
             return blob
+
+    def drop(self, digest: bytes) -> bool:
+        """Explicitly evict one blob (driver-side GC release: the digest's
+        last ``RemoteValue`` handle died). Pinned digests — referenced by a
+        task currently executing here — are left alone: the release frame
+        beat the task; LRU pressure reclaims them later. True iff the blob
+        was removed."""
+        with self._lock:
+            if digest in self._pins:
+                return False
+            blob = self._blobs.pop(digest, None)
+            if blob is None:
+                return False
+            self._bytes -= len(blob)
+            self._objects.pop(digest, None)
+            self.evictions += 1
+            return True
 
     def resolve(self, digest: bytes) -> Any:
         """Decoded value for ``digest`` (decoded-object cache first).

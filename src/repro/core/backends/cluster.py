@@ -60,6 +60,15 @@ always travel inline — the pre-dataflow wire shape, kept for parity
 testing). The location map lives on the backend object, so warm-pool
 re-attach (``planning._WARM_POOL``) preserves it across ``plan()`` swaps.
 
+Two lanes ride the same control socket besides tasks and blobs: the
+*shared-state* lane (``state``/``state_rep`` frames — task bodies calling
+``repro.core.state`` reach the driver-hosted :class:`~..state.StateService`;
+small ops are answered inline on the select loop, large values and ``wait``
+notifications from side threads) and the *GC* lane (``("evict", digest)`` —
+when the last :class:`RemoteValue` handle for a worker-resident result is
+garbage-collected at the driver, holders are told to drop the bytes instead
+of waiting for LRU pressure).
+
 Fault model: EOF / reset / heartbeat loss on a busy worker surfaces as
 :class:`WorkerDiedError` on that future, and the driver — which **owns**
 every launched :class:`~.launchers.WorkerProc` — relaunches a replacement
@@ -88,6 +97,7 @@ import selectors
 import socket
 import threading
 import time
+import weakref
 from typing import Any
 
 from ..conditions import CapturedRun, ImmediateCondition
@@ -117,6 +127,28 @@ class _Handle(CompletionHandle):
         # digest -> PayloadSource, pinned while in flight so ("need", digest)
         # backfills can always be served
         self.sources: dict = task.payload_sources
+
+
+def _queue_release(backend_ref, digest: bytes) -> None:
+    """RemoteValue finalizer target (module-level so the finalizer holds
+    no strong backend reference). Never sends frames — a finalizer can
+    fire during GC on *any* thread, possibly one already holding a send
+    lock; it only flips the refcount and queues the digest for the select
+    loop's ``_service_releases``."""
+    be = backend_ref()
+    if be is None or not be._open:
+        return
+    with be._release_lock:
+        n = be._rv_refs.get(digest, 0) - 1
+        if n > 0:
+            be._rv_refs[digest] = n
+            return
+        be._rv_refs.pop(digest, None)
+        be._pending_releases.append(digest)
+    try:
+        os.write(be._wake_w, b"g")           # service promptly, not at tick
+    except (OSError, ValueError):
+        pass
 
 
 class _SockWorker:
@@ -238,6 +270,14 @@ class ClusterBackend(EventWaitMixin, Backend):
         self._fetch_waits: dict = {}
         self._fetch_timeout = max(30.0, self._hb_timeout * 3.0) \
             if self._hb_timeout else 60.0
+        # -- driver-side GC of worker-resident blobs: RemoteValue handles
+        # are refcounted per digest; when the last one is collected its
+        # finalizer queues the digest here and the select loop sends
+        # ("evict", digest) to the holders. RLock: a finalizer can run at
+        # any allocation, including while this thread already holds it.
+        self._release_lock = threading.RLock()
+        self._rv_refs: dict[bytes, int] = {}
+        self._pending_releases: list[bytes] = []
         self._open = True
         self._cleaned = False
         self._cleanup_lock = threading.Lock()
@@ -504,6 +544,8 @@ class ClusterBackend(EventWaitMixin, Backend):
                     else:
                         self._pump(data)
                 self._service_relaunches()
+                self._service_releases()
+                self._service_state_timeouts()
                 self._reap_and_check()
             except Exception:                        # noqa: BLE001
                 # The driver thread is a singleton: an escaped exception
@@ -604,6 +646,10 @@ class ClusterBackend(EventWaitMixin, Backend):
                         pass
                 threading.Thread(target=_serve, name="payload-backfill",
                                  daemon=True).start()
+            elif tag == "state":
+                # shared-state op from the task running on this worker
+                # (see state.py for op/reply shapes)
+                self._handle_state(w, frame)
             elif tag == "progress":
                 h = w.busy
                 if h is not None:
@@ -632,10 +678,10 @@ class ClusterBackend(EventWaitMixin, Backend):
                         if held and isinstance(run.value, PayloadRef):
                             sizes = dict(held)
                             nbytes = sizes.get(run.value.digest, 0)
-                            run = dataclasses.replace(
-                                run, value=RemoteValue(
-                                    run.value.digest, nbytes, self,
-                                    label=h.task.label))
+                            rv = RemoteValue(run.value.digest, nbytes, self,
+                                             label=h.task.label)
+                            self._track_remote(rv)
+                            run = dataclasses.replace(run, value=rv)
                         h.run = run
                         self._finish(w, h)
             elif tag == "offer":
@@ -896,6 +942,125 @@ class ClusterBackend(EventWaitMixin, Backend):
                      and now - w.last_seen > self._hb_timeout]
         for w in stale:
             self._on_dead(w, f"heartbeat timeout ({self._hb_timeout}s)")
+
+    # -- shared-state service (driver side; op/reply shapes in state.py) ----
+
+    def _handle_state(self, w: _SockWorker, frame) -> None:
+        """Execute one ``("state", rid, op, args)`` frame from the task
+        running on ``w``. Small ops run inline on the select loop (dict
+        ops on the singleton service); a ``wait`` registers a service
+        watch whose notification — and any multi-hundred-KiB value serve —
+        runs on a side thread, so the loop never blocks on user values and
+        never stalls heartbeats (the same rule as ``need`` backfills)."""
+        from .. import state as state_mod
+        _tag, rid, op, args = frame
+        svc = state_mod.service()
+
+        def _send(status, payload, digest=None):
+            try:
+                send_frame(w.sock, ("state_rep", rid, status, payload),
+                           w.send_lock)
+                if digest is not None:
+                    w.known.add(digest)
+            except (OSError, AttributeError):
+                pass                 # the loop reaps the dead socket
+
+        if op == "wait":
+            key, min_version, timeout = args
+            deadline = (time.monotonic() + float(timeout)) \
+                if timeout is not None else None
+
+            def _notify(ok, value, version):
+                # satisfying commits can land on any thread (this select
+                # loop included): encode + send on a side thread always
+                def _run():
+                    if not ok:
+                        _send("timeout", None)
+                        return
+                    try:
+                        payload, digest = svc.reply_payload(
+                            key, value, version, w.known)
+                    except Exception as exc:         # noqa: BLE001
+                        _send("err", state_mod._safe_exc(exc))
+                        return
+                    _send("ok", (version, state_mod.oob(payload)), digest)
+                threading.Thread(target=_run, name="state-notify",
+                                 daemon=True).start()
+
+            svc.add_watch(key, int(min_version), _notify, deadline)
+            return
+
+        def _wrap(payload):
+            # out-of-band the large-value halves of ok replies (zero-copy
+            # frame path); everything else ships as-is
+            if op == "get" and payload[0]:
+                return (True, payload[1], state_mod.oob(payload[2]))
+            if op == "cas" and payload[2]:
+                return (payload[0], payload[1], True,
+                        state_mod.oob(payload[3]))
+            if op == "blob":
+                return pickle.PickleBuffer(payload)
+            return payload
+
+        def _serve():
+            status, payload, digest = svc.handle(op, args, w.known)
+            if status == "ok":
+                payload = _wrap(payload)
+            _send(status, payload, digest)
+
+        big = op == "blob" \
+            or (op == "get" and svc.estimated_nbytes(args[0])
+                >= state_mod.STATE_INLINE_MAX) \
+            or (op in ("put", "cas") and args[-1][0] == "r"
+                and args[-1][3] >= state_mod.STATE_INLINE_MAX)
+        if big:
+            threading.Thread(target=_serve, name="state-serve",
+                             daemon=True).start()
+        else:
+            _serve()
+
+    def _service_state_timeouts(self) -> None:
+        """Sweep expired state watches (their workers get a ``timeout``
+        reply). Tick-resolution (≤1 s) is the contract for wait timeouts."""
+        from .. import state as state_mod
+        svc = state_mod._SERVICE
+        if svc is not None:
+            svc.expire_watches()
+
+    # -- driver-side GC of worker-resident blobs ----------------------------
+
+    def _track_remote(self, rv: RemoteValue) -> None:
+        """Refcount a new RemoteValue handle for its digest and arm a
+        finalizer: when the *last* handle for a digest is collected the
+        digest is queued for release and the select loop tells every
+        holder to evict its copy — without this, a dropped handle's bytes
+        squat worker memory until LRU pressure happens to reclaim them."""
+        digest = rv.digest
+        with self._release_lock:
+            self._rv_refs[digest] = self._rv_refs.get(digest, 0) + 1
+        weakref.finalize(rv, _queue_release, weakref.ref(self), digest)
+
+    def _service_releases(self) -> None:
+        if not self._pending_releases:       # unlocked hint, same as _loop
+            return
+        with self._release_lock:
+            digests, self._pending_releases = self._pending_releases, []
+        for digest in digests:
+            with self._release_lock:
+                if self._rv_refs.get(digest, 0) > 0:
+                    continue                 # re-produced since queued
+            with self._pool_cv:
+                wids = self._locations.pop(digest, set())
+                # nothing can reference it anymore: the lost-blob memory
+                # of it (if any) is noise now too
+                self._lost.pop(digest, None)
+                holders = [w for w in self._all
+                           if w.wid in wids and w.sock is not None]
+            for w in holders:
+                try:
+                    send_frame(w.sock, ("evict", digest), w.send_lock)
+                except (OSError, AttributeError):
+                    pass
 
     # -- remote-result pulls (driver side of the fetch protocol) ------------
     #

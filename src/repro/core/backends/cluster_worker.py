@@ -51,8 +51,12 @@ answered with ``("offer", digest, blob)`` when the store holds the bytes,
 to the driver's ``need`` path; never a silent wrong answer, since blobs
 are content-addressed). A dedicated reader thread owns every read on the
 driver socket and serves ``fetch`` frames *inline*, so a holder busy with
-a long task still serves its blobs; all other frames are queued to the
-main loop in arrival order. When a task arrives with ``keep`` set, a large
+a long task still serves its blobs; it likewise routes ``state_rep``
+frames (shared-state replies — the main thread is blocked inside user
+code awaiting them; see ``state.py``) straight into the state client's
+wait slots, and applies ``("evict", digest)`` frames (driver-side GC of a
+dead ``RemoteValue``) directly to the blob store; all other frames are
+queued to the main loop in arrival order. When a task arrives with ``keep`` set, a large
 result is parked in the local store and the result frame carries
 ``run.value = PayloadRef(digest)`` plus a ``held`` manifest instead of the
 bytes — the driver records holder locations and schedules continuations
@@ -246,10 +250,14 @@ def _serve(sock: socket.socket, *, tag: str = "",
     plan_mod._TLS.stack = tuple(pickle.loads(nested_blob))
     rng_mod.set_session_seed(session_seed)
 
+    from ..state import SockStateClient, state_context
     from .blobstore import BlobStore
     from .worker import ensure_refs, error_run, execute_shipped, hold_result
 
     store = BlobStore(extras.get("blob_store_bytes"))
+    # shared-state client: task bodies calling `repro.core.state.*` go to
+    # the driver's StateService over this control socket (see state.py)
+    st_client = SockStateClient(sock, send_lock, store)
     try:
         local_ip = sock.getsockname()[0]
     except OSError:
@@ -277,11 +285,24 @@ def _serve(sock: socket.socket, *, tag: str = "",
             try:
                 msg = recv_frame(sock)
             except BaseException as exc:             # noqa: BLE001
+                # unblock any task thread parked inside a state call before
+                # the main loop even sees the sentinel
+                st_client.fail_all(exc)
                 inbox.put(("__down__", exc))
                 return
             state["last"] = time.monotonic()
             if msg[0] == "fetch":
                 _answer_fetch(sock, send_lock, store, msg[1])
+                continue
+            if msg[0] == "state_rep":
+                # the main thread is blocked inside user code waiting on
+                # exactly this reply — route it straight to the wait slot
+                st_client.deliver(msg)
+                continue
+            if msg[0] == "evict":
+                # driver-side GC: the RemoteValue handle for this digest
+                # died at the driver — drop our copy (no-op if pinned/gone)
+                store.drop(msg[1])
                 continue
             inbox.put(msg)
 
@@ -333,9 +354,10 @@ def _serve(sock: socket.socket, *, tag: str = "",
                             if hints else None))
                     if stopped == "stop":
                         return "stop"
-                    run = execute_shipped(
-                        blob, emit,
-                        resolve_ref=lambda r: store.resolve(r.digest))
+                    with state_context(st_client):
+                        run = execute_shipped(
+                            blob, emit,
+                            resolve_ref=lambda r: store.resolve(r.digest))
             except (EOFError, OSError):
                 return _reason()
             except Exception as exc:                 # noqa: BLE001

@@ -54,6 +54,9 @@ class _Worker:
         #: payload digests this worker is believed to hold (cold for a
         #: freshly restarted worker; its LRU may still evict -> "need")
         self.known: set[bytes] = set()
+        #: serializes parent->worker pipe sends: _drive's dispatch/backfill
+        #: traffic vs state-wait reply threads (state.py)
+        self.send_lock = threading.Lock()
         self.busy_task: "_Handle | None" = None
 
     def wait_ready(self) -> None:
@@ -212,11 +215,12 @@ class ProcessBackend(SlotCounterMixin, EventWaitMixin, Backend):
                     handle.error = exc
                     return
                 try:
-                    for digest, pblob in puts:
-                        worker.parent_conn.send(("put", digest, pblob))
-                        worker.known.add(digest)
-                    worker.parent_conn.send(
-                        ("task", task.task_id, blob, task.refs))
+                    with worker.send_lock:
+                        for digest, pblob in puts:
+                            worker.parent_conn.send(("put", digest, pblob))
+                            worker.known.add(digest)
+                        worker.parent_conn.send(
+                            ("task", task.task_id, blob, task.refs))
                 except OSError:
                     # worker died while idle (e.g. OOM-killed): the pipe
                     # send raises EPIPE — surface WorkerDiedError and mark
@@ -245,11 +249,17 @@ class ProcessBackend(SlotCounterMixin, EventWaitMixin, Backend):
                         # blob-store backfill (LRU eviction on the worker)
                         pblob = encode_backfill(
                             task.payload_sources.get(msg[1]))
-                        if pblob is not None:
-                            worker.parent_conn.send(("put", msg[1], pblob))
-                            worker.known.add(msg[1])
-                        else:
-                            worker.parent_conn.send(("nak", msg[1]))
+                        with worker.send_lock:
+                            if pblob is not None:
+                                worker.parent_conn.send(
+                                    ("put", msg[1], pblob))
+                                worker.known.add(msg[1])
+                            else:
+                                worker.parent_conn.send(("nak", msg[1]))
+                    elif msg[0] == "state":
+                        # shared-state op from the task body: serve it
+                        # against the in-process singleton (state.py)
+                        self._serve_state(worker, msg)
                     elif msg[0] == "result":
                         handle.run = msg[2]
                         return
@@ -260,6 +270,54 @@ class ProcessBackend(SlotCounterMixin, EventWaitMixin, Backend):
             self._release_slot()
             # push completion: fires done-callbacks from this I/O thread
             self._complete(handle)
+
+    def _serve_state(self, worker: _Worker, msg) -> None:
+        """Serve one ``("state", rid, op, args)`` pipe message from a task
+        body against the driver-process singleton service. ``wait`` blocks
+        by design, so it runs on a side thread — ``_drive`` keeps pumping
+        the pipe (death detection) while the worker's main thread is
+        parked inside ``state.wait()``."""
+        from .. import state as state_mod
+        _tag, rid, op, args = msg
+        svc = state_mod.service()
+
+        def _send(status, payload):
+            try:
+                with worker.send_lock:
+                    worker.parent_conn.send(
+                        ("state_rep", rid, status, payload))
+            except (OSError, ValueError):
+                pass             # worker death surfaces on the recv side
+
+        if op == "wait":
+            key, min_version, timeout = args
+
+            def _run():
+                try:
+                    value, version = svc.wait(key, int(min_version), timeout)
+                except state_mod.StateTimeout:
+                    _send("timeout", None)
+                    return
+                except Exception as exc:             # noqa: BLE001
+                    _send("err", state_mod._safe_exc(exc))
+                    return
+                try:
+                    payload, digest = svc.reply_payload(
+                        key, value, version, worker.known)
+                except Exception as exc:             # noqa: BLE001
+                    _send("err", state_mod._safe_exc(exc))
+                    return
+                if digest is not None:
+                    worker.known.add(digest)
+                _send("ok", (version, payload))
+
+            threading.Thread(target=_run, name="state-wait",
+                             daemon=True).start()
+            return
+        status, payload, digest = svc.handle(op, args, worker.known)
+        if digest is not None:
+            worker.known.add(digest)
+        _send(status, payload)
 
     def poll(self, handle: _Handle) -> bool:
         return handle.done.is_set()

@@ -33,6 +33,18 @@ Tags in use on a cluster connection (driver <-> worker):
                                            nbytes), ...) manifest of result
                                            blobs parked worker-resident
                      ("need", digest)      blob-store backfill request
+                     ("state", rid, op, args)   shared-state op from the
+                                           task body (rid: per-client
+                                           request counter; op: get/put/
+                                           cas/update is client-side/
+                                           delete/wait/keys/version/blob —
+                                           shapes in ``state.py``). Values
+                                           inside ``args`` ride as
+                                           ("b", blob) inline below
+                                           PAYLOAD_REF_THRESHOLD, else
+                                           ("r", digest, blob|None,
+                                           nbytes) on the content-
+                                           addressed path
   driver -> worker : ("init", nested_blob, seed, hb_interval_s, extras)
                      ("put", digest, blob)          content-addressed payload
                      ("task", task_id, blob, refs[, hints, keep])
@@ -42,6 +54,19 @@ Tags in use on a cluster connection (driver <-> worker):
                                            fetch; keep = park large results
                                            in the worker's store (dataflow)
                      ("nak", digest)       driver cannot serve the digest
+                     ("state_rep", rid, status, payload)   shared-state
+                                           reply; status "ok" | "timeout"
+                                           (a wait expired) | "err" (the
+                                           payload is the exception). The
+                                           worker's reader thread routes
+                                           these straight into the state
+                                           client's per-rid wait slots
+                     ("evict", digest)     driver-side GC: the last
+                                           RemoteValue handle for this
+                                           worker-resident result died at
+                                           the driver — drop the blob
+                                           (no-op when pinned by a
+                                           running task)
                      ("stop",)
 
 Blob fetch (symmetric — driver -> worker over the control socket, or any

@@ -6,9 +6,11 @@ Protocol (length-prefixed pickles over a multiprocessing Pipe):
                      ("task", task_id, blob, refs)  blob = shipped function,
                                                     refs = digests it needs
                      ("nak", digest)                parent cannot serve it
+                     ("state_rep", rid, status, p)  shared-state reply
                      ("stop",)
   worker -> parent : ("need", digest)               blob-store backfill
                      ("progress", task_id, payload) immediateConditions, live
+                     ("state", rid, op, args)       shared-state op (state.py)
                      ("result", task_id, run_blob)  CapturedRun (sanitized)
                      ("ready",)                     handshake after spawn
 
@@ -180,12 +182,17 @@ def worker_main(conn, nested_stack_blob: bytes, session_seed: int,
     from .. import planning as plan_mod
     from .. import rng as rng_mod
     from ..errors import ChannelError
+    from ..state import PipeStateClient, state_context
 
     nested = pickle.loads(nested_stack_blob)
     plan_mod._TLS.stack = tuple(nested)         # worker-local plan stack
     rng_mod.set_session_seed(session_seed)
 
     store = BlobStore(blob_store_bytes)
+    # shared-state client: task bodies calling `repro.core.state.*` reach
+    # the parent's in-process StateService over this same pipe — the main
+    # thread is the pipe's only reader, and only calls while inside a task
+    st_client = PipeStateClient(conn, store=store)
     conn.send(("ready",))
     while True:
         try:
@@ -217,9 +224,10 @@ def worker_main(conn, nested_stack_blob: bytes, session_seed: int,
                                       conn.recv)
                 if stopped == "stop":
                     return
-                run = execute_shipped(blob, emit,
-                                      resolve_ref=lambda r: store.resolve(
-                                          r.digest))
+                with state_context(st_client):
+                    run = execute_shipped(
+                        blob, emit,
+                        resolve_ref=lambda r: store.resolve(r.digest))
         except (EOFError, OSError):
             return                           # channel gone mid-backfill
         except ChannelError as exc:

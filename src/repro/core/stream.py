@@ -141,14 +141,37 @@ def _chunk_runner(op: _MapOp) -> Callable:
     return run_chunk
 
 
+def _est_nbytes(x) -> int:
+    """Cheap payload-size estimate for one stream element: array
+    ``.nbytes``, buffer/str lengths, recursive container sums, else the
+    interpreter's shallow ``getsizeof``. An *admission* heuristic — it
+    bounds memory for the size-skewed workloads that matter (arrays,
+    blobs), not a serializer-exact accounting."""
+    import sys
+    n = getattr(x, "nbytes", None)
+    if isinstance(n, int):
+        return n
+    if isinstance(x, (bytes, bytearray, memoryview, str)):
+        return len(x)
+    if isinstance(x, (list, tuple, set, frozenset)):
+        return sum(_est_nbytes(v) for v in x) + sys.getsizeof(x)
+    if isinstance(x, dict):
+        return sum(_est_nbytes(k) + _est_nbytes(v)
+                   for k, v in x.items()) + sys.getsizeof(x)
+    return sys.getsizeof(x)
+
+
 def _pump(op: _MapOp, upstream: Iterator, *, max_in_flight: "int | None",
+          max_in_flight_bytes: "int | None" = None,
           ordered: bool, stats: dict) -> Iterator:
     """The streaming dispatch loop for one ``.map`` stage."""
     backend = plan_mod.active_backend()
     mif = max_in_flight if max_in_flight is not None \
         else 2 * max(backend.workers, 1)
     mif = max(int(mif), 1)
+    mbytes = int(max_in_flight_bytes) if max_in_flight_bytes else None
     stats["max_in_flight"] = mif
+    stats["max_in_flight_bytes"] = mbytes
     run_chunk = _chunk_runner(op)
 
     def make(cid: int, idx: list, items: list, tries: int) -> Future:
@@ -159,8 +182,10 @@ def _pump(op: _MapOp, upstream: Iterator, *, max_in_flight: "int | None",
                       else f"{op.label}-retry")
 
     chunk_iter = _chunked(upstream, op)
-    queue: "collections.deque" = collections.deque()  # (f, cid, idx, items, tries)
+    # rec = (f, cid, idx, items, tries, nbytes)
+    queue: "collections.deque" = collections.deque()
     pending: "dict[Future, tuple]" = {}
+    in_bytes = 0                       # admitted-but-unharvested estimate
     done_buf: "dict[int, list]" = {}   # cid -> values (ordered mode)
     emit: "collections.deque" = collections.deque()   # values (unordered)
     waiter = Waiter()
@@ -180,16 +205,26 @@ def _pump(op: _MapOp, upstream: Iterator, *, max_in_flight: "int | None",
                     yield emit.popleft()
             # 2. refill from upstream — queued + in-flight + buffered
             #    results together never exceed mif, so memory stays
-            #    O(in-flight) no matter how long the source is
+            #    O(in-flight) no matter how long the source is. With
+            #    max_in_flight_bytes set, the *byte estimate* of admitted
+            #    chunks bounds refill too (size-skewed streams: one wave
+            #    of 100 MiB elements must not occupy mif slots of them) —
+            #    but at least one chunk is always admitted, so a single
+            #    over-budget element still makes progress.
             while (not src_done
-                   and len(queue) + len(pending) + len(done_buf) < mif):
+                   and len(queue) + len(pending) + len(done_buf) < mif
+                   and (mbytes is None or in_bytes <= 0
+                        or in_bytes < mbytes)):
                 batch = next(chunk_iter, None)
                 if batch is None:
                     src_done = True
                     break
                 idx, items = batch
+                nbytes = sum(_est_nbytes(x) for x in items) \
+                    if mbytes is not None else 0
+                in_bytes += nbytes
                 queue.append((make(cid_seq, idx, items, 0),
-                              cid_seq, idx, items, 0))
+                              cid_seq, idx, items, 0, nbytes))
                 cid_seq += 1
             # 3. admission-controlled dispatch: exactly when capacity
             #    exists; one blocking submit only when nothing is in
@@ -209,6 +244,8 @@ def _pump(op: _MapOp, upstream: Iterator, *, max_in_flight: "int | None",
                 stats["dispatched"] = stats.get("dispatched", 0) + 1
                 stats["peak_in_flight"] = max(
                     stats.get("peak_in_flight", 0), len(pending))
+                stats["peak_in_flight_bytes"] = max(
+                    stats.get("peak_in_flight_bytes", 0), in_bytes)
             if not pending:
                 if src_done and not queue and not done_buf and not emit:
                     return
@@ -220,16 +257,19 @@ def _pump(op: _MapOp, upstream: Iterator, *, max_in_flight: "int | None",
             # 5. harvest in completion order (relays stdout/conditions,
             #    like future_map); FutureError -> bounded re-dispatch
             for f in got:
-                _, cid, idx, items, tries = pending.pop(f)
+                _, cid, idx, items, tries, nbytes = pending.pop(f)
                 try:
                     vals = f.value()
                 except FutureError:
                     if tries >= op.retries:
                         raise
+                    # a retried chunk stays admitted: its bytes are still
+                    # resident until it finally harvests
                     queue.appendleft((make(cid, idx, items, tries + 1),
-                                      cid, idx, items, tries + 1))
+                                      cid, idx, items, tries + 1, nbytes))
                     stats["retried"] = stats.get("retried", 0) + 1
                     continue
+                in_bytes -= nbytes
                 if ordered:
                     done_buf[cid] = vals
                 else:
@@ -254,10 +294,12 @@ class Stream:
 
     def __init__(self, source: Iterable, *,
                  max_in_flight: "int | None" = None,
+                 max_in_flight_bytes: "int | None" = None,
                  label: "str | None" = None):
         self._source = source
         self._ops: tuple = ()
         self._max_in_flight = max_in_flight
+        self._max_in_flight_bytes = max_in_flight_bytes
         self._label = label or "stream"
         self._map_count = 0
         #: populated by the last terminal run on *this* object
@@ -268,6 +310,7 @@ class Stream:
         s._source = self._source
         s._ops = self._ops + (op,)
         s._max_in_flight = self._max_in_flight
+        s._max_in_flight_bytes = self._max_in_flight_bytes
         s._label = self._label
         s._map_count = self._map_count + (1 if is_map else 0)
         s.stats = self.stats             # shared along the chain: the stats
@@ -344,7 +387,9 @@ class Stream:
     def _run(self, ordered: bool) -> Iterator:
         self.stats.clear()
         self.stats.update({"dispatched": 0, "retried": 0,
-                           "peak_in_flight": 0, "max_in_flight": None})
+                           "peak_in_flight": 0, "max_in_flight": None,
+                           "peak_in_flight_bytes": 0,
+                           "max_in_flight_bytes": None})
         it: Iterator = iter(self._source)
         ops = self._fuse(self._ops)
         maps = [i for i, o in enumerate(ops) if isinstance(o, _MapOp)]
@@ -354,6 +399,7 @@ class Stream:
                 # intermediate stages stay ordered so downstream element
                 # numbering (RNG) and filters are deterministic
                 it = _pump(op, it, max_in_flight=self._max_in_flight,
+                           max_in_flight_bytes=self._max_in_flight_bytes,
                            ordered=ordered or i != last_map,
                            stats=self.stats)
             elif op[0] == "filter":
@@ -393,15 +439,22 @@ class Stream:
 
 
 def stream(xs: Iterable, *, max_in_flight: "int | None" = None,
+           max_in_flight_bytes: "int | None" = None,
            label: "str | None" = None) -> Stream:
     """Open a streaming pipeline over any iterable (lists, generators —
     including unbounded ones; the source is never materialized).
 
     ``max_in_flight`` bounds outstanding futures per ``.map`` stage
     (default ``2 * backend.workers``: one wave computing, one wave of
-    results/refills in the pipe).
+    results/refills in the pipe). ``max_in_flight_bytes`` additionally
+    bounds the *estimated payload bytes* of admitted-but-unharvested
+    chunks — the right knob for size-skewed streams, where an element
+    count bounds nothing (ten 100 MiB arrays vs ten floats). At least one
+    chunk is always in flight, so a single over-budget element still
+    makes progress.
     """
-    return Stream(xs, max_in_flight=max_in_flight, label=label)
+    return Stream(xs, max_in_flight=max_in_flight,
+                  max_in_flight_bytes=max_in_flight_bytes, label=label)
 
 
 __all__ = ["Stream", "stream"]

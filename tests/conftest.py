@@ -24,6 +24,10 @@ def pytest_configure(config):
         "markers",
         "dataflow: worker-to-worker dataflow tests (locality-scheduled "
         "chains, peer blob fetch; select with '-m dataflow')")
+    config.addinivalue_line(
+        "markers",
+        "state: shared-state subsystem tests (versioned KV, CAS/watch; "
+        "select with '-m state')")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -40,6 +44,8 @@ def _reset_plan():
     """Every test starts and ends on the default sequential plan."""
     rc.plan("sequential")
     rc.set_session_seed(0)
+    rc.state.reset()               # fresh shared-state service per test
     yield
     rc.shutdown()
     rc.plan("sequential")
+    rc.state.reset()

@@ -274,6 +274,136 @@ def test_stream_fused_seeded_maps_rng_parity(backend):
     assert got == run()                  # bit-identical floats
 
 
+# --------------------------------------------------------------------------
+# shared-state subsystem (state.py): the same task-body code must see one
+# linearizable driver-hosted service on every row — in-process singleton on
+# sequential/threads/jax_async, pipe RPC on processes, socket RPC on the
+# cluster rows. Nothing here is row-conditional.
+# --------------------------------------------------------------------------
+
+@pytest.mark.state
+def test_state_semantics_tuple(backend):
+    """put/get/version/cas/delete semantics observed from inside a task
+    body, as one comparable tuple (versions survive delete; cas 'create'
+    expects the post-delete counter)."""
+    def body():
+        from repro.core import state
+        out = []
+        out.append(state.put("sem.k", "a"))            # version 1
+        out.append(state.put("sem.k", "b"))            # version 2
+        out.append(state.get("sem.k"))
+        out.append(state.version("sem.k"))
+        ok, ver, _ = state.cas("sem.k", 2, "c")        # fresh -> commits v3
+        out.append((ok, ver))
+        ok2, ver2, cur2 = state.cas("sem.k", 2, "zz")  # stale -> refused
+        out.append((ok2, ver2, cur2))
+        out.append(state.delete("sem.k"))
+        out.append(state.get("sem.k", None))           # gone, default
+        out.append(state.version("sem.k"))             # counter survives
+        ok3, ver3, _ = state.cas("sem.k", 3, "d")      # re-create at v4
+        out.append((ok3, ver3))
+        return out
+
+    assert value(future(body)) == [
+        1, 2, "b", 2, (True, 3), (False, 3, "c"), True, None, 3, (True, 4)]
+    # the driver's direct (singleton) view agrees with the task's RPC view
+    assert rc.state.read("sem.k") == ("d", 4)
+
+
+@pytest.mark.state
+def test_state_concurrent_update_is_exact_fold(backend):
+    """state.update from N concurrent tasks == the sequential fold: no
+    lost updates, no torn versions, on every backend."""
+    n_tasks, per_task = 8, 4
+
+    def body():
+        from repro.core import state
+        for _ in range(per_task):
+            state.update("fold.acc", lambda v: (v or 0) + 1)
+        return True
+
+    fs = [future(body) for _ in range(n_tasks)]
+    assert value(gather(fs)) == [True] * n_tasks
+    assert rc.state.get("fold.acc") == n_tasks * per_task
+    assert rc.state.version("fold.acc") == n_tasks * per_task
+
+
+@pytest.mark.state
+def test_state_cas_exactly_one_winner(backend):
+    """Racing cas(expected_version=0) from every task: exactly one commit
+    wins; the losers observe the winner's version and value."""
+    def body(i):
+        from repro.core import state
+        ok, ver, cur = state.cas("race.k", 0, i)
+        return (ok, ver)
+
+    fs = [future(lambda i=i: body(i)) for i in range(6)]
+    got = value(gather(fs))
+    assert sum(1 for ok, _ in got if ok) == 1
+    assert all(ver == 1 for _, ver in got)     # losers saw the winner
+    assert rc.state.version("race.k") == 1
+
+
+@pytest.mark.state
+def test_state_wait_blocks_until_put(backend):
+    """wait(key, min_version) parks a task until another task publishes.
+    The putter future is created first so fully-eager rows (sequential,
+    jax_async) publish before the waiter runs; on pool rows both are in
+    flight and the waiter genuinely blocks."""
+    def putter():
+        import time
+        from repro.core import state
+        time.sleep(0.05)
+        state.put("sig.k", "go")
+        return True
+
+    def waiter():
+        from repro.core import state
+        val, ver = state.wait("sig.k", 1, timeout=30)
+        return (val, ver >= 1)
+
+    p = future(putter)
+    w = future(waiter)
+    assert value(w) == ("go", True)
+    assert value(p) is True
+
+
+@pytest.mark.state
+def test_state_wait_timeout_relayed(backend):
+    from repro.core.state import StateTimeout
+
+    def body():
+        from repro.core import state
+        try:
+            state.wait("never.k", 1, timeout=0.1)
+        except Exception as exc:                        # noqa: BLE001
+            return type(exc).__name__
+        return "no-error"
+
+    assert value(future(body)) == StateTimeout.__name__
+
+
+@pytest.mark.state
+def test_state_large_value_rides_the_blob_path(backend):
+    """A value above PAYLOAD_REF_THRESHOLD crosses as a content-addressed
+    blob (driver->worker and worker->driver) and round-trips bit-exact."""
+    import numpy as np
+    arr = np.arange(1 << 15, dtype=np.float64)          # 256 KiB
+    rc.state.put("big.down", arr)
+
+    def body():
+        import numpy as np
+        from repro.core import state
+        a = state.get("big.down")
+        state.put("big.up", a * 2.0)
+        return float(a.sum()), a.shape, a.dtype.str
+
+    got = value(future(body))
+    assert got == (float(arr.sum()), arr.shape, arr.dtype.str)
+    back = rc.state.get("big.up")
+    assert np.array_equal(back, arr * 2.0)
+
+
 @pytest.mark.parametrize("name", ["processes", "cluster"])
 def test_worker_isolation(name):
     """Process-family backends really do run elsewhere — including the TCP

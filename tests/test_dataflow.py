@@ -417,3 +417,57 @@ def test_pulled_result_survives_holder_death():
     g = f.then(lambda a: float(a.sum()))
     assert g.value() == float(_big(6.5).sum())
     assert np.array_equal(v1, _big(6.5))
+
+
+# --------------------------------------------------------------------------
+# Driver-side GC of worker-resident blobs
+# --------------------------------------------------------------------------
+
+def test_remote_value_gc_releases_worker_blobs():
+    """Dropping the last driver-side reference to a RemoteValue evicts the
+    blob from its holders — worker memory is reclaimed without shutdown.
+    The release is refcounted finalizers feeding the select loop, which
+    sends ``("evict", digest)`` to every live holder."""
+    import gc
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    f = future(_big, 41.25)               # digest unique to this test
+    rv = _remote_value_of(f)
+    digest = rv.digest
+    assert backend.locations(digest)
+    del f, rv
+    gc.collect()
+    _wait(lambda: not backend.locations(digest), what="GC eviction")
+
+
+def test_gc_spares_shared_digest_until_last_reference_dies():
+    """Two futures producing identical content share one digest; dropping
+    one must NOT evict — the refcount holds until both are gone."""
+    import gc
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    f1 = future(_big, 42.75)
+    f2 = future(_big, 42.75)              # same content, same digest
+    rv1, rv2 = _remote_value_of(f1), _remote_value_of(f2)
+    assert rv1.digest == rv2.digest
+    digest = rv1.digest
+    del f1, rv1
+    gc.collect()
+    time.sleep(0.3)                       # give a wrong eviction time to land
+    assert backend.locations(digest)      # second reference still pins it
+    assert f2.then(lambda a: float(a.sum())).value() == float(_big(42.75).sum())
+    del f2, rv2
+    gc.collect()
+    _wait(lambda: not backend.locations(digest), what="GC eviction")
+
+
+def test_chain_on_gc_candidate_still_resolves():
+    """An in-flight continuation anchors its parent's RemoteValue: GC of
+    the user's handle mid-chain must not evict bytes the chain needs."""
+    import gc
+    rc.plan("cluster", workers=2)
+    f = future(_big, 43.5)
+    g = f.then(lambda a: float(a.sum()))  # chain holds the anchor
+    del f
+    gc.collect()
+    assert g.value() == float(_big(43.5).sum())

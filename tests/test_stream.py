@@ -281,6 +281,11 @@ def test_mid_stream_worker_kill_relaunch_and_retry(tmp_path):
     assert s.stats["retried"] >= 1
     watcher.join(timeout=10)
     assert watcher.killed is not None
+    # SIGKILL delivery is asynchronous: give the doomed process a moment
+    # to actually die and be reaped before asserting on its exit status
+    deadline = time.monotonic() + 10
+    while watcher.killed.poll() is None and time.monotonic() < deadline:
+        time.sleep(0.02)
     assert watcher.killed.poll() is not None
     rc.shutdown()
 
@@ -318,4 +323,49 @@ def test_future_map_is_stream_sugar_same_results():
         == [v - 1 for v in xs]
     assert future_map(lambda v: v - 1, xs) == [v - 1 for v in xs]
     assert future_map(lambda v: v, []) == []
+    rc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# Byte-denominated backpressure: stream(..., max_in_flight_bytes=)
+# --------------------------------------------------------------------------
+
+def test_max_in_flight_bytes_bounds_admission():
+    """Peak in-flight estimated bytes never exceeds the budget, and the
+    stats expose both the budget and the observed peak."""
+    import numpy as np
+    rc.plan("threads", workers=4)
+    arrs = [np.zeros(1 << 18) for _ in range(12)]        # 2 MiB each
+    budget = 5 * (1 << 21)                               # 10 MiB
+    s = stream(arrs, max_in_flight_bytes=budget)
+    assert s.map(lambda a: float(a.sum())).collect(ordered=True) \
+        == [0.0] * 12
+    assert 0 < s.stats["peak_in_flight_bytes"] <= budget
+    assert s.stats["max_in_flight_bytes"] == budget
+    rc.shutdown()
+
+
+def test_max_in_flight_bytes_progress_guarantee():
+    """A chunk larger than the whole budget is still admitted — alone.
+    Byte backpressure throttles to one-at-a-time, never wedges."""
+    import numpy as np
+    rc.plan("threads", workers=2)
+    arrs = [np.zeros(1 << 18) for _ in range(3)]
+    s = stream(arrs, max_in_flight_bytes=1024)           # tiny budget
+    assert s.map(lambda a: a.shape[0]).collect(ordered=True) \
+        == [1 << 18] * 3
+    assert s.stats["peak_in_flight"] == 1
+    rc.shutdown()
+
+
+def test_max_in_flight_bytes_composes_with_count_bound():
+    """Both bounds hold at once; small items hit the count bound, the
+    byte peak stays under budget."""
+    rc.plan("threads", workers=4)
+    s = stream(iter(range(40)), max_in_flight=3,
+               max_in_flight_bytes=1 << 20)
+    assert sorted(s.map(lambda v: v + 1, chunk=4).collect()) \
+        == [v + 1 for v in range(40)]
+    assert s.stats["peak_in_flight"] <= 3
+    assert s.stats["peak_in_flight_bytes"] <= 1 << 20
     rc.shutdown()
