@@ -642,6 +642,79 @@ def bench_state_ops(quick: bool = False) -> None:
     rc.plan("sequential")
 
 
+def bench_lineage_recovery(quick: bool = False) -> None:
+    """Robustness: cost of losing the sole holder of a large worker-
+    resident intermediate mid-chain, three ways over a mib-MiB result:
+
+    * ``baseline`` — no failure; the chain is locality-scheduled onto the
+      live holder.
+    * ``recompute`` — the holder is SIGKILLed after the result is held;
+      the dependent chain triggers a lineage re-execution of the
+      producing task on a survivor (digest-identical replay).
+    * ``replica`` — same death under ``min_replicas=2``: the surviving
+      proactive replica serves the chain, zero re-executions.
+
+    Reports chain-submit-to-value latency and driver wire bytes during
+    recovery (informational in the regression guard — recovery latency
+    includes a task re-execution and is machine-shaped)."""
+    import signal
+    from repro.core.backends import transport
+
+    mib = 1 if quick else 8
+    n = mib << 17                        # mib MiB of float64
+    knobs = dict(heartbeat_interval=0.1, heartbeat_timeout=3.0,
+                 relaunch_backoff=0.05, relaunch_backoff_cap=0.2)
+
+    def kill_one_holder(backend, digest):
+        wids = backend.locations(digest)
+        with backend._pool_cv:
+            wid, pid = next((w.wid, w.meta.get("pid"))
+                            for w in backend._all if w.wid in wids)
+        os.kill(pid, signal.SIGKILL)
+        deadline = time.perf_counter() + 30.0
+        while wid in backend.locations(digest) \
+                and time.perf_counter() < deadline:
+            time.sleep(0.005)
+
+    rows: dict = {}
+    for tag, min_replicas, kill in (("baseline", 1, False),
+                                    ("recompute", 1, True),
+                                    ("replica", 2, True)):
+        rc.plan("cluster", hosts=2, min_replicas=min_replicas, **knobs)
+        backend = rc.active_backend()
+        rc.value(rc.future(lambda: 1))   # warm connections + shipped code
+        bias = float(len(tag))           # distinct digest per scenario
+        f = rc.future(lambda _n=n, _b=bias:
+                      np.arange(_n, dtype=np.float64) + _b)
+        digest = f._backend.collect(f._handle).value.digest
+        if min_replicas > 1:             # wait for the proactive replica
+            deadline = time.perf_counter() + 30.0
+            while len(backend.locations(digest)) < 2 \
+                    and time.perf_counter() < deadline:
+                time.sleep(0.005)
+        if kill:
+            kill_one_holder(backend, digest)
+        transport.reset_wire_stats()
+        t0 = time.perf_counter()
+        g = f.then(lambda a: float(a.sum()))
+        expected = float((np.arange(n, dtype=np.float64) + bias).sum())
+        assert g.value() == expected
+        us = (time.perf_counter() - t0) * 1e6
+        stats = transport.wire_stats()
+        nbytes = stats["bytes_sent"] + stats["bytes_recv"]
+        rec = backend.recovery_stats()["reconstructions"]
+        rows[f"{tag}_us"] = us
+        rows[f"{tag}_driver_bytes"] = nbytes
+        rows[f"{tag}_reconstructions"] = rec
+        _row(f"lineage/{tag}", us,
+             f"{nbytes:,.0f}B through driver, reconstructions={rec}, "
+             f"min_replicas={min_replicas}, {mib}MiB intermediate")
+        rc.shutdown()
+    rc.plan("sequential")
+    rows["intermediate_mib"] = mib
+    _CLUSTER_JSON["bench_lineage_recovery"] = rows
+
+
 def _fmt_kib(v: float) -> str:
     return f"{v:,.0f}KiB"
 
@@ -651,9 +724,20 @@ def _write_cluster_artifact(quick: bool) -> None:
         return
     path = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_cluster.json")
-    _CLUSTER_JSON["meta"] = {"quick": quick}
+    # merge into the existing artifact rather than overwrite: a filtered
+    # run (--only bench_x) refreshes just its own bench key and leaves
+    # the rest of the perf trajectory intact
+    doc: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+        except (OSError, ValueError):
+            doc = {}
+    doc.update(_CLUSTER_JSON)
+    doc["meta"] = {"quick": quick}
     with open(path, "w") as fh:
-        json.dump(_CLUSTER_JSON, fh, indent=2, sort_keys=True)
+        json.dump(doc, fh, indent=2, sort_keys=True)
         fh.write("\n")
     print(f"# wrote {os.path.abspath(path)}", flush=True)
 
@@ -734,6 +818,7 @@ BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_callback_latency, bench_globals_cache,
            bench_dataflow_chain, bench_worker_bootstrap,
            bench_stream_throughput, bench_state_ops,
+           bench_lineage_recovery,
            bench_compression, bench_kernels, bench_roofline]
 
 #: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
@@ -741,7 +826,8 @@ BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
 CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
                    bench_callback_latency, bench_globals_cache,
                    bench_dataflow_chain, bench_worker_bootstrap,
-                   bench_stream_throughput, bench_state_ops]
+                   bench_stream_throughput, bench_state_ops,
+                   bench_lineage_recovery]
 
 
 def main() -> None:
@@ -758,10 +844,9 @@ def main() -> None:
         if args.only and args.only not in bench.__name__:
             continue
         bench(quick=args.quick)
-    if not args.only:
-        # only unfiltered runs update the tracked perf-trajectory artifact —
-        # an --only run would silently clobber it with partial data
-        _write_cluster_artifact(args.quick)
+    # merge-write: an --only run updates just its own bench key in the
+    # tracked artifact instead of clobbering the rest of the trajectory
+    _write_cluster_artifact(args.quick)
 
 
 if __name__ == "__main__":

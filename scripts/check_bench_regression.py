@@ -63,6 +63,20 @@ INFO_METRICS = [
      ("bench_state_ops", "cas_retry_rate"), "x"),
     ("state_us_large_get",
      ("bench_state_ops", "us_large_get")),
+    # lineage recovery (robustness PR): informational — recovery latency
+    # includes a full task re-execution (recompute) or a death-verdict
+    # wait, both machine-shaped; bytes compare replica-promotion vs
+    # recompute vs no-failure baseline
+    ("lineage_us/baseline",
+     ("bench_lineage_recovery", "baseline_us")),
+    ("lineage_us/recompute",
+     ("bench_lineage_recovery", "recompute_us")),
+    ("lineage_us/replica",
+     ("bench_lineage_recovery", "replica_us")),
+    ("lineage_bytes/recompute",
+     ("bench_lineage_recovery", "recompute_driver_bytes"), "B"),
+    ("lineage_bytes/replica",
+     ("bench_lineage_recovery", "replica_driver_bytes"), "B"),
 ]
 
 

@@ -32,8 +32,9 @@ from .conditions import (CapturedRun, ImmediateCondition, message,  # noqa: F401
                          signal_progress)
 from .containers import ListEnv                              # noqa: F401
 from .errors import (ChannelError, FutureCancelledError, FutureError,  # noqa: F401
-                     GlobalsError, NonExportableObjectError,
-                     RNGMisuseWarning, WorkerDiedError)
+                     GlobalsError, LineageExhaustedError,
+                     NonExportableObjectError, RNGMisuseWarning,
+                     WorkerDiedError)
 from .future import (Future, Waiter, as_completed, first,  # noqa: F401
                      first_successful, future, gather, merge, resolve,
                      resolved, value, wait_any)
@@ -53,6 +54,7 @@ __all__ = [
     "future_map", "future_lapply", "future_either", "retry", "retry_future",
     "future_map_chunked_lazy", "stream", "Stream", "state",
     "FutureError", "WorkerDiedError", "ChannelError", "FutureCancelledError",
+    "LineageExhaustedError",
     "GlobalsError", "NonExportableObjectError", "RNGMisuseWarning",
     "signal_progress", "message", "ListEnv", "set_session_seed",
     "CapturedRun", "ImmediateCondition",

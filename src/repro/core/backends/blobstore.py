@@ -47,6 +47,10 @@ manifest. Driver-side those refs surface as:
   result. ``Future.value()`` calls :meth:`RemoteValue.fetch` to pull the
   blob on demand; continuation chains never do — they ship the ref back
   out (see ``future._remote_chain``) so the bytes stay on the workers.
+  A fetch that finds no live copy (holder died, evicted everywhere) does
+  not fail: the cluster driver re-executes the digest's recorded lineage
+  — the producing task replays RNG-exactly, so the rebuilt bytes are
+  digest-identical (see ``cluster.py`` §lineage).
 * :class:`RemoteSource` — a :class:`PayloadSource` stand-in whose
   ``encode()`` *pulls* the blob from a live holder instead of re-encoding a
   local value. It slots into the existing put/need/nak machinery unchanged,

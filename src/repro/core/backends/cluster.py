@@ -52,13 +52,33 @@ evicted) degrades to the ordinary ``("need", digest)`` driver fallback, for
 which the driver itself pulls the blob from a live holder over the same
 fetch protocol (results are content-addressed, so every copy is
 self-validating). ``Future.value()`` triggers an explicit driver pull via
-:meth:`ClusterBackend.pull_value`. Holder death prunes the location map:
-digests whose last holder died are remembered as *lost* and any dependent
-dispatch / pull fails fast with a clean :class:`WorkerDiedError` instead of
-hanging. ``remote_results=False`` disables the whole mechanism (results
-always travel inline — the pre-dataflow wire shape, kept for parity
-testing). The location map lives on the backend object, so warm-pool
-re-attach (``planning._WARM_POOL``) preserves it across ``plan()`` swaps.
+:meth:`ClusterBackend.pull_value`. ``remote_results=False`` disables the
+whole mechanism (results always travel inline — the pre-dataflow wire
+shape, kept for parity testing). The location map lives on the backend
+object, so warm-pool re-attach (``planning._WARM_POOL``) preserves it
+across ``plan()`` swaps.
+
+Lineage-based reconstruction: every held result's *producing task* is
+remembered in a bounded driver-side lineage registry (the ``TaskSpec``
+whose shipped blob bakes in the content-addressed arg/global refs and the
+RNG seed material, plus the digests of its remote parents). When a holder
+dies, a peer fetch naks through every holder, or an eviction race empties
+the location map, the driver transparently **re-executes the producing
+task** — recursing into missing parents up to ``lineage_max_depth``, at
+most ``lineage_max_attempts`` re-executions per digest — instead of
+failing the dependent future. Re-execution replays the exact same shipped
+blob (the per-future RNG stream key was frozen into it at creation), so
+the rebuilt bytes are digest-identical and every cached copy stays valid.
+Only when no lineage is recorded (the digest's ``RemoteValue`` was GC'd,
+or the bytes never came from a recorded task) or a cap is exceeded does
+the dependent work fail, with a clean :class:`LineageExhaustedError`.
+``min_replicas=N`` layers *proactive replication* on the same machinery:
+newly held results are pushed to additional workers off the select loop
+(``replicate`` frames; the target peer-fetches and confirms with
+``stored``), and any task-path peer fetch promotes the fetcher to a
+registered replica — so single-holder loss usually costs one cheap copy,
+not a recompute. ``recovery_stats()`` reports reconstructions /
+replications / promotions.
 
 Two lanes ride the same control socket besides tasks and blobs: the
 *shared-state* lane (``state``/``state_rep`` frames — task bodies calling
@@ -101,7 +121,8 @@ import weakref
 from typing import Any
 
 from ..conditions import CapturedRun, ImmediateCondition
-from ..errors import ChannelError, FutureCancelledError, WorkerDiedError
+from ..errors import (ChannelError, FutureCancelledError, FutureError,
+                      LineageExhaustedError, WorkerDiedError)
 from .. import planning as plan_mod
 from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
                    register_backend)
@@ -127,6 +148,21 @@ class _Handle(CompletionHandle):
         # digest -> PayloadSource, pinned while in flight so ("need", digest)
         # backfills can always be served
         self.sources: dict = task.payload_sources
+
+
+@dataclasses.dataclass
+class _Lineage:
+    """What it takes to rebuild one held digest: the producing
+    :class:`TaskSpec` — its shipped blob froze the RNG stream key and the
+    content-addressed refs of every input at creation, so re-dispatching
+    it reproduces digest-identical bytes — plus the digests of its remote
+    parents (recursed into first when they are gone too). The TaskSpec is
+    held *strongly*: its pinned ``payload_sources`` (including RemoteSource
+    anchors up the ancestry) must outlive the Future that produced it."""
+
+    task: TaskSpec
+    parents: tuple
+    attempts: int = 0
 
 
 def _queue_release(backend_ref, digest: bytes) -> None:
@@ -206,7 +242,11 @@ class ClusterBackend(EventWaitMixin, Backend):
                  relaunch_backoff_cap: float = 5.0,
                  relaunch_reset_after: float = 30.0,
                  blob_store_bytes: "int | None" = None,
-                 remote_results: bool = True):
+                 remote_results: bool = True,
+                 min_replicas: int = 1,
+                 lineage_max_depth: int = 8,
+                 lineage_max_attempts: int = 3,
+                 lineage_keep: int = 512):
         self._blob_store_bytes = blob_store_bytes
         #: keep large results worker-resident (RemoteValue dataflow); False
         #: restores the pre-dataflow wire shape: every result travels inline
@@ -262,6 +302,22 @@ class ClusterBackend(EventWaitMixin, Backend):
         #: dispatches/pulls fail fast instead of hanging (bounded memory)
         self._lost: "collections.OrderedDict[bytes, str]" = \
             collections.OrderedDict()
+        # -- lineage + replication (guarded by _lineage_lock; lock order:
+        # _lineage_lock may be held when taking _pool_cv, never reverse) --
+        self._min_replicas = max(int(min_replicas), 1)
+        self._lineage_max_depth = int(lineage_max_depth)
+        self._lineage_max_attempts = int(lineage_max_attempts)
+        self._lineage_keep = int(lineage_keep)
+        self._lineage_lock = threading.Lock()
+        #: digest -> _Lineage (producing task, parents, attempt count);
+        #: bounded LRU — week-long drivers must not grow it without limit
+        self._lineage: "collections.OrderedDict[bytes, _Lineage]" = \
+            collections.OrderedDict()
+        #: digest -> Event for an in-flight reconstruction: concurrent
+        #: pullers of the same lost digest wait instead of re-executing
+        self._rebuilds: dict[bytes, threading.Event] = {}
+        self._recovery = {"reconstructions": 0, "replications": 0,
+                          "replica_promotions": 0}
         # -- driver-side fetch waits (guarded by _fetch_lock, NOT _pool_cv:
         # offers land on the select loop, which must never need _pool_cv
         # held by a blocked puller) --
@@ -666,6 +722,13 @@ class ClusterBackend(EventWaitMixin, Backend):
                             for digest, _nbytes in held:
                                 w.known.add(digest)
                                 self._note_location_locked(digest, w.wid)
+                        # cheap dict inserts only — safe on the select loop
+                        self._record_lineage(h.task, held)
+                        if self._min_replicas > 1:
+                            ds = [d for d, _ in held]
+                            threading.Thread(
+                                target=self._replicate_held, args=(ds,),
+                                name="blob-replicate", daemon=True).start()
                     if h.done.is_set():
                         # soft-cancelled future (external worker): discard
                         # the late result, worker rejoins the pool healthy
@@ -693,6 +756,17 @@ class ClusterBackend(EventWaitMixin, Backend):
                 # location and fail the parked pullers over to other holders
                 self._drop_location(frame[1], w.wid)
                 self._resolve_fetch(w.wid, frame[1], None)
+            elif tag == "stored":
+                # replication ack / peer-fetch promotion: the worker now
+                # holds a verified (content-addressed) copy of the digest —
+                # register it as a replica so holder loss has a survivor
+                digest, how = frame[1], frame[3]
+                with self._pool_cv:
+                    w.known.add(digest)
+                    self._note_location_locked(digest, w.wid)
+                with self._lineage_lock:
+                    self._recovery["replications" if how == "replicate"
+                                   else "replica_promotions"] += 1
 
     def _match_pending_locked(self, meta: dict) -> "WorkerProc | None":
         """Pair a hello with the WorkerProc that bootstrapped it: by the
@@ -807,7 +881,10 @@ class ClusterBackend(EventWaitMixin, Backend):
                 self._all.remove(w)
             # prune the location map: digests whose *last* holder this was
             # (and that the driver never pulled) are now lost — remember
-            # why, so dependent work fails fast with the holder's name
+            # why (lineage reconstruction quotes it), and digests that
+            # kept a surviving replica but dropped below min_replicas are
+            # queued for a replication top-up
+            refill = []
             for digest, wids in list(self._locations.items()):
                 if w.wid in wids:
                     wids.discard(w.wid)
@@ -817,12 +894,17 @@ class ClusterBackend(EventWaitMixin, Backend):
                             self._lost[digest] = w.describe()
                             while len(self._lost) > 512:
                                 self._lost.popitem(last=False)
+                    elif len(wids) < self._min_replicas:
+                        refill.append(digest)
             if self._open and not w.retired:
                 if w.proc is not None and self._launcher is not None:
                     relaunch = True                  # self-heal, same capacity
                 elif w.ready:
                     self._capacity -= 1              # external: shrink
             self._pool_cv.notify_all()
+        if refill:
+            threading.Thread(target=self._replicate_held, args=(refill,),
+                             name="blob-replicate", daemon=True).start()
         if relaunch:
             self._schedule_relaunch(w)
         if h is not None and not h.done.is_set():
@@ -1049,6 +1131,11 @@ class ClusterBackend(EventWaitMixin, Backend):
             with self._release_lock:
                 if self._rv_refs.get(digest, 0) > 0:
                     continue                 # re-produced since queued
+            with self._lineage_lock:
+                # nothing can reference the bytes anymore: forget how to
+                # rebuild them too (the lineage record pins the producing
+                # TaskSpec and, through it, ancestor RemoteSource anchors)
+                self._lineage.pop(digest, None)
             with self._pool_cv:
                 wids = self._locations.pop(digest, set())
                 # nothing can reference it anymore: the lost-blob memory
@@ -1061,6 +1148,178 @@ class ClusterBackend(EventWaitMixin, Backend):
                     send_frame(w.sock, ("evict", digest), w.send_lock)
                 except (OSError, AttributeError):
                     pass
+
+    # -- lineage: rebuild lost worker-resident results ----------------------
+    #
+    # ``_reconstruct`` (like the pulls below) runs on *caller* threads only
+    # — it blocks on worker checkout and task completion, both of which the
+    # select loop must keep pumping. Continuation steps are dispatched to
+    # the continuation pool (never inline on the select loop), so every
+    # path that can reach it — submit() preflight, pull_blob, a need-
+    # backfill thread's RemoteSource.encode — is safe.
+
+    def _record_lineage(self, task: TaskSpec, held) -> None:
+        """Remember how to re-produce each newly held digest. The shipped
+        task blob replays byte-identically (per-future RNG stream key and
+        content-addressed input refs were frozen into it at creation), so
+        a lost copy is one re-dispatch away. Re-holding a digest resets
+        its attempt budget: a fresh loss gets a fresh budget."""
+        parents = tuple(d for d, src in task.payload_sources.items()
+                        if getattr(src, "remote", False))
+        with self._lineage_lock:
+            for digest, _nbytes in held:
+                self._lineage[digest] = _Lineage(task, parents)
+                self._lineage.move_to_end(digest)
+            while len(self._lineage) > self._lineage_keep:
+                self._lineage.popitem(last=False)
+
+    def recovery_stats(self) -> dict:
+        """Counters for the recovery machinery (tests/diagnostics):
+        ``reconstructions`` (lineage re-executions), ``replications``
+        (proactive pushes under ``min_replicas``), ``replica_promotions``
+        (task-path peer fetches registered as new holders)."""
+        with self._lineage_lock:
+            return dict(self._recovery)
+
+    def _ensure_remote_inputs(self, task: TaskSpec) -> None:
+        """Pre-dispatch lineage gate for ``submit()``: every remote input
+        digest must have a live copy somewhere (holder or driver store)
+        *before* a worker is checked out — reconstructing after checkout
+        could self-deadlock (the rebuild needs an idle worker, and the
+        caller would be sitting on the last one). ``try_submit`` skips
+        this on purpose (it must never block); its dispatches recover via
+        the need-backfill path instead."""
+        for digest, src in task.payload_sources.items():
+            if not getattr(src, "remote", False):
+                continue
+            if digest in DRIVER_STORE \
+                    or self._live_holder(digest) is not None:
+                continue
+            self._reconstruct(digest, task.label or "")
+
+    def _reconstruct(self, digest: bytes, label: str = "",
+                     _depth: int = 0) -> None:
+        """Re-produce a lost worker-resident blob by re-executing its
+        recorded lineage, recursing into missing parents first. Returns
+        once a live copy exists (a holder in the location map, or the
+        bytes in DRIVER_STORE); raises :class:`LineageExhaustedError`
+        when no producing task is recorded or a cap is exceeded."""
+        tag = digest.hex()[:12] + (f" ({label})" if label else "")
+        if _depth > self._lineage_max_depth:
+            raise LineageExhaustedError(
+                f"rebuilding remote payload {tag} exceeded the lineage "
+                f"depth cap ({self._lineage_max_depth}) — ancestry chain "
+                f"too deep to re-execute", digest=digest,
+                future_label=label or None)
+        while True:
+            if digest in DRIVER_STORE \
+                    or self._live_holder(digest) is not None:
+                return
+            with self._pool_cv:
+                if not self._open:
+                    raise ChannelError(
+                        f"cluster backend shut down before remote payload "
+                        f"{tag} could be rebuilt")
+            with self._lineage_lock:
+                ev = self._rebuilds.get(digest)
+                if ev is None:
+                    rec = self._lineage.get(digest)
+                    if rec is None:
+                        with self._pool_cv:
+                            where = self._lost.get(digest)
+                        cause = (f"its last holder {where} died" if where
+                                 else "every copy was evicted")
+                        raise LineageExhaustedError(
+                            f"remote payload {tag} was lost ({cause}) and "
+                            f"no producing task is recorded for it "
+                            f"(lineage evicted, or the bytes were not "
+                            f"task-produced)", digest=digest,
+                            future_label=label or None)
+                    if rec.attempts >= self._lineage_max_attempts:
+                        raise LineageExhaustedError(
+                            f"remote payload {tag} was lost and its "
+                            f"re-execution budget is exhausted "
+                            f"({rec.attempts}/{self._lineage_max_attempts}"
+                            f" attempts)", digest=digest,
+                            future_label=label or None)
+                    rec.attempts += 1
+                    self._recovery["reconstructions"] += 1
+                    ev = self._rebuilds[digest] = threading.Event()
+                else:
+                    rec = None
+            if rec is None:
+                # someone else is rebuilding this digest: wait them out,
+                # then loop — the copy check / attempt budget decides
+                ev.wait(self._fetch_timeout)
+                continue
+            try:
+                for parent in rec.parents:
+                    self._reconstruct(parent, label, _depth=_depth + 1)
+                worker = self._checkout_for_rebuild(tag)
+                h = self._dispatch(rec.task, worker)
+                h.done.wait()
+                # h.error (the worker died *again*) and evaluation errors
+                # are not raised here: the loop re-checks for a live copy
+                # and the attempt budget bounds the retries either way
+            finally:
+                with self._lineage_lock:
+                    self._rebuilds.pop(digest, None)
+                ev.set()
+
+    def _checkout_for_rebuild(self, tag: str) -> _SockWorker:
+        """Bounded checkout for a lineage re-execution: a plain
+        ``_checkout`` could wait forever when every worker is parked in
+        ``ensure_refs`` waiting for the very blob this rebuild would
+        produce (workers=1 with a try_submit dispatch), so give up after
+        the fetch timeout with a diagnosable error instead."""
+        deadline = time.monotonic() + self._fetch_timeout
+        with self._pool_cv:
+            while True:
+                w = self._pick_idle_locked(frozenset())
+                if w is not None:
+                    return w
+                if not self._open:
+                    raise ChannelError("cluster backend is shut down")
+                if self._capacity <= 0:
+                    raise ChannelError(
+                        "no live cluster workers (all died and none were "
+                        "respawnable)")
+                if time.monotonic() > deadline:
+                    raise LineageExhaustedError(
+                        f"no idle worker became available within "
+                        f"{self._fetch_timeout}s to re-execute the "
+                        f"producing task of remote payload {tag}")
+                self._pool_cv.wait(0.5)
+
+    # -- proactive replication (min_replicas) -------------------------------
+
+    def _replicate_held(self, digests) -> None:
+        """Push copies of ``digests`` to workers until each has
+        ``min_replicas`` registered holders. Runs on a side thread (never
+        the select loop): targets peer-fetch the bytes from a holder and
+        confirm with ``("stored", digest, nbytes, "replicate")``, which is
+        what actually registers the replica — this thread only sends the
+        small ``replicate`` control frames. Best-effort: no live peer
+        address or a busy pool just leaves the digest under-replicated
+        until the next result/death event retries."""
+        for digest in digests:
+            with self._pool_cv:
+                holders = self._locations.get(digest, set())
+                need = self._min_replicas - len(holders)
+                if need <= 0 or not holders:
+                    continue
+                targets = [w for w in self._all
+                           if w.ready and w.sock is not None
+                           and w.wid not in holders][:need]
+            for w in targets:
+                addrs, _lost = self._peer_addrs(digest, exclude=w.wid)
+                if not addrs:
+                    break                    # no peer server to fetch from
+                try:
+                    send_frame(w.sock, ("replicate", digest, addrs),
+                               w.send_lock)
+                except (OSError, AttributeError):
+                    continue
 
     # -- remote-result pulls (driver side of the fetch protocol) ------------
     #
@@ -1153,9 +1412,9 @@ class ClusterBackend(EventWaitMixin, Backend):
         """Materialize one remote result blob on the driver: driver store
         first, then each live holder over the fetch protocol (caching the
         copy in DRIVER_STORE — later pulls, backfills, and holder deaths
-        are then served locally). Raises WorkerDiedError when the bytes
-        died with their last holder, ChannelError when every holder
-        evicted them."""
+        are then served locally). A digest with no live copy anywhere is
+        rebuilt from its lineage before giving up; only
+        LineageExhaustedError (no lineage / caps hit) escapes."""
         blob = DRIVER_STORE.get(digest)
         if blob is not None:
             return blob
@@ -1168,15 +1427,14 @@ class ClusterBackend(EventWaitMixin, Backend):
                         f"{tag} was fetched")
             w = self._live_holder(digest)
             if w is None:
-                with self._pool_cv:
-                    where = self._lost.get(digest)
-                if where is not None:
-                    raise WorkerDiedError(
-                        f"remote payload {tag} was lost: its last holder "
-                        f"{where} died before the bytes were fetched")
-                raise ChannelError(
-                    f"remote payload {tag} is not held by any live worker "
-                    f"(evicted everywhere?)")
+                # lost holder or evicted everywhere: rebuild from lineage
+                # (raises LineageExhaustedError when it can't), then retry
+                # the fetch — the attempt budget guarantees termination
+                self._reconstruct(digest, label)
+                blob = DRIVER_STORE.get(digest)
+                if blob is not None:
+                    return blob
+                continue
             blob = self._fetch_blob_from(w, digest)
             if blob is not None:
                 DRIVER_STORE.put(digest, blob)
@@ -1197,6 +1455,15 @@ class ClusterBackend(EventWaitMixin, Backend):
     # -- Backend API ---------------------------------------------------------
 
     def submit(self, task: TaskSpec) -> _Handle:
+        try:
+            self._ensure_remote_inputs(task)
+        except FutureError as exc:
+            # lineage could not cover a lost input: surface it through the
+            # normal completion path (value()/callbacks), not at submit
+            handle = _Handle(task)
+            handle.error = exc
+            self._complete(handle)
+            return handle
         worker = self._checkout(prefer=self._holders(task.affinity))
         return self._dispatch(task, worker)
 
@@ -1221,21 +1488,15 @@ class ClusterBackend(EventWaitMixin, Backend):
         # dataflow path is that their bytes never route through the driver
         # unless they must. The task frame instead carries per-digest peer
         # addresses (hints); the worker's resolution order is own store ->
-        # peer fetch -> ("need", d) driver fallback, and a digest whose
-        # last holder died fails fast here with the holder's name.
+        # peer fetch -> ("need", d) driver fallback — and the driver's
+        # need path rebuilds a digest with no live copy from its lineage,
+        # so a lost input delays the task instead of failing it.
         try:
             puts, hints = [], {}
             for digest, src in task.payload_sources.items():
                 if getattr(src, "remote", False):
-                    addrs, lost = self._peer_addrs(digest,
-                                                   exclude=worker.wid)
-                    if lost is not None and digest not in worker.known:
-                        raise WorkerDiedError(
-                            f"cannot dispatch future "
-                            f"{task.label or task.task_id!r}: its remote "
-                            f"input payload {digest.hex()[:12]} was lost "
-                            f"when its holder {lost} died",
-                            future_label=task.label)
+                    addrs, _lost = self._peer_addrs(digest,
+                                                    exclude=worker.wid)
                     if addrs:
                         hints[digest] = addrs
                 elif digest not in worker.known:

@@ -33,6 +33,16 @@ Tags in use on a cluster connection (driver <-> worker):
                                            nbytes), ...) manifest of result
                                            blobs parked worker-resident
                      ("need", digest)      blob-store backfill request
+                     ("stored", digest, nbytes, how)   the worker verified
+                                           and stored a copy of a worker-
+                                           resident result blob: how =
+                                           "replicate" (answering a
+                                           replicate frame) | "fetch" (a
+                                           task-path peer fetch — replica
+                                           promotion). The driver adds the
+                                           worker to the digest's location
+                                           map, so holder loss has a
+                                           survivor
                      ("state", rid, op, args)   shared-state op from the
                                            task body (rid: per-client
                                            request counter; op: get/put/
@@ -66,7 +76,18 @@ Tags in use on a cluster connection (driver <-> worker):
                                            worker-resident result died at
                                            the driver — drop the blob
                                            (no-op when pinned by a
-                                           running task)
+                                           running task); the driver also
+                                           drops the digest's lineage
+                                           record
+                     ("replicate", digest, addrs)   proactive replication
+                                           (``min_replicas``): peer-fetch
+                                           a copy of the digest from one
+                                           of ``addrs`` (live holders'
+                                           peer servers), store it, and
+                                           confirm with ("stored", ...).
+                                           Best-effort — no reachable
+                                           holder just leaves the digest
+                                           under-replicated
                      ("stop",)
 
 Blob fetch (symmetric — driver -> worker over the control socket, or any

@@ -37,6 +37,19 @@ class ChannelError(FutureError):
     """Communication with the worker failed (broken pipe / truncated frame)."""
 
 
+class LineageExhaustedError(FutureError):
+    """A worker-resident result was lost (holder died / evicted everywhere)
+    and could **not** be rebuilt from its lineage: no producing task was
+    recorded for the digest, the recursive reconstruction exceeded its depth
+    cap, or the per-digest re-execution budget ran out. Carries the digest
+    so a supervisor can correlate with the driver's ``recovery_stats()``."""
+
+    def __init__(self, message: str, *, digest: "bytes | None" = None,
+                 future_label: str | None = None, worker: object | None = None):
+        super().__init__(message, future_label=future_label, worker=worker)
+        self.digest = digest
+
+
 class FutureCancelledError(FutureError):
     """The future was cancelled before it resolved (e.g. the losing branches
     of ``future_either`` or an elastic down-scale)."""

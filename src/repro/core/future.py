@@ -53,7 +53,8 @@ from . import planning as plan_mod
 from .backends.base import (Backend, CompletionHandle, EventWaitMixin,
                             TaskSpec)
 from .conditions import CapturedRun, capture_run, relay
-from .errors import FutureCancelledError, FutureError, GlobalsError
+from .errors import (FutureCancelledError, FutureError, GlobalsError,
+                     WorkerDiedError)
 from .globals_capture import identify_globals, ship_function
 from . import rng as rng_mod
 
@@ -467,12 +468,19 @@ class Future:
         self._relay_immediate()
         return self._backend.poll(self._handle)
 
-    def value(self) -> Any:
+    def value(self, timeout: "float | None" = None) -> Any:
         """Block until resolved; relay stdout/conditions (once) and the
-        error (every call); return the value."""
+        error (every call); return the value. With ``timeout=``, wait at
+        most that many seconds: an unresolved future raises
+        ``TimeoutError`` and stays valid — a later ``value()`` call can
+        still collect it."""
         if self._state == _CREATED:
             self._submit()
         if self._state != _COLLECTED:
+            if timeout is not None and \
+                    not self._backend.wait([self._handle], timeout=timeout):
+                raise TimeoutError(
+                    f"future {self.label!r} unresolved after {timeout}s")
             run = self._backend.collect(self._handle)   # may raise FutureError
             # worker-resident result: value() is the explicit pull — fetch
             # the blob from its holder and hand back a writable copy (may
@@ -585,13 +593,17 @@ def _chain_apply(v, _fn=None, _flatten=False):
 
 
 def _remote_chain(prun: CapturedRun, fn: Callable, out: Future, *,
-                  flatten: bool) -> bool:
+                  flatten: bool, _attempts: int = 2) -> bool:
     """Try to route a continuation on a worker-resident parent value back
     through the holding cluster: the hop ships ~500 B of control frame (fn
     + the parent digest) and ``TaskSpec.affinity`` steers it to a worker
     already holding the bytes. Returns False when routing is impossible
     (backend gone / shut down) — the caller falls back to pulling the
-    value and running the continuation driver-side."""
+    value and running the continuation driver-side. A hop that dies with
+    its worker is retried up to ``_attempts`` times (``_step_hop``): the
+    retry's ``submit()`` rebuilds a lost parent from its lineage before
+    dispatch, so a holder SIGKILL mid-chain resolves to the correct value
+    instead of a WorkerDiedError."""
     rv = prun.value
     backend = rv.backend()
     if backend is None or not getattr(backend, "remote_chains", False):
@@ -603,12 +615,44 @@ def _remote_chain(prun: CapturedRun, fn: Callable, out: Future, *,
         # continuation convention (see _spawn_continuation): the hop must
         # not trip RNG-misuse detection on the user's behalf
         g.seed_declared = True
-        prefix = dataclasses.replace(prun, value=None)
         g._register(lambda _h: _spawn_continuation(
-            out, lambda: _step_adopt(g, out, prefix=prefix)))
+            out, lambda: _step_hop(g, prun, fn, out, flatten=flatten,
+                                   attempts_left=_attempts)))
     except Exception:                                # noqa: BLE001
         return False                   # shut-down race etc.: pull instead
     return True
+
+
+def _step_hop(g: Future, prun: CapturedRun, fn: Callable, out: Future, *,
+              flatten: bool, attempts_left: int) -> None:
+    """Adopt the outcome of one locality-routed hop, with recovery. A hop
+    killed with its worker is re-routed (the retry's ``submit()``
+    reconstructs the lost parent digest from lineage first); any other —
+    or exhausted — infrastructure failure falls back to pulling the
+    parent value (``pull_blob`` rebuilds lost bytes too) and running the
+    continuation driver-side. Hop bodies are side-effect-free task
+    descriptions with frozen RNG streams, so re-execution is safe and
+    replay-exact."""
+    run, infra = _outcome(g)
+    if infra is None:
+        prefix = dataclasses.replace(prun, value=None)
+        _CHAIN.complete(out._handle,
+                        run=_merge_runs(prefix, dataclasses.replace(run)))
+        return
+    if not isinstance(infra, FutureError) \
+            or isinstance(infra, FutureCancelledError):
+        _CHAIN.complete(out._handle, error=infra)
+        return
+    if isinstance(infra, WorkerDiedError) and attempts_left > 0 \
+            and _remote_chain(prun, fn, out, flatten=flatten,
+                              _attempts=attempts_left - 1):
+        return
+    try:
+        mrun = _materialize_run(prun)
+    except Exception as exc:                         # noqa: BLE001
+        _CHAIN.complete(out._handle, error=exc)
+        return
+    _finish_local_step(mrun, fn, out, flatten=flatten)
 
 
 def _step_then(parent: Future, fn: Callable, out: Future, *,
@@ -632,6 +676,14 @@ def _step_then(parent: Future, fn: Callable, out: Future, *,
         except Exception as exc:                     # noqa: BLE001
             _CHAIN.complete(out._handle, error=exc)
             return
+    _finish_local_step(prun, fn, out, flatten=flatten)
+
+
+def _finish_local_step(prun: CapturedRun, fn: Callable, out: Future, *,
+                       flatten: bool) -> None:
+    """Run ``fn`` against the (materialized) parent value on this thread
+    and complete ``out`` — the driver-side tail shared by ``_step_then``
+    and ``_step_hop``'s fallback path."""
     crun = capture_run(lambda: fn(prun.value))
     if flatten and crun.error is None and isinstance(crun.value, Future):
         inner = crun.value
@@ -721,19 +773,30 @@ def resolved(f: "Future | Iterable[Future]") -> "bool | list[bool]":
     return [fi.resolved() for fi in f]
 
 
-def value(f: "Future | Sequence | dict") -> Any:
+def value(f: "Future | Sequence | dict",
+          timeout: "float | None" = None) -> Any:
     """Generic value(): works on a future, list/tuple of futures, or dict —
-    the paper's value() S3 generic for containers."""
+    the paper's value() S3 generic for containers. ``timeout=`` bounds the
+    *total* wait across a whole container (one shared deadline, not one
+    per element), raising ``TimeoutError`` when it elapses with futures
+    still unresolved."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    return _value_by(f, deadline)
+
+
+def _value_by(f, deadline: "float | None") -> Any:
     if isinstance(f, Future):
-        return f.value()
+        if deadline is None:
+            return f.value()
+        return f.value(timeout=max(deadline - time.monotonic(), 0.0))
     if isinstance(f, dict):
-        return {k: value(v) for k, v in f.items()}
+        return {k: _value_by(v, deadline) for k, v in f.items()}
     if isinstance(f, (list, tuple)):
         # merged futures return lists of sub-values; flatten one level so
         # value(fs) after chunking equals value(fs) without chunking.
         flat = []
         for fi in f:
-            v = value(fi)
+            v = _value_by(fi, deadline)
             if isinstance(fi, Future) and getattr(fi, "_merged_n", 0):
                 flat.extend(v)
             else:

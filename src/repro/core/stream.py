@@ -33,7 +33,12 @@ Mechanics of the pump (one per ``.map`` stage):
 * completions are push-delivered through one :class:`~.future.Waiter`;
   the pump harvests, re-dispatches ``retries=`` failed chunks
   (``FutureError`` only — evaluation errors propagate, like
-  ``future_map``), and refills from upstream;
+  ``future_map``), and refills from upstream. On the cluster backend a
+  chunk whose worker-resident result was *lost* (holder death, eviction
+  race) is usually rebuilt from its lineage before the pump ever sees an
+  error (see ``cluster.py`` §lineage); only an unrecoverable loss
+  surfaces here, as ``LineageExhaustedError`` — a ``FutureError``, so
+  ``retries=`` covers it too;
 * ``seed=`` gives every *element* ``fold_in(session_key, base + i)`` with
   ``i`` the element's position in the stage's input stream — invariant to
   chunking, backend, worker count *and* ``max_in_flight`` (the same CMRG

@@ -104,6 +104,21 @@ class HarnessLauncher(Launcher):
         except ProcessLookupError:
             pass
 
+    def delay(self, wp: WorkerProc, seconds: float) -> threading.Thread:
+        """Delayed delivery: freeze the worker (SIGSTOP) now and resume it
+        (SIGCONT) after ``seconds`` — a *slow* peer rather than a dead
+        one. With ``seconds`` past the driver's heartbeat timeout this
+        pins the fetch-races-reconstruction window: the driver declares
+        the holder dead and starts rebuilding while the process (and its
+        peer server, with the original bytes) comes back mid-recovery.
+        Returns the resume-timer thread (daemon; join to sync on it)."""
+        os.kill(wp.pid, signal.SIGSTOP)
+        timer = threading.Timer(seconds, self.resume, args=(wp,))
+        timer.daemon = True
+        timer.name = "harness-delay-resume"
+        timer.start()
+        return timer
+
     def partition(self, backend, wp: WorkerProc) -> bool:
         """Sever the driver<->worker TCP stream without touching the
         process: the driver sees EOF/heartbeat loss, the worker sees EOF —

@@ -28,6 +28,10 @@ def pytest_configure(config):
         "markers",
         "state: shared-state subsystem tests (versioned KV, CAS/watch; "
         "select with '-m state')")
+    config.addinivalue_line(
+        "markers",
+        "lineage: lineage reconstruction / replication tests (select "
+        "with '-m lineage')")
 
 
 def pytest_collection_modifyitems(config, items):

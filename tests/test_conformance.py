@@ -43,6 +43,18 @@ def test_same_value(backend):
     assert value(future(lambda: x * 3)) == 33
 
 
+def test_value_timeout(backend):
+    """value(timeout=) bounds the wait: TimeoutError while unresolved,
+    and the future stays valid — a later bounded wait still collects."""
+    import time as _time
+    f = future(lambda: _time.sleep(0.5) or 7)
+    if not rc.resolved(f):                # eager backends resolve at create
+        with pytest.raises(TimeoutError):
+            f.value(timeout=0.05)
+    assert f.value(timeout=30.0) == 7
+    assert value(f, timeout=30.0) == 7    # module-level form, resolved path
+
+
 def test_snapshot_semantics(backend):
     x = 1
     f = future(lambda: x + 100)

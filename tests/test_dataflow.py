@@ -6,10 +6,12 @@ the producing worker as a content-addressed blob (the driver holds a lazy
 ``RemoteValue``), continuation chains are scheduled onto the holder and
 ship ~500 B of control frame instead of the value, and when locality is
 impossible the bytes move worker-to-worker over the fetch/offer protocol —
-with the driver as fallback, and clean ``WorkerDiedError`` /
-``ChannelError`` failures (never hangs, never silent corruption) when
-holders die or evict. Synchronization is always on observable driver /
-file-marker state — no sleeps-as-synchronization.
+with the driver as fallback. When holders die or evict, the driver
+rebuilds lost blobs by re-executing their recorded lineage (see
+test_lineage.py for the recovery battery) — dependent work gets the
+bit-identical bytes back instead of a ``WorkerDiedError``.
+Synchronization is always on observable driver / file-marker state — no
+sleeps-as-synchronization.
 """
 
 import os
@@ -352,7 +354,10 @@ def test_eviction_under_fetch_naks_then_driver_backfills():
     assert g.value() == float(_big().sum())
 
 
-def test_evicted_everywhere_is_clean_channel_error():
+def test_evicted_everywhere_reconstructs_from_lineage():
+    """Displace f's blob from its only holder: the pull finds no live
+    copy anywhere, so the driver re-executes f's recorded producing task
+    and the value comes back digest-identical."""
     blob_bytes = int(_N * 8 * 1.5)
     rc.plan("cluster", workers=1, blob_store_bytes=blob_bytes)
     backend = rc.active_backend()
@@ -362,10 +367,11 @@ def test_evicted_everywhere_is_clean_channel_error():
     f2 = f.then(lambda a: a + 1.0)
     _remote_value_of(f2)
     f2.value()                           # f2's blob now driver-side too
-    # f's bytes are gone everywhere: the pull must fail fast and clean
-    with pytest.raises(rc.ChannelError, match="evicted"):
-        f.value()
-    assert rv.digest not in DRIVER_STORE  # no partial/stale cache entry
+    # f's bytes may be gone everywhere: the pull rebuilds from lineage
+    v = f.value()
+    assert np.array_equal(v, _big(3.25))
+    assert rv.digest in DRIVER_STORE     # rebuilt bytes are digest-exact
+    assert backend is rc.active_backend()  # no restart happened under us
 
 
 # --------------------------------------------------------------------------
@@ -373,10 +379,11 @@ def test_evicted_everywhere_is_clean_channel_error():
 # --------------------------------------------------------------------------
 
 @pytest.mark.launcher
-def test_holder_death_fails_dependent_chain_cleanly():
+def test_holder_death_recovers_dependent_chain_via_lineage():
     """SIGKILL the worker holding f's result before g dispatches: the
-    chain (and the pull) fail with WorkerDiedError naming the loss — no
-    hang — and the relaunched pool keeps serving fresh work."""
+    driver re-executes f's recorded producing task, the chain resolves to
+    the correct value (no WorkerDiedError escapes), and the recovery is
+    visible in ``recovery_stats()``."""
     h = HarnessLauncher()
     rc.plan("cluster", hosts=2, launcher=h, **_FAST)
     backend = rc.active_backend()
@@ -390,10 +397,9 @@ def test_holder_death_fails_dependent_chain_cleanly():
     # location map no longer lists any holder for the digest
     _wait(lambda: not backend.locations(rv.digest), what="death detected")
     g = f.then(lambda a: float(a.sum()))
-    with pytest.raises(rc.WorkerDiedError, match="lost"):
-        g.value()
-    with pytest.raises(rc.WorkerDiedError, match="lost"):
-        f.value()
+    assert g.value() == float(_big(5.5).sum())
+    assert f.value() is not None and np.array_equal(f.value(), _big(5.5))
+    assert backend.recovery_stats()["reconstructions"] >= 1
     # self-heal: the replacement joins and fresh chains work end to end
     h.wait_launches(3)
     f2 = future(_big)

@@ -1,0 +1,285 @@
+"""Lineage-based reconstruction + proactive replication (robustness PR).
+
+The contract under test: a worker-resident result whose every copy is
+gone — holder SIGKILLed, evicted under store pressure, or raced away —
+is transparently **re-produced by re-executing its recorded producing
+task** (recursively for missing parents, capped by ``lineage_max_depth``
+/ ``lineage_max_attempts``), and the rebuilt bytes are digest-identical
+because the shipped task blob froze the RNG stream key and every
+content-addressed input ref at creation. ``min_replicas=2`` layers
+proactive replication on the same machinery so a single holder death
+needs *zero* re-executions. Synchronization is always on observable
+driver / file-marker state — no sleeps-as-synchronization.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+import repro.core as rc
+from _cluster_harness import HarnessLauncher
+from repro.core import future
+from repro.core.backends.blobstore import DRIVER_STORE, RemoteValue
+
+pytestmark = pytest.mark.lineage
+
+#: crosses RESULT_REF_THRESHOLD (64 KiB); fast for the non-acceptance cases
+_N = 1 << 17          # 1 MiB of float64
+
+#: the acceptance scenario sizes the intermediate at 8 MiB
+_N8 = 1 << 20         # 8 MiB of float64
+
+#: fast-heal knobs (same as test_faults / test_dataflow)
+_FAST = dict(heartbeat_interval=0.1, heartbeat_timeout=3.0,
+             relaunch_backoff=0.05, relaunch_backoff_cap=0.2)
+
+
+def _big(bias=0.0):
+    """1 MiB payload with a test-unique digest (DRIVER_STORE is
+    process-global: loss tests need bytes no earlier test pulled)."""
+    return np.arange(_N, dtype=np.float64) + bias
+
+
+def _big8(bias=0.0):
+    return np.arange(_N8, dtype=np.float64) + bias
+
+
+def _remote_value_of(f):
+    run = f._backend.collect(f._handle)
+    assert isinstance(run.value, RemoteValue), run.value
+    return run.value
+
+
+def _holder_pids(backend, digest):
+    wids = backend.locations(digest)
+    with backend._pool_cv:
+        return {w.meta.get("pid") for w in backend._all if w.wid in wids}
+
+
+def _wait(pred, timeout=30.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(0.01)
+    raise TimeoutError(f"{what} not reached within {timeout}s")
+
+
+def _make_once_blocker(pidfile):
+    """Chain body whose *first* execution publishes its pid and parks
+    forever (until the harness SIGKILLs the worker); the re-execution
+    after recovery sees the marker and computes. Local function so it
+    ships by value."""
+    def body(a, _p=pidfile):
+        import os as _os
+        import time as _time
+        if not _os.path.exists(_p):
+            with open(_p, "w") as fh:
+                fh.write(str(_os.getpid()))
+            while True:
+                _time.sleep(0.005)
+        return float(a.sum())
+    return body
+
+
+def _make_parker(pidfile, release):
+    """Chain body that parks its worker until the release marker."""
+    def body(a, _p=pidfile, _r=release):
+        import os as _os
+        import time as _time
+        with open(_p, "w") as fh:
+            fh.write(str(_os.getpid()))
+        while not _os.path.exists(_r):
+            _time.sleep(0.005)
+        return float(a[0])
+    return body
+
+
+# --------------------------------------------------------------------------
+# Acceptance: sole holder of an 8 MiB intermediate dies mid-chain
+# --------------------------------------------------------------------------
+
+@pytest.mark.launcher
+def test_sole_holder_sigkill_midchain_rebuilds_bit_identical(tmp_path):
+    """SIGKILL the sole holder of an 8 MiB intermediate while the
+    dependent hop runs on it: the hop retry re-submits, the submit
+    preflight re-executes f's recorded lineage on the survivor, and the
+    chain resolves to the correct value under the *original* digest — no
+    WorkerDiedError reaches user code."""
+    h = HarnessLauncher()
+    rc.plan("cluster", hosts=2, launcher=h, **_FAST)
+    backend = rc.active_backend()
+    f = future(_big8, 17.5)
+    digest = _remote_value_of(f).digest
+    assert digest not in DRIVER_STORE     # sole copy is worker-resident
+    pidfile = str(tmp_path / "holder.pid")
+    watcher = h.kill_on_pidfile(pidfile)
+    # locality routes the hop onto the holder — the kill is guaranteed to
+    # land mid-task on the worker holding the intermediate
+    g = f.then(_make_once_blocker(pidfile))
+    assert g.value() == float(_big8(17.5).sum())
+    watcher.join(30.0)
+    assert watcher.killed is not None     # the kill really landed
+    assert backend.recovery_stats()["reconstructions"] >= 1
+    # bit-identical replay: pulling by the ORIGINAL digest succeeds and
+    # decodes to the original value
+    assert np.array_equal(f.value(), _big8(17.5))
+    assert digest in DRIVER_STORE
+
+
+# --------------------------------------------------------------------------
+# Acceptance: min_replicas=2 — same death, zero re-executions
+# --------------------------------------------------------------------------
+
+@pytest.mark.launcher
+def test_min_replicas_survives_holder_death_with_zero_reexecutions():
+    h = HarnessLauncher()
+    rc.plan("cluster", hosts=2, launcher=h, min_replicas=2, **_FAST)
+    backend = rc.active_backend()
+    f = future(_big8, 23.5)
+    digest = _remote_value_of(f).digest
+    _wait(lambda: len(backend.locations(digest)) >= 2,
+          what="proactive replica registered")
+    assert backend.recovery_stats()["replications"] >= 1
+    pid = next(iter(_holder_pids(backend, digest)))
+    with backend._pool_cv:
+        dead_wid = next(w.wid for w in backend._all
+                        if w.meta.get("pid") == pid)
+    h.kill(h.by_pid(pid))
+    _wait(lambda: dead_wid not in backend.locations(digest)
+          and backend.locations(digest),
+          what="death pruned; surviving replica still registered")
+    g = f.then(lambda a: float(a.sum()))
+    assert g.value() == float(_big8(23.5).sum())
+    assert backend.recovery_stats()["reconstructions"] == 0
+
+
+# --------------------------------------------------------------------------
+# Caps surface a clear LineageExhaustedError
+# --------------------------------------------------------------------------
+
+def test_reexecution_budget_exhausted_surfaces_clear_error():
+    """lineage_max_attempts=0 turns every rebuild into the budget error:
+    displace the sole copy under store pressure, then pull."""
+    blob_bytes = int(_N * 8 * 1.5)
+    rc.plan("cluster", workers=1, blob_store_bytes=blob_bytes,
+            lineage_max_attempts=0)
+    f = future(_big, 29.25)
+    _remote_value_of(f)
+    f2 = f.then(lambda a: a + 1.0)        # displaces f's blob on the holder
+    f2.value()
+    with pytest.raises(rc.LineageExhaustedError, match="budget"):
+        f.value()
+
+
+def test_depth_cap_raises_lineage_exhausted():
+    rc.plan("cluster", workers=1)
+    backend = rc.active_backend()
+    with pytest.raises(rc.LineageExhaustedError, match="depth cap"):
+        backend._reconstruct(b"\x00" * 16,
+                             _depth=backend._lineage_max_depth + 1)
+
+
+def test_lost_digest_without_lineage_is_diagnosable():
+    """Bytes the driver never saw produced (no recorded task) fail with
+    the no-lineage message, not a hang."""
+    rc.plan("cluster", workers=1)
+    backend = rc.active_backend()
+    with pytest.raises(rc.LineageExhaustedError,
+                       match="no producing task is recorded"):
+        backend._reconstruct(b"\x01" * 16)
+
+
+# --------------------------------------------------------------------------
+# Bounded bookkeeping: GC hook + LRU cap
+# --------------------------------------------------------------------------
+
+def test_gc_drops_lineage_record():
+    """Evicting a digest via RemoteValue GC also drops its lineage: the
+    registry cannot outgrow the set of live results."""
+    import gc
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    f = future(_big, 31.75)
+    rv = _remote_value_of(f)
+    digest = rv.digest
+    with backend._lineage_lock:
+        assert digest in backend._lineage
+    del f, rv
+    gc.collect()
+
+    def _gone():
+        with backend._lineage_lock:
+            return digest not in backend._lineage
+    _wait(_gone, what="GC-driven lineage drop")
+
+
+def test_lineage_registry_is_bounded():
+    rc.plan("cluster", workers=1, lineage_keep=2)
+    backend = rc.active_backend()
+    fs = [future(_big, 100.0 + i) for i in range(3)]
+    rvs = [_remote_value_of(f) for f in fs]
+    with backend._lineage_lock:
+        assert len(backend._lineage) <= 2
+        assert rvs[0].digest not in backend._lineage   # oldest LRU-evicted
+        assert rvs[2].digest in backend._lineage
+    assert fs and rvs                                  # keep refs pinned
+
+
+# --------------------------------------------------------------------------
+# Peer fetch promotes the fetcher to a registered replica
+# --------------------------------------------------------------------------
+
+def test_peer_fetch_promotes_fetcher_to_replica(tmp_path):
+    """A task-path peer fetch leaves a second registered holder behind
+    (the ("stored", d, n, "fetch") confirmation) — hot digests gain
+    replicas from ordinary traffic."""
+    rc.plan("cluster", workers=2)
+    backend = rc.active_backend()
+    pidfile, release = str(tmp_path / "pid"), str(tmp_path / "go")
+    f = future(_big, 41.5)
+    digest = _remote_value_of(f).digest
+    assert len(backend.locations(digest)) == 1
+    # occupy the holder deterministically: this chain is locality-routed
+    blocker = f.then(_make_parker(pidfile, release))
+    _wait(lambda: os.path.exists(pidfile), what="parker pinned on holder")
+    g = f.then(lambda a: float(a.sum()))   # holder busy -> other worker
+    assert g.value() == float(_big(41.5).sum())
+    _wait(lambda: len(backend.locations(digest)) >= 2,
+          what="fetcher promoted to replica")
+    assert backend.recovery_stats()["replica_promotions"] >= 1
+    open(release, "w").close()
+    assert blocker.value() == float(_big(41.5)[0])
+
+
+# --------------------------------------------------------------------------
+# Slow peer: death verdict races the original bytes coming back
+# --------------------------------------------------------------------------
+
+@pytest.mark.launcher
+def test_slow_holder_races_reconstruction():
+    """Freeze the sole holder past the heartbeat timeout: the driver
+    declares it dead and rebuilds from lineage while the frozen process
+    (whose peer server still has the original bytes) resumes
+    mid-recovery. Content addressing makes the race benign — both copies
+    are the same digest, so whichever side wins, the value is
+    bit-identical."""
+    h = HarnessLauncher()
+    rc.plan("cluster", hosts=2, launcher=h, **_FAST)
+    backend = rc.active_backend()
+    f = future(_big, 37.5)
+    digest = _remote_value_of(f).digest
+    pid = next(iter(_holder_pids(backend, digest)))
+    wp = h.by_pid(pid)
+    assert wp is not None
+    h.delay(wp, 6.0)       # > heartbeat_timeout: declared dead, then back
+    _wait(lambda: not backend.locations(digest),
+          what="frozen holder declared dead")
+    g = f.then(lambda a: float(a.sum()))
+    assert g.value() == float(_big(37.5).sum())
+    assert np.array_equal(f.value(), _big(37.5))
+    assert backend.recovery_stats()["reconstructions"] >= 1
+    # the pool keeps serving fresh work after the zombie resumes
+    assert future(lambda: 7).value() == 7
