@@ -715,6 +715,77 @@ def bench_lineage_recovery(quick: bool = False) -> None:
     _CLUSTER_JSON["bench_lineage_recovery"] = rows
 
 
+def bench_async_concurrency(quick: bool = False) -> None:
+    """Cooperative frontend: sustained in-flight futures per process.
+
+    The workload is 10k latency-bound futures (bodies parked in a 1.5s
+    sleep — a stand-in for a backend RPC or a client request). The loop
+    backend holds *all* of them in flight on one event loop, so wall time
+    is creation + one sleep. A thread backend cannot be configured with
+    one worker per in-flight body at this scale — each costs an OS thread
+    (8 MiB of stack, a scheduler slot; spawn/wake churn at 10k live
+    threads is minutes-shaped when the box is contended) — so it runs a
+    generous-but-practical 512-worker pool and the 10k bodies serialize
+    into ~20 waves of sleep. That is the serving-scale story measured:
+    concurrency capacity converts directly into futures/s once bodies are
+    latency-bound, not CPU-bound. Reported as futures/s over
+    create-to-resolve wall time; the tentpole claim is the ratio: the
+    loop backend must sustain >= 5x the threads backend's futures/s."""
+    import asyncio
+    import threading
+
+    n = 2_000 if quick else 10_000
+    thr_workers = 256 if quick else 512
+    sleep_s = 0.75 if quick else 1.5
+
+    rc.plan("asyncio", tasks=n + 16)
+
+    async def body(_s=sleep_s):
+        await asyncio.sleep(_s)
+        return 1
+
+    t0 = time.perf_counter()
+    fs = [rc.future(body) for _ in range(n)]
+    rc.resolve(fs)
+    aio_wall = time.perf_counter() - t0
+    aio_rate = n / aio_wall
+    nthreads = threading.active_count()
+    rc.shutdown()
+    _row("async/loop_backend", aio_wall / n * 1e6,
+         f"{aio_rate:,.0f} futures/s, {n} in flight, "
+         f"{nthreads} threads total")
+
+    thr_rate = None
+    rc.plan("threads", workers=thr_workers)
+    try:
+        t0 = time.perf_counter()
+        fs = [rc.future(lambda _s=sleep_s: time.sleep(_s) or 1)
+              for _ in range(n)]
+        rc.resolve(fs)
+        thr_wall = time.perf_counter() - t0
+        thr_rate = n / thr_wall
+        _row("async/thread_backend", thr_wall / n * 1e6,
+             f"{thr_rate:,.0f} futures/s, {thr_workers} workers x "
+             f"{n / thr_workers:.0f} waves")
+    except RuntimeError as exc:          # "can't start new thread": report,
+        _row("async/thread_backend", 0.0, f"FAILED ({exc})")   # don't crash
+    finally:
+        rc.shutdown()
+        rc.plan("sequential")
+
+    rows = {"sleep_s": sleep_s, "n_inflight": n,
+            "threads_workers": thr_workers,
+            "async_futures_per_s": aio_rate}
+    if thr_rate is not None:
+        rows["threads_futures_per_s"] = thr_rate
+        rows["async_over_threads"] = aio_rate / thr_rate
+        note = ("tentpole floor: 5x" if not quick else
+                "quick mode: load too small for the thread collapse")
+        _row("async/rate_ratio", 0.0,
+             f"{aio_rate / thr_rate:.1f}x futures/s vs threads ({note})")
+    _CLUSTER_JSON["bench_async_concurrency"] = rows
+
+
 def _fmt_kib(v: float) -> str:
     return f"{v:,.0f}KiB"
 
@@ -818,7 +889,7 @@ BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_callback_latency, bench_globals_cache,
            bench_dataflow_chain, bench_worker_bootstrap,
            bench_stream_throughput, bench_state_ops,
-           bench_lineage_recovery,
+           bench_lineage_recovery, bench_async_concurrency,
            bench_compression, bench_kernels, bench_roofline]
 
 #: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
@@ -827,7 +898,7 @@ CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
                    bench_callback_latency, bench_globals_cache,
                    bench_dataflow_chain, bench_worker_bootstrap,
                    bench_stream_throughput, bench_state_ops,
-                   bench_lineage_recovery]
+                   bench_lineage_recovery, bench_async_concurrency]
 
 
 def main() -> None:

@@ -107,6 +107,35 @@ def main():
     )
     print("future_either winner:", winner)
 
+    # -- cooperative concurrency: await f / async for (asyncio frontend) ----
+    #
+    # Every future is awaitable: `await f` suspends the coroutine instead
+    # of blocking its thread, on any backend. plan("asyncio") goes further
+    # and runs `async def` bodies on one shared event loop — thousands of
+    # I/O-bound futures in flight with no thread parked per future.
+    import asyncio
+    plan("asyncio")
+
+    async def fetch(i):
+        await asyncio.sleep(0.02 * (3 - i % 3))    # stand-in for real I/O
+        return i * 10
+
+    async def cooperative_demo():
+        fs = [future(fetch, i) for i in range(6)]
+        one = await fs[0]                          # await ≡ value(), non-blocking
+        # multiplex completions into the loop: futures arrive as they finish
+        done = [await f async for f in rc.as_completed_async(fs)]
+        # stream terminals have async twins for use inside a running loop
+        squares = await (stream(range(8))
+                         .map(lambda v: v * v)
+                         .collect_async())
+        return one, done, squares
+
+    one, done, squares = asyncio.run(cooperative_demo())
+    print("await f:  ", one)
+    print("async for:", done, "(completion order)")
+    print("stream.collect_async:", squares)
+
     # -- worker processes + fault tolerance ---------------------------------
     plan("processes", workers=2)
     import os

@@ -77,6 +77,13 @@ INFO_METRICS = [
      ("bench_lineage_recovery", "recompute_driver_bytes"), "B"),
     ("lineage_bytes/replica",
      ("bench_lineage_recovery", "replica_driver_bytes"), "B"),
+    # cooperative frontend (asyncio backend): informational — the tentpole
+    # claim is the >=5x rate ratio over threads, which is asserted by the
+    # bench's own output, not gated here while the baseline accumulates
+    ("async_futures_per_s",
+     ("bench_async_concurrency", "async_futures_per_s"), " futures/s"),
+    ("async_over_threads",
+     ("bench_async_concurrency", "async_over_threads"), "x"),
 ]
 
 

@@ -33,6 +33,17 @@ fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 
 if [ "$#" -eq 0 ]; then
+    # the cooperative-frontend surface, called out explicitly: the asyncio
+    # conformance row plus the await/async-for tests (both already ran in
+    # the full suite above; this names them in the CI log so a green run
+    # visibly covers the seventh backend)
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -q tests/test_conformance.py -k asyncio
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -q tests/test_async.py
+fi
+
+if [ "$#" -eq 0 ]; then
     # snapshot the committed baseline before the run overwrites it
     baseline="$(mktemp /tmp/bench_baseline.XXXXXX.json)"
     trap 'rm -f "$baseline"' EXIT

@@ -8,7 +8,14 @@
     v = value(f)
 
 Backends: "sequential" (default), "threads", "processes", "cluster",
-"jax_async". See DESIGN.md §2 for the paper↔framework mapping.
+"jax_async", "asyncio". See DESIGN.md §2 for the paper↔framework mapping.
+
+The cooperative (asyncio) lane works on every backend: ``await f``
+suspends the awaiting coroutine instead of blocking a thread, and
+``async for f in as_completed_async(fs)`` multiplexes completions into a
+running event loop. ``plan("asyncio")`` additionally dispatches ``async
+def`` task bodies on one event loop — tens of thousands of I/O-bound
+futures in flight per process, no thread parked per future.
 
 The streaming frontend (`core/stream.py`) builds lazy, backpressured
 map-reduce pipelines on the same three constructs::
@@ -26,6 +33,7 @@ from .backends import threads as _threads                    # noqa: F401
 from .backends import processes as _processes                # noqa: F401
 from .backends import cluster as _cluster                    # noqa: F401
 from .backends import jax_async as _jax_async                # noqa: F401
+from .backends import asyncio_loop as _asyncio_loop          # noqa: F401
 from .backends.launchers import (CommandLauncher, Launcher,  # noqa: F401
                                  LocalLauncher, SSHLauncher, WorkerProc)
 from .conditions import (CapturedRun, ImmediateCondition, message,  # noqa: F401
@@ -35,9 +43,9 @@ from .errors import (ChannelError, FutureCancelledError, FutureError,  # noqa: F
                      GlobalsError, LineageExhaustedError,
                      NonExportableObjectError, RNGMisuseWarning,
                      WorkerDiedError)
-from .future import (Future, Waiter, as_completed, first,  # noqa: F401
-                     first_successful, future, gather, merge, resolve,
-                     resolved, value, wait_any)
+from .future import (AsyncWaiter, Future, Waiter, as_completed,  # noqa: F401
+                     as_completed_async, first, first_successful, future,
+                     gather, merge, resolve, resolved, value, wait_any)
 from .mapreduce import (future_either, future_lapply, future_map,  # noqa: F401
                         future_map_chunked_lazy, retry, retry_future)
 from .stream import Stream, stream                           # noqa: F401
@@ -46,8 +54,10 @@ from .planning import (available_cores, plan, shutdown, spec, tweak,  # noqa: F4
 from .rng import set_session_seed                            # noqa: F401
 
 __all__ = [
-    "future", "value", "resolved", "resolve", "as_completed", "wait_any",
-    "merge", "Future", "Waiter", "gather", "first", "first_successful",
+    "future", "value", "resolved", "resolve", "as_completed",
+    "as_completed_async", "wait_any",
+    "merge", "Future", "Waiter", "AsyncWaiter", "gather", "first",
+    "first_successful",
     "plan", "spec", "tweak", "shutdown", "available_cores", "active_backend",
     "Launcher", "LocalLauncher", "SSHLauncher", "CommandLauncher",
     "WorkerProc",

@@ -76,32 +76,44 @@ class JaxAsyncBackend(Backend):
         # Python-level work ran at submit; only device computation is
         # outstanding. XLA has no host-side completion hook, so one watcher
         # thread per handle parks in block_until_ready() and fans out to
-        # every registered callback exactly once.
+        # every registered callback exactly once. The "fired" sentinel is
+        # written under _cb_lock on *every* path that fires — including the
+        # already-ready fast path, which used to leave _done_cbs unset, so
+        # a registration racing it could spawn a second watcher and a
+        # callback appended in that window was fanned out by both.
         fire = False
         with self._cb_lock:
             cbs = getattr(handle, "_done_cbs", None)
-            if cbs == "fired" or (cbs is None and self.poll(handle)):
+            if cbs == "fired":
                 fire = True
             elif cbs is None:
-                handle._done_cbs = [cb]
-
-                def _watch():
-                    try:
-                        self.collect(handle)
-                    except Exception:       # noqa: BLE001 — errored == resolved
-                        pass
-                    with self._cb_lock:
-                        pending = handle._done_cbs
-                        handle._done_cbs = "fired"
-                    for fn in pending:
-                        fn(handle)
-
-                threading.Thread(target=_watch, name="jax-done-watch",
-                                 daemon=True).start()
+                if self.poll(handle):
+                    handle._done_cbs = "fired"
+                    fire = True
+                else:
+                    handle._done_cbs = [cb]
+                    threading.Thread(target=self._watch, args=(handle,),
+                                     name="jax-done-watch",
+                                     daemon=True).start()
             else:
                 cbs.append(cb)
         if fire:
             cb(handle)
+
+    def _watch(self, handle: CapturedRun) -> None:
+        try:
+            self.collect(handle)
+        except Exception:                   # noqa: BLE001 — errored == resolved
+            pass
+        with self._cb_lock:
+            pending = handle._done_cbs
+            handle._done_cbs = "fired"
+        for fn in pending:
+            try:
+                fn(handle)
+            except Exception:               # noqa: BLE001 — one bad callback
+                import traceback            # must not starve the others
+                traceback.print_exc()
 
     def wait(self, handles, timeout=None):
         # Python-level work already ran at submit; only device computation

@@ -8,6 +8,13 @@ paper's semantics ("future() blocks until one of the workers is available").
 
 Immediate conditions are supported live: the worker thread pushes progress
 events onto a queue the parent drains at resolved()/value().
+
+Worker threads are *reused*: a thread that finishes a body parks on the
+dispatch queue and serves the next handle, spawning only when every live
+worker is busy (same cached-executor discipline as the continuation pool).
+Idle workers retire after a short grace, so a quiet plan("threads") holds
+no threads at all — and a tight future/value loop stops paying a thread
+spawn per future.
 """
 
 from __future__ import annotations
@@ -43,6 +50,11 @@ class ThreadBackend(SlotCounterMixin, EventWaitMixin, Backend):
     # the slot-free continuation pool, which preserves the old liveness
     # guarantee while still bounding and reusing threads.
 
+    #: how long a worker thread lingers on the dispatch queue before
+    #: retiring; long enough to be reused across back-to-back futures,
+    #: short enough that a quiet backend holds no threads
+    _IDLE_GRACE_S = 2.0
+
     def __init__(self, workers: int | None = None):
         from ..planning import available_cores
         self._n = int(workers) if workers else available_cores()
@@ -52,6 +64,12 @@ class ThreadBackend(SlotCounterMixin, EventWaitMixin, Backend):
         self._nested = plan_mod.nested_stack()
         self._init_wait()
         self._open = True
+        # cached worker pool (see module docstring): handles flow through
+        # _queue; _idle/_pending decide whether a submit must spawn
+        self._queue: queue.SimpleQueue[_Handle] = queue.SimpleQueue()
+        self._pool_lock = threading.Lock()
+        self._idle = 0
+        self._pending = 0
 
     def submit(self, task: TaskSpec) -> _Handle:
         self._acquire_slot()             # paper semantics: block for a worker
@@ -64,10 +82,36 @@ class ThreadBackend(SlotCounterMixin, EventWaitMixin, Backend):
 
     def _start(self, task: TaskSpec) -> _Handle:
         handle = _Handle(task)
-        th = threading.Thread(target=self._worker, args=(handle,),
-                              name=f"future-{task.task_id}", daemon=True)
-        th.start()
+        with self._pool_lock:
+            self._pending += 1
+            spawn = self._pending > self._idle
+        self._queue.put(handle)
+        if spawn:
+            threading.Thread(target=self._drain, name="threads-worker",
+                             daemon=True).start()
         return handle
+
+    def _drain(self) -> None:
+        while True:
+            with self._pool_lock:
+                self._idle += 1
+            try:
+                handle = self._queue.get(timeout=self._IDLE_GRACE_S)
+            except queue.Empty:
+                with self._pool_lock:
+                    self._idle -= 1
+                    if self._pending == 0:
+                        return           # truly quiet: retire
+                # a _start() saw us idle in the instant our grace expired
+                # and skipped the spawn — its handle is enqueued with no
+                # other worker committed to it, so loop and claim it (the
+                # lock orders the two: either we see its pending increment
+                # here, or it sees our idle decrement and spawns)
+                continue
+            with self._pool_lock:
+                self._idle -= 1
+                self._pending -= 1
+            self._worker(handle)
 
     def _worker(self, handle: _Handle) -> None:
         task = handle.task

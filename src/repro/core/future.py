@@ -28,6 +28,12 @@ select loop). Two layers build on that one kernel:
   :func:`wait_any` multiplex any number of futures *across any mix of
   backends* through one :class:`Waiter` (one callback registration per
   future, one condition variable) — a single event wait, no polling slices;
+* **cooperative (asyncio) collection** — ``await f`` suspends the calling
+  coroutine instead of blocking its thread (:meth:`Future.__await__`,
+  bridged off the same callback kernel via ``call_soon_threadsafe``);
+  :class:`AsyncWaiter` / :func:`as_completed_async` are the loop-native
+  analogues of :class:`Waiter` / :func:`as_completed` — any mix of
+  backends, one event wait, zero parked threads per awaited future;
 * **continuation combinators** — ``Future.then(fn)`` (chain, monadic:
   a returned ``Future`` is flattened), ``Future.map(fn)`` (plain
   transform), ``Future.recover(fn)`` / ``Future.fallback(other)`` (error
@@ -40,6 +46,7 @@ select loop). Two layers build on that one kernel:
 
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 import inspect
 import itertools
@@ -47,7 +54,7 @@ import threading
 import time
 import traceback
 import weakref
-from typing import Any, Callable, Iterable, Iterator, Sequence
+from typing import Any, AsyncIterator, Callable, Iterable, Iterator, Sequence
 
 from . import planning as plan_mod
 from .backends.base import (Backend, CompletionHandle, EventWaitMixin,
@@ -496,6 +503,28 @@ class Future:
             raise self._run.error
         return self._run.value
 
+    def __await__(self):
+        """``await f`` ≡ ``value(f)``, suspending the awaiting coroutine
+        instead of blocking its thread: completion is bridged off
+        ``add_done_callback`` into the awaiting loop via
+        ``call_soon_threadsafe`` — no thread parks per await, on any
+        backend. Relays once and re-raises the error at every await, like
+        ``value()``."""
+        if self._state == _CREATED:
+            self._submit()
+        if self._state != _COLLECTED and not self._backend.poll(self._handle):
+            loop = asyncio.get_running_loop()
+            done = loop.create_future()
+
+            def _wake(_h):
+                try:
+                    loop.call_soon_threadsafe(_resolve_loop_future, done)
+                except RuntimeError:
+                    pass                 # awaiting loop already closed
+            self._backend.add_done_callback(self._handle, _wake)
+            yield from done.__await__()
+        return self.value()
+
     # -- continuation combinators ------------------------------------------------
 
     def then(self, fn: Callable[[Any], Any], *,
@@ -834,15 +863,22 @@ class Waiter:
 
     :meth:`wait` returns the futures *newly* completed since the previous
     call (each registered future is delivered exactly once across the
-    waiter's lifetime); :meth:`add` registers more futures mid-collection
-    (retries, speculative duplicates). Lazy futures are launched at
-    registration.
+    waiter's lifetime — re-``add()``-ing an already-delivered future is a
+    no-op, enforced by a tombstone on its id); :meth:`add` registers more
+    futures mid-collection (retries, speculative duplicates). Lazy futures
+    are launched at registration.
     """
 
     def __init__(self, fs: Iterable[Future] = ()):
         self._cv = threading.Condition()
         self._fresh: list[Future] = []
         self._known: dict[int, Future] = {}      # strong refs keep ids unique
+        # delivered ids -> weakref of the delivered future: a tombstone that
+        # makes late re-registration a silent no-op instead of a double
+        # delivery. Weak, so tombstones never pin collected futures; the
+        # weakref also disambiguates id reuse (a dead referent means the id
+        # now names a different, never-delivered future).
+        self._delivered: dict[int, weakref.ref] = {}
         for f in fs:
             self.add(f)
 
@@ -852,6 +888,11 @@ class Waiter:
     def add(self, f: Future) -> None:
         if id(f) in self._known:
             return
+        tomb = self._delivered.get(id(f))
+        if tomb is not None:
+            if tomb() is f:
+                return                   # already delivered: no re-delivery
+            del self._delivered[id(f)]   # stale tombstone: id was reused
         self._known[id(f)] = f
         # The registered callback outlives short-lived waiters (handles keep
         # their callback list until completion), so it must not pin the
@@ -875,9 +916,9 @@ class Waiter:
 
         Delivered futures are dropped from the waiter's registry: the
         waiter no longer pins them (or their collected runs) for the rest
-        of a long collection loop. Re-``add()``-ing a future *after* it was
-        delivered would deliver it again — callers register each future
-        once, before or during collection, never after its delivery.
+        of a long collection loop. Their ids stay behind as (weak)
+        tombstones, so re-``add()``-ing an already-delivered future is a
+        no-op rather than a re-delivery.
         """
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cv:
@@ -892,7 +933,118 @@ class Waiter:
             fresh, self._fresh = self._fresh, []
             for f in fresh:
                 self._known.pop(id(f), None)
+                self._delivered[id(f)] = weakref.ref(f)
             return fresh
+
+
+def _resolve_loop_future(fut: "asyncio.Future") -> None:
+    """Resolve an asyncio future from its own loop (the far end of a
+    ``call_soon_threadsafe`` bridge); a no-op if the awaiter was cancelled
+    or already woken."""
+    if not fut.done():
+        fut.set_result(None)
+
+
+class AsyncWaiter:
+    """Loop-native :class:`Waiter`: the same completion multiplexer, but
+    delivery is marshalled into the constructing coroutine's event loop
+    (``call_soon_threadsafe``) and :meth:`wait` is a coroutine parking on an
+    ``asyncio.Event`` instead of a condition variable — ``async for`` over
+    thousands of in-flight futures costs zero blocked threads.
+
+    Semantics mirror :class:`Waiter` exactly: one callback registration per
+    future on any mix of backends, each future delivered exactly once,
+    delivered futures un-pinned (weak tombstones make late re-``add()`` a
+    no-op), lazy futures launched at registration. Must be constructed
+    inside a running event loop.
+    """
+
+    def __init__(self, fs: Iterable[Future] = ()):
+        self._loop = asyncio.get_running_loop()
+        self._event = asyncio.Event()
+        self._fresh: list[Future] = []
+        self._known: dict[int, Future] = {}
+        self._delivered: dict[int, weakref.ref] = {}
+        for f in fs:
+            self.add(f)
+
+    def __len__(self) -> int:
+        return len(self._known)
+
+    def add(self, f: Future) -> None:
+        if id(f) in self._known:
+            return
+        tomb = self._delivered.get(id(f))
+        if tomb is not None:
+            if tomb() is f:
+                return
+            del self._delivered[id(f)]
+        self._known[id(f)] = f
+        # weak self (like Waiter): the registered callback must not pin an
+        # abandoned waiter — or, through it, every registered future
+        wref = weakref.ref(self)
+        loop = self._loop
+
+        def _fire(_h, f=f):
+            def _deliver():
+                waiter = wref()
+                if waiter is None:
+                    return
+                waiter._fresh.append(f)
+                waiter._event.set()
+            try:
+                loop.call_soon_threadsafe(_deliver)
+            except RuntimeError:
+                pass                     # loop closed: waiter is gone
+
+        f._register(_fire)
+
+    async def wait(self, timeout: "float | None" = None) -> list[Future]:
+        """Suspend until at least one registered future newly completed;
+        return those (empty only if ``timeout`` elapsed first)."""
+        if not self._fresh:
+            # single-threaded with the _deliver callbacks (same loop), so
+            # clear-then-await cannot lose a delivery
+            self._event.clear()
+            if timeout is None:
+                await self._event.wait()
+            else:
+                try:
+                    await asyncio.wait_for(self._event.wait(),
+                                           max(timeout, 0.0))
+                except asyncio.TimeoutError:
+                    return []
+        fresh, self._fresh = self._fresh, []
+        for f in fresh:
+            self._known.pop(id(f), None)
+            self._delivered[id(f)] = weakref.ref(f)
+        return fresh
+
+
+async def as_completed_async(fs, timeout: "float | None" = None
+                             ) -> AsyncIterator[Future]:
+    """``async for f in as_completed_async(fs)``: yield futures in
+    completion order without blocking the event loop — the cooperative
+    analogue of :func:`as_completed`, usable from inside a running loop on
+    any mix of backends. Raises ``TimeoutError`` if ``timeout`` elapses
+    with futures still pending."""
+    waiter = AsyncWaiter(_flatten_futures(fs))
+    left = len(waiter)
+    deadline = None if timeout is None else time.monotonic() + timeout
+    while left:
+        remaining = None
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"{left} futures unresolved after {timeout}s")
+        got = await waiter.wait(remaining)
+        if not got:
+            raise TimeoutError(
+                f"{left} futures unresolved after {timeout}s")
+        for f in got:
+            left -= 1
+            yield f
 
 
 def wait_any(fs: Sequence[Future], timeout: "float | None" = None
@@ -926,8 +1078,11 @@ def resolve(fs, timeout: "float | None" = None):
 
     Accepts a single future, an iterable, or a dict of futures; lazy futures
     are launched. Values are *not* collected and nothing is relayed — use
-    ``value()`` for that. With ``timeout=``, returns once the deadline
-    passes even if some futures are still pending. Returns ``fs``.
+    ``value()`` for that. Returns ``fs`` with everything resolved; if
+    ``timeout=`` elapses with futures still pending, raises ``TimeoutError``
+    (like :func:`as_completed` and ``value(timeout=)``) — it used to return
+    ``fs`` indistinguishably from success, forcing callers to re-scan
+    ``resolved()`` themselves.
     """
     waiter = Waiter(_flatten_futures(fs))
     left = len(waiter)
@@ -937,10 +1092,12 @@ def resolve(fs, timeout: "float | None" = None):
         if deadline is not None:
             remaining = deadline - time.monotonic()
             if remaining <= 0:
-                return fs
+                raise TimeoutError(
+                    f"{left} futures unresolved after {timeout}s")
         got = waiter.wait(remaining)
         if not got and deadline is not None:
-            return fs
+            raise TimeoutError(
+                f"{left} futures unresolved after {timeout}s")
         left -= len(got)
     return fs
 
@@ -1129,5 +1286,6 @@ def merge(futures: Sequence[Future], *, label: str | None = None) -> Future:
 
 
 __all__ = ["Future", "future", "value", "resolved", "resolve",
-           "as_completed", "wait_any", "merge", "gather", "first",
-           "first_successful", "Waiter", "FutureError"]
+           "as_completed", "as_completed_async", "wait_any", "merge",
+           "gather", "first", "first_successful", "Waiter", "AsyncWaiter",
+           "FutureError"]

@@ -180,7 +180,11 @@ _lock = threading.RLock()
 #: parked backends, key -> Backend (insertion-ordered for LRU eviction)
 _WARM_POOL: "dict[tuple, Backend]" = {}
 _WARM_POOL_MAX = int(os.environ.get("REPRO_WARM_POOL_MAX", "3"))
-#: backends worth keeping warm (expensive worker startup)
+#: backends worth keeping warm (expensive worker startup). Deliberately
+#: excludes the in-process backends — threads are cheap to respawn, and the
+#: asyncio backend's whole cost is one event-loop thread: parking a live
+#: loop (with its pending-task drain on shutdown) buys nothing over a cold
+#: start, so plan() swaps shut it down instead.
 _POOLABLE = ("processes", "cluster")
 
 

@@ -57,15 +57,16 @@ After a terminal runs, ``.stats`` on the terminal stream records
 
 from __future__ import annotations
 
+import asyncio
 import collections
 import dataclasses
 import itertools
-from typing import Any, Callable, Iterable, Iterator
+from typing import Any, AsyncIterator, Callable, Iterable, Iterator
 
 from . import planning as plan_mod
 from . import rng as rng_mod
 from .errors import FutureError
-from .future import Future, Waiter, _accepts_kwarg, future
+from .future import AsyncWaiter, Future, Waiter, _accepts_kwarg, future
 
 _MISSING = object()
 
@@ -130,10 +131,19 @@ def _chunked(it: Iterator, op: _MapOp) -> Iterator:
 def _chunk_runner(op: _MapOp) -> Callable:
     """The shipped chunk body — identical to ``future_map``'s: applies
     each (possibly fused) stage's ``fn`` per element, passing the
-    element's per-stage stream key when that stage declared one."""
+    element's per-stage stream key when that stage declared one.
+
+    ``async def`` map fns are supported on backends that drive awaitable
+    bodies (``plan("asyncio")``): when any element produced an awaitable,
+    the chunk returns one coroutine resolving them all. Elements are
+    awaited by *delegation* (no task spawn), so the backend's segmented
+    capture covers the user coroutine's prints/conditions; chunks run
+    concurrently, elements within a chunk sequentially — keep ``chunk=1``
+    (the default) for I/O-bound async maps."""
     specs = ((op.fn, op.pass_key, op.base_index),) + op.extra
 
     def run_chunk(idx: "list[int]", items: "list", _specs=specs):
+        import inspect as _inspect
         out = []
         for i, x in zip(idx, items):
             for _fn, _pass_key, _base in _specs:
@@ -142,6 +152,11 @@ def _chunk_runner(op: _MapOp) -> Callable:
                 else:
                     x = _fn(x)
             out.append(x)
+        if any(_inspect.isawaitable(v) for v in out):
+            async def _resolve(_out=out):
+                return [await v if _inspect.isawaitable(v) else v
+                        for v in _out]
+            return _resolve()
         return out
     return run_chunk
 
@@ -292,10 +307,188 @@ def _pump(op: _MapOp, upstream: Iterator, *, max_in_flight: "int | None",
                 pass
 
 
+# --------------------------------------------------------------------------
+# The cooperative (asyncio) terminal: the same pipeline, driven from inside
+# a running event loop. Mirrors the sync stages one-for-one; the pump waits
+# on an AsyncWaiter and sleeps cooperatively where the sync pump would park
+# the thread, so `async for v in s.as_completed_async()` never blocks the
+# loop while futures are in flight.
+# --------------------------------------------------------------------------
+
+async def _to_async(source) -> AsyncIterator:
+    """Adapt any (a)iterable into an async iterator (sync sources are
+    pulled inline, like the sync pipeline pulls them)."""
+    if hasattr(source, "__aiter__"):
+        async for x in source:
+            yield x
+    else:
+        for x in source:
+            yield x
+
+
+async def _afiltered(ait: AsyncIterator, pred: Callable) -> AsyncIterator:
+    async for x in ait:
+        if pred(x):
+            yield x
+
+
+async def _abatched(ait: AsyncIterator, n: int) -> AsyncIterator:
+    group: list = []
+    async for x in ait:
+        group.append(x)
+        if len(group) >= n:
+            yield group
+            group = []
+    if group:
+        yield group
+
+
+async def _achunked(ait: AsyncIterator, op: _MapOp) -> AsyncIterator:
+    """Async mirror of :func:`_chunked`: same chunk plan, same consecutive
+    element indices (the per-element RNG coordinate)."""
+    if op.chunk_sizes:
+        sizes: Iterator[int] = itertools.chain(
+            op.chunk_sizes, itertools.repeat(op.chunk_sizes[-1]))
+    else:
+        sizes = itertools.repeat(op.chunk)
+    idx = 0
+    items: list = []
+    size = max(int(next(sizes)), 1)
+    async for x in ait:
+        items.append(x)
+        if len(items) >= size:
+            yield (list(range(idx, idx + len(items))), items)
+            idx += len(items)
+            items = []
+            size = max(int(next(sizes)), 1)
+    if items:
+        yield (list(range(idx, idx + len(items))), items)
+
+
+async def _pump_async(op: _MapOp, upstream: AsyncIterator, *,
+                      max_in_flight: "int | None",
+                      max_in_flight_bytes: "int | None" = None,
+                      ordered: bool, stats: dict) -> AsyncIterator:
+    """The streaming dispatch loop for one ``.map`` stage, loop-native:
+    identical admission/harvest/retry/cancellation structure to
+    :func:`_pump`, with the thread-blocking points made cooperative
+    (AsyncWaiter instead of Waiter; a cooperative re-offer loop instead of
+    the one blocking ``submit``)."""
+    backend = plan_mod.active_backend()
+    mif = max_in_flight if max_in_flight is not None \
+        else 2 * max(backend.workers, 1)
+    mif = max(int(mif), 1)
+    mbytes = int(max_in_flight_bytes) if max_in_flight_bytes else None
+    stats["max_in_flight"] = mif
+    stats["max_in_flight_bytes"] = mbytes
+    run_chunk = _chunk_runner(op)
+
+    def make(cid: int, idx: list, items: list, tries: int) -> Future:
+        return future(run_chunk, idx, items,
+                      seed=op.seed if op.seed_declared else None,
+                      lazy=True,
+                      label=f"{op.label}[{cid}]" if tries == 0
+                      else f"{op.label}-retry")
+
+    chunk_ait = _achunked(upstream, op)
+    queue: "collections.deque" = collections.deque()
+    pending: "dict[Future, tuple]" = {}
+    in_bytes = 0
+    done_buf: "dict[int, list]" = {}
+    emit: "collections.deque" = collections.deque()
+    waiter = AsyncWaiter()
+    src_done = False
+    cid_seq = 0
+    emit_id = 0
+    try:
+        while True:
+            # 1. emit everything ready
+            if ordered:
+                while emit_id in done_buf:
+                    for v in done_buf.pop(emit_id):
+                        yield v
+                    emit_id += 1
+            else:
+                while emit:
+                    yield emit.popleft()
+            # 2. refill from upstream (same O(in-flight) bound as _pump)
+            while (not src_done
+                   and len(queue) + len(pending) + len(done_buf) < mif
+                   and (mbytes is None or in_bytes <= 0
+                        or in_bytes < mbytes)):
+                try:
+                    batch = await chunk_ait.__anext__()
+                except StopAsyncIteration:
+                    src_done = True
+                    break
+                idx, items = batch
+                nbytes = sum(_est_nbytes(x) for x in items) \
+                    if mbytes is not None else 0
+                in_bytes += nbytes
+                queue.append((make(cid_seq, idx, items, 0),
+                              cid_seq, idx, items, 0, nbytes))
+                cid_seq += 1
+            # 3. admission-controlled dispatch; the progress-guarantee
+            #    submit (nothing in flight) becomes a cooperative
+            #    re-offer loop — never park the event loop in submit()
+            contended = False
+            while queue:
+                rec = queue[0]
+                if pending:
+                    if not rec[0]._submit_nowait():
+                        contended = True
+                        break
+                else:
+                    while not rec[0]._submit_nowait():
+                        await asyncio.sleep(_CONTENTION_WAIT_S)
+                queue.popleft()
+                pending[rec[0]] = rec
+                waiter.add(rec[0])
+                stats["dispatched"] = stats.get("dispatched", 0) + 1
+                stats["peak_in_flight"] = max(
+                    stats.get("peak_in_flight", 0), len(pending))
+                stats["peak_in_flight_bytes"] = max(
+                    stats.get("peak_in_flight_bytes", 0), in_bytes)
+            if not pending:
+                if src_done and not queue and not done_buf and not emit:
+                    return
+                continue
+            # 4. suspend until a completion is marshalled into this loop
+            got = await waiter.wait(_CONTENTION_WAIT_S
+                                    if contended and queue else None)
+            # 5. harvest in completion order; FutureError -> re-dispatch
+            for f in got:
+                _, cid, idx, items, tries, nbytes = pending.pop(f)
+                try:
+                    vals = f.value()
+                except FutureError:
+                    if tries >= op.retries:
+                        raise
+                    queue.appendleft((make(cid, idx, items, tries + 1),
+                                      cid, idx, items, tries + 1, nbytes))
+                    stats["retried"] = stats.get("retried", 0) + 1
+                    continue
+                in_bytes -= nbytes
+                if ordered:
+                    done_buf[cid] = vals
+                else:
+                    emit.extend(vals)
+    finally:
+        # consumer abandoned the stream (aclose()/GeneratorExit from
+        # breaking out of `async for`) or a chunk failure is propagating:
+        # cancel the in-flight tail, exactly like the sync pump
+        for rec in itertools.chain(pending.values(), queue):
+            try:
+                rec[0].cancel()
+            except Exception:                            # noqa: BLE001
+                pass
+
+
 class Stream:
     """A lazy, chainable pipeline. Build with :func:`stream`; add stages
     with :meth:`map` / :meth:`filter` / :meth:`batch`; run with a terminal
-    (:meth:`collect`, :meth:`reduce`, :meth:`as_completed`)."""
+    (:meth:`collect`, :meth:`reduce`, :meth:`as_completed` — or, inside a
+    running event loop, :meth:`as_completed_async` / :meth:`collect_async`)."""
 
     def __init__(self, source: Iterable, *,
                  max_in_flight: "int | None" = None,
@@ -413,16 +606,53 @@ class Stream:
                 it = _batched(it, op[1])
         return it
 
+    def _run_async(self, ordered: bool) -> AsyncIterator:
+        """Async mirror of :meth:`_run`: the same fused op chain compiled
+        onto the cooperative stages — run it from inside an event loop."""
+        self.stats.clear()
+        self.stats.update({"dispatched": 0, "retried": 0,
+                           "peak_in_flight": 0, "max_in_flight": None,
+                           "peak_in_flight_bytes": 0,
+                           "max_in_flight_bytes": None})
+        ait: AsyncIterator = _to_async(self._source)
+        ops = self._fuse(self._ops)
+        maps = [i for i, o in enumerate(ops) if isinstance(o, _MapOp)]
+        last_map = maps[-1] if maps else None
+        for i, op in enumerate(ops):
+            if isinstance(op, _MapOp):
+                ait = _pump_async(op, ait, max_in_flight=self._max_in_flight,
+                                  max_in_flight_bytes=self._max_in_flight_bytes,
+                                  ordered=ordered or i != last_map,
+                                  stats=self.stats)
+            elif op[0] == "filter":
+                ait = _afiltered(ait, op[1])
+            elif op[0] == "batch":
+                ait = _abatched(ait, op[1])
+        return ait
+
     def collect(self, ordered: bool = True) -> list:
         """Run the pipeline to a list — input order by default,
         completion order with ``ordered=False``."""
         return list(self._run(ordered=ordered))
+
+    async def collect_async(self, ordered: bool = True) -> list:
+        """``collect()`` for coroutines: awaitable, never blocks the
+        calling event loop while futures are in flight."""
+        return [v async for v in self._run_async(ordered=ordered)]
 
     def as_completed(self) -> Iterator:
         """Iterate results in completion order, streaming: O(in-flight)
         memory, safe over unbounded sources (breaking out cancels the
         in-flight tail)."""
         return self._run(ordered=False)
+
+    def as_completed_async(self) -> AsyncIterator:
+        """``async for v in s.as_completed_async()``: completion-order
+        results inside a running event loop — same O(in-flight) memory and
+        backpressure as :meth:`as_completed`, with every wait cooperative
+        (the loop stays responsive while chunks are in flight; breaking
+        out / ``aclose()`` cancels the in-flight tail)."""
+        return self._run_async(ordered=False)
 
     def reduce(self, op: Callable, init: Any = _MISSING) -> Any:
         """Fold results *as they complete* (lowest memory, lowest latency;

@@ -32,6 +32,10 @@ def pytest_configure(config):
         "markers",
         "lineage: lineage reconstruction / replication tests (select "
         "with '-m lineage')")
+    config.addinivalue_line(
+        "markers",
+        "asyncio: cooperative-frontend tests (await/async-for surface and "
+        "the event-loop backend; select with '-m asyncio')")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1,0 +1,391 @@
+"""Cooperative (asyncio) frontend tests: ``await f``, ``async for`` over
+completions, the event-loop backend, and the completion-kernel bugfixes
+that shipped with it (thread reuse, waiter tombstones, resolve timeout,
+jax_async callback race, abandonment cleanup).
+
+pytest-asyncio is deliberately not a dependency: every test is a sync
+function driving its coroutine with ``asyncio.run`` — what a library user
+without the plugin would write.
+"""
+
+import asyncio
+import gc
+import threading
+import time
+import weakref
+
+import pytest
+
+import repro.core as rc
+from repro.core import (FutureCancelledError, Waiter, as_completed,
+                        as_completed_async, future, resolve, stream, value)
+from repro.core.planning import active_backend
+
+pytestmark = pytest.mark.asyncio
+
+
+@pytest.fixture
+def aio_backend():
+    rc.plan("asyncio")
+    yield active_backend()
+    rc.shutdown()
+
+
+@pytest.fixture
+def threads_backend():
+    rc.plan("threads", workers=4)
+    yield active_backend()
+    rc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# await f — works on every backend, not just plan("asyncio")
+# --------------------------------------------------------------------------
+
+def test_await_returns_value_on_thread_backend(threads_backend):
+    async def main():
+        f = future(lambda: time.sleep(0.05) or 21)
+        return await f
+    assert asyncio.run(main()) == 21
+
+
+def test_await_reraises_error_every_await(threads_backend):
+    async def main():
+        f = future(lambda: 1 / 0)
+        with pytest.raises(ZeroDivisionError):
+            await f
+        with pytest.raises(ZeroDivisionError):
+            await f                      # errors re-raise on every await
+    asyncio.run(main())
+
+
+def test_await_relays_stdout_and_value(aio_backend, capsys):
+    async def body():
+        print("before-sleep")
+        await asyncio.sleep(0.01)
+        print("after-sleep")
+        return 7
+
+    async def main():
+        return await future(body)
+
+    assert asyncio.run(main()) == 7
+    out = capsys.readouterr().out
+    assert out.index("before-sleep") < out.index("after-sleep")
+
+
+def test_await_already_resolved_future(threads_backend):
+    f = future(lambda: 5)
+    assert value(f) == 5
+
+    async def main():
+        return await f                   # fast path: no callback registration
+    assert asyncio.run(main()) == 5
+
+
+# --------------------------------------------------------------------------
+# plan("asyncio"): async bodies share one loop, no thread parked per future
+# --------------------------------------------------------------------------
+
+def test_async_bodies_run_concurrently(aio_backend):
+    async def body(i):
+        await asyncio.sleep(0.2)
+        return i
+
+    async def main():
+        fs = [future(body, i) for i in range(20)]
+        return [await f for f in fs]
+
+    t0 = time.monotonic()
+    assert asyncio.run(main()) == list(range(20))
+    # 20 x 0.2s of sleep overlapped on one loop: far below the 4s serial wall
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_no_thread_per_inflight_future(aio_backend):
+    async def body():
+        await asyncio.sleep(0.3)
+        return 1
+
+    async def main():
+        fs = [future(body) for _ in range(500)]
+        peak = threading.active_count()
+        vals = [await f for f in fs]
+        return peak, vals
+
+    peak, vals = asyncio.run(main())
+    assert vals == [1] * 500
+    # 500 in-flight futures but only the backend loop thread (plus pytest's
+    # own few) — nothing remotely like a thread per future
+    assert peak < 20
+
+
+def test_sync_bodies_work_on_asyncio_backend(aio_backend):
+    fs = [future(lambda i=i: i * i) for i in range(8)]
+    assert value(fs) == [i * i for i in range(8)]
+
+
+def test_cancel_runs_async_finally_and_raises(aio_backend):
+    cleaned = threading.Event()
+
+    async def body():
+        try:
+            await asyncio.sleep(30)
+        finally:
+            cleaned.set()
+
+    f = future(body)
+    time.sleep(0.1)                      # let the body reach its await
+    f.cancel()
+    with pytest.raises(FutureCancelledError):
+        value(f)
+    assert cleaned.is_set()              # cancellation was thrown *into* the body
+
+
+def test_blocking_value_on_loop_thread_raises(aio_backend):
+    async def slow():
+        await asyncio.sleep(30)
+
+    f_slow = future(slow)
+
+    def bad_body():
+        return f_slow.value()            # blocking wait on the loop thread
+
+    f = future(bad_body)
+    with pytest.raises(RuntimeError, match="deadlock"):
+        value(f)
+    f_slow.cancel()
+
+
+# --------------------------------------------------------------------------
+# as_completed_async / AsyncWaiter
+# --------------------------------------------------------------------------
+
+def test_as_completed_async_yields_in_completion_order(threads_backend):
+    async def main():
+        slow = future(lambda: time.sleep(0.3) or "slow")
+        fast = future(lambda: "fast")
+        order = []
+        async for f in as_completed_async([slow, fast]):
+            order.append(await f)
+        return order
+    assert asyncio.run(main()) == ["fast", "slow"]
+
+
+def test_as_completed_async_timeout(threads_backend):
+    async def main():
+        f = future(lambda: time.sleep(5))
+        with pytest.raises(TimeoutError):
+            async for _ in as_completed_async([f], timeout=0.1):
+                pass
+        f.cancel()
+    asyncio.run(main())
+
+
+def test_as_completed_async_on_asyncio_backend(aio_backend):
+    async def body(i):
+        await asyncio.sleep(0.01 * (5 - i))
+        return i
+
+    async def main():
+        fs = [future(body, i) for i in range(5)]
+        return [await f async for f in as_completed_async(fs)]
+
+    # later-indexed futures sleep less, so completion order is reversed
+    assert asyncio.run(main()) == [4, 3, 2, 1, 0]
+
+
+# --------------------------------------------------------------------------
+# stream async terminals
+# --------------------------------------------------------------------------
+
+def test_stream_collect_async(aio_backend):
+    async def main():
+        return await (stream(iter(range(10)))
+                      .filter(lambda v: v % 2 == 0)
+                      .map(lambda v: v * 10)
+                      .collect_async())
+    assert asyncio.run(main()) == [0, 20, 40, 60, 80]
+
+
+def test_stream_async_map_fn(aio_backend):
+    async def double(v):
+        await asyncio.sleep(0.01)
+        return v * 2
+
+    async def main():
+        return await stream(iter(range(6))).map(double, chunk=2).collect_async()
+    assert asyncio.run(main()) == [0, 2, 4, 6, 8, 10]
+
+
+def test_stream_as_completed_async_unordered(aio_backend):
+    async def jitter(v):
+        await asyncio.sleep(0.005 * (v % 3))
+        return v
+
+    async def main():
+        got = []
+        async for v in stream(iter(range(12))).map(jitter).as_completed_async():
+            got.append(v)
+        return got
+
+    assert sorted(asyncio.run(main())) == list(range(12))
+
+
+def test_stream_async_terminal_on_thread_backend(threads_backend):
+    async def main():
+        return await stream(iter(range(8))).map(lambda v: v + 100).collect_async()
+    assert asyncio.run(main()) == list(range(100, 108))
+
+
+def test_stream_async_abandonment_releases_slots(aio_backend):
+    cap = active_backend().workers
+
+    async def slow(v):
+        await asyncio.sleep(0.5)
+        return v
+
+    async def main():
+        agen = stream(iter(range(40))).map(slow).as_completed_async()
+        async for _ in agen:
+            break                        # abandon with ~39 futures in flight
+        await agen.aclose()
+        deadline = time.monotonic() + 5
+        be = active_backend()
+        while be.free_slots() != cap and time.monotonic() < deadline:
+            await asyncio.sleep(0.02)
+        return be.free_slots()
+
+    assert asyncio.run(main()) == cap    # in-flight tail was cancelled
+
+
+# --------------------------------------------------------------------------
+# S5: generator abandonment must not leak callbacks or pin futures
+# --------------------------------------------------------------------------
+
+def test_abandoned_as_completed_does_not_pin_futures(threads_backend):
+    fs = [future(lambda i=i: time.sleep(0.02) or i) for i in range(6)]
+    refs = [weakref.ref(f) for f in fs]
+    gen = as_completed(fs)
+    next(gen)                            # consume one, abandon the rest
+    gen.close()
+    resolve(fs)                          # let every body finish first
+    del gen, fs
+    gc.collect()
+    assert all(r() is None for r in refs)
+
+
+def test_abandoned_as_completed_async_does_not_pin_futures(threads_backend):
+    refs = []
+
+    async def main():
+        fs = [future(lambda i=i: time.sleep(0.02) or i) for i in range(6)]
+        refs.extend(weakref.ref(f) for f in fs)
+        agen = as_completed_async(fs)
+        await agen.__anext__()
+        await agen.aclose()
+        resolve(fs)
+
+    asyncio.run(main())
+    gc.collect()
+    assert all(r() is None for r in refs)
+
+
+# --------------------------------------------------------------------------
+# S1: thread backend reuses idle workers
+# --------------------------------------------------------------------------
+
+def test_thread_backend_reuses_idle_worker(threads_backend):
+    be = threads_backend
+    idents = []
+    for _ in range(5):
+        idents.append(value(future(threading.get_ident)))
+        # wait until the worker has parked back on the dispatch queue, so
+        # the next submit must claim it instead of spawning
+        deadline = time.monotonic() + 2
+        while be._idle < 1 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert be._idle >= 1
+    assert len(set(idents)) == 1
+
+
+def test_thread_backend_concurrency_unchanged(threads_backend):
+    t0 = time.monotonic()
+    fs = [future(lambda: time.sleep(0.2) or 1) for _ in range(4)]
+    assert value(fs) == [1] * 4
+    assert time.monotonic() - t0 < 0.8   # 4 bodies overlapped on 4 workers
+
+
+# --------------------------------------------------------------------------
+# S2: Waiter.add() after delivery is a no-op (tombstones)
+# --------------------------------------------------------------------------
+
+def test_waiter_readd_after_delivery_is_noop(threads_backend):
+    f = future(lambda: 3)
+    w = Waiter([f])
+    got = w.wait(timeout=5)
+    assert got == [f]
+    w.add(f)                             # must not re-deliver
+    assert w.wait(timeout=0.2) == []
+
+
+def test_waiter_tombstones_do_not_pin(threads_backend):
+    f = future(lambda: 3)
+    ref = weakref.ref(f)
+    w = Waiter([f])
+    assert w.wait(timeout=5) == [f]
+    del f
+    gc.collect()
+    assert ref() is None                 # tombstone is weak
+    assert len(w) == 0
+
+
+# --------------------------------------------------------------------------
+# S3: resolve(timeout=) now raises instead of returning indistinguishably
+# --------------------------------------------------------------------------
+
+def test_resolve_timeout_raises_and_future_stays_valid(threads_backend):
+    f = future(lambda: time.sleep(0.3) or 9)
+    with pytest.raises(TimeoutError):
+        resolve([f], timeout=0.05)
+    assert value(f) == 9                 # still collectable afterwards
+
+
+# --------------------------------------------------------------------------
+# S4: jax_async add_done_callback under registration/completion races
+# --------------------------------------------------------------------------
+
+def test_jax_async_callback_exactly_once_under_races():
+    jax = pytest.importorskip("jax")
+    jnp = jax.numpy
+    rc.plan("jax_async")
+    try:
+        be = active_backend()
+        for _ in range(30):
+            f = future(lambda: jnp.arange(16).sum())
+            fired = []
+            lock = threading.Lock()
+
+            def register(k, _f=f, _fired=fired, _lock=lock):
+                def cb(_h, _k=k):
+                    with _lock:
+                        _fired.append(_k)
+                be.add_done_callback(_f._handle, cb)
+
+            ts = [threading.Thread(target=register, args=(k,))
+                  for k in range(4)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            deadline = time.monotonic() + 5
+            while time.monotonic() < deadline:
+                with lock:
+                    if len(fired) >= 4:
+                        break
+                time.sleep(0.001)
+            with lock:
+                assert sorted(fired) == [0, 1, 2, 3]   # each exactly once
+            assert int(value(f)) == 120
+    finally:
+        rc.shutdown()

@@ -244,11 +244,14 @@ def test_resolve_blocks_until_all(cluster):
     assert all(f.resolved() for f in fs)
 
 
-def test_resolve_timeout_returns_early():
+def test_resolve_timeout_raises():
+    """The timeout path is distinguishable from completion: it raises
+    TimeoutError (it used to return fs either way)."""
     rc.plan("threads", workers=2)
     f = future(lambda: time.sleep(5.0))
     t0 = time.time()
-    resolve([f], timeout=0.1)
+    with pytest.raises(TimeoutError):
+        resolve([f], timeout=0.1)
     assert time.time() - t0 < 2.0
     assert not f.resolved()
 

@@ -25,6 +25,10 @@ BACKENDS = [
     # surface must hold on *launched* workers, not just pre-connected ones
     ("cluster+local-launcher", "cluster", {"hosts": 2}),
     ("jax_async", "jax_async", {}),
+    # the cooperative event-loop backend: sync bodies run as one segment on
+    # the loop thread, async bodies are driven segment-by-segment — the full
+    # relay/RNG/error surface must be indistinguishable from the others
+    ("asyncio", "asyncio", {}),
 ]
 
 IDS = [b[0] for b in BACKENDS]

@@ -141,11 +141,17 @@ def test_first_cancels_losers_cluster():
 
 
 def test_first_cancel_attempted_on_threads_losers():
+    import threading
     rc.plan("threads", workers=2)
+    started = threading.Event()
+    slow = future(lambda: started.set() or time.sleep(0.3) or "loser")
+    assert started.wait(5)
+    # the loser is *running* when first() cancels it: threads cannot kill
+    # a running body, so it still completes. (A loser still queued for a
+    # pooled worker may instead be genuinely cancelled before starting —
+    # hence the explicit started barrier.)
     fast = future(lambda: "winner")
-    slow = future(lambda: time.sleep(0.3) or "loser")
     assert value(first([fast, slow])) == "winner"
-    # threads cannot kill a running body; the loser still completes
     assert value(slow) == "loser"
 
 
