@@ -786,6 +786,119 @@ def bench_async_concurrency(quick: bool = False) -> None:
     _CLUSTER_JSON["bench_async_concurrency"] = rows
 
 
+# --------------------------------------------------------------------------
+# serving tier: TLS tax and fair-share dispatch under tenant contention
+# --------------------------------------------------------------------------
+
+def bench_tls_overhead(quick: bool = False) -> None:
+    """What the transport-security preamble costs: the same future
+    round-trip and a bulk payload ship over a plaintext cluster vs one
+    with TLS (TLSv1.2+, self-signed) + token handshake on every socket.
+    The handshake is per-connection (amortized over the session); the
+    per-frame cost is the symmetric-cipher copy in the kernel/OpenSSL."""
+    import tempfile
+
+    from repro.core.backends.transport import generate_self_signed_cert
+
+    tls_cfg = generate_self_signed_cert(
+        tempfile.mkdtemp(prefix="repro-bench-tls-"))
+    n = 8 if quick else 30
+    blob = np.sin(np.arange(1 << (18 if quick else 20), dtype=np.float32))
+    rows: dict = {"payload_kib": blob.nbytes / 1024}
+    for label, kw in (("plain", {}),
+                      ("tls", {"token": "bench-secret", "tls": tls_cfg})):
+        rc.plan("cluster", workers=2, **kw)
+        us = _timeit(lambda: rc.value(rc.future(lambda: 42)), n, warmup=2)
+        _row(f"tls/{label}_small", us, "future()+value(), empty payload")
+        rows[f"us_per_future_{label}"] = us
+        us_bulk = _timeit(
+            lambda: rc.value(rc.future(lambda b=blob: float(b[0]))),
+            max(3, n // 3), warmup=1)
+        _row(f"tls/{label}_bulk", us_bulk,
+             f"{_fmt_kib(blob.nbytes / 1024)} captured global shipped")
+        rows[f"us_bulk_{label}"] = us_bulk
+        rc.shutdown()
+    rc.plan("sequential")
+    rows["tls_penalty_us"] = (rows["us_per_future_tls"]
+                              - rows["us_per_future_plain"])
+    rows["tls_bulk_penalty_x"] = (rows["us_bulk_tls"]
+                                  / max(rows["us_bulk_plain"], 1e-9))
+    _row("tls/penalty", rows["tls_penalty_us"],
+         f"bulk {rows['tls_bulk_penalty_x']:.2f}x of plaintext")
+    _CLUSTER_JSON["bench_tls_overhead"] = rows
+
+
+def bench_fair_share(quick: bool = False) -> None:
+    """Weighted fair-share dispatch under tenant contention, end to end
+    through the serving tier: two authenticated sessions flood one warm
+    2-worker cluster with more tasks than it can hold; the weight-3
+    tenant should own ~3/4 of the completions while both queues are
+    non-empty (FIFO checkout would give whoever submitted first the whole
+    fleet). Pins the acceptance scenario: concurrent tenant sessions on
+    one cluster with enforced shares and per-tenant attribution."""
+    from repro.core.backends.base import TaskSpec
+    from repro.core.globals_capture import dumps_robust, ship_function
+    from repro.core.serving import ServingClientBackend, serve
+
+    per_tenant = 16 if quick else 40
+    sleep_s = 0.02
+
+    def mk(tid):
+        sources: dict = {}
+        shipped = dumps_robust(
+            {"fn": ship_function(
+                lambda s=sleep_s: __import__("time").sleep(s) or True,
+                {}, (), ref_sink=sources),
+             "args": (), "kwargs": {}, "capture_stdout": False,
+             "capture_conditions": False, "seed_declared": False},
+            ref_sink=sources)
+        return TaskSpec(task_id=tid, fn=None, shipped=shipped,
+                        payload_sources=sources)
+
+    completions: list = []       # (t, tenant); list.append is atomic
+    t0 = time.perf_counter()
+    with serve({"workers": 2}, tokens={"heavy": "h", "light": "l"},
+               tenants={"heavy": {"weight": 3.0},
+                        "light": {"weight": 1.0}}) as srv:
+        clients = {name: ServingClientBackend(addr=srv.address, token=tok)
+                   for name, tok in (("heavy", "h"), ("light", "l"))}
+        handles = []
+        for name, client in clients.items():
+            for i in range(per_tenant):
+                h = client.submit(mk(i))
+                client.add_done_callback(
+                    h, lambda _h, n=name: completions.append(
+                        (time.perf_counter(), n)))
+                handles.append((client, h))
+        for client, h in handles:
+            client.collect(h)
+        wall = time.perf_counter() - t0
+        stats = {n: c.session_stats()["tenant_stats"]
+                 for n, c in clients.items()}
+        for c in clients.values():
+            c.shutdown()
+    # contention window: both tenants still queued -> first per_tenant
+    # completions (the light tenant has >= per_tenant/4 left by then)
+    window = sorted(completions)[:per_tenant]
+    heavy_share = sum(1 for _, n in window if n == "heavy") / len(window)
+    us_per_task = wall / (2 * per_tenant) * 1e6
+    _row("fair_share/heavy_share", heavy_share * 100,
+         f"weight 3:1 -> ideal 75% of completions in contention window "
+         f"({per_tenant} tasks x 2 tenants, 2 workers)")
+    _row("fair_share/us_per_task", us_per_task,
+         f"{sleep_s * 1e3:.0f}ms task bodies, serving tier end-to-end")
+    assert stats["heavy"]["completed"] == per_tenant      # attribution
+    assert stats["light"]["completed"] == per_tenant
+    _CLUSTER_JSON["bench_fair_share"] = {
+        "per_tenant": per_tenant, "sleep_s": sleep_s,
+        "heavy_share_pct": heavy_share * 100,
+        "ideal_share_pct": 75.0,
+        "us_per_task_contended": us_per_task,
+        "heavy_bytes_sent": stats["heavy"]["bytes_sent"],
+        "light_bytes_sent": stats["light"]["bytes_sent"],
+    }
+
+
 def _fmt_kib(v: float) -> str:
     return f"{v:,.0f}KiB"
 
@@ -890,6 +1003,7 @@ BENCHES = [bench_future_overhead, bench_relay_overhead, bench_rng_overhead,
            bench_dataflow_chain, bench_worker_bootstrap,
            bench_stream_throughput, bench_state_ops,
            bench_lineage_recovery, bench_async_concurrency,
+           bench_tls_overhead, bench_fair_share,
            bench_compression, bench_kernels, bench_roofline]
 
 #: the benches whose rows make up BENCH_cluster.json — `--cluster` runs
@@ -898,7 +1012,8 @@ CLUSTER_BENCHES = [bench_cluster_overhead, bench_wait_vs_poll,
                    bench_callback_latency, bench_globals_cache,
                    bench_dataflow_chain, bench_worker_bootstrap,
                    bench_stream_throughput, bench_state_ops,
-                   bench_lineage_recovery, bench_async_concurrency]
+                   bench_lineage_recovery, bench_async_concurrency,
+                   bench_tls_overhead, bench_fair_share]
 
 
 def main() -> None:

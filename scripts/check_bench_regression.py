@@ -84,6 +84,17 @@ INFO_METRICS = [
      ("bench_async_concurrency", "async_futures_per_s"), " futures/s"),
     ("async_over_threads",
      ("bench_async_concurrency", "async_over_threads"), "x"),
+    # serving tier (TLS + multi-tenant fair share): informational — the
+    # TLS tax is OpenSSL/machine-shaped, and the fair-share percentage is
+    # a correctness-shaped ratio (ideal 75%), not a latency
+    ("tls_penalty_us",
+     ("bench_tls_overhead", "tls_penalty_us")),
+    ("tls_bulk_penalty",
+     ("bench_tls_overhead", "tls_bulk_penalty_x"), "x"),
+    ("fair_share_heavy_pct",
+     ("bench_fair_share", "heavy_share_pct"), "%"),
+    ("fair_share_us_per_task",
+     ("bench_fair_share", "us_per_task_contended")),
 ]
 
 

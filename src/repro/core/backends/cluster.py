@@ -34,6 +34,26 @@ Spec kwargs (``plan("cluster", ...)`` / ``spec("cluster", ...)``):
 * ``relaunch_backoff=0.1`` / ``relaunch_backoff_cap=5.0`` /
   ``relaunch_reset_after=30.0`` — relaunch policy for launched workers
   (see below).
+* ``token=`` — shared-secret authentication: every dialing socket must
+  pass the HMAC preamble (``transport.serve_auth``) **before any frame is
+  decoded**; default is ``$REPRO_CLUSTER_TOKEN`` (empty = open listener,
+  the pre-PR-10 behaviour). Launched workers inherit the credential via
+  their environment; hand-launched ones take ``--token``.
+* ``tls=`` — transport encryption: a :class:`~.transport.TLSConfig`
+  (cert/key for the listener, optional CA pin for dialers) or ``True`` to
+  generate an ephemeral self-signed cert. The driver listener, worker
+  dials, and the worker-to-worker peer-fetch servers all wrap in TLS; the
+  cert/key PEM material and a per-backend random peer secret ride to
+  workers inside the (already authenticated) ``init`` frame.
+* ``tenants=`` — per-tenant scheduling policy for the serving tier:
+  ``{tenant: weight}`` or ``{tenant: {"weight": w, "max_in_flight": n,
+  "rate": per_s}}`` (also accepted as a tuple of pairs so the spec stays
+  hashable). Tasks carrying ``TaskSpec.tenant`` are queued per tenant and
+  dispatched by start-time fair queuing over the configured weights
+  (``submit_queued``); ``free_slots_for(tenant)`` bounds each tenant's
+  outstanding work and ``tenant_stats()`` attributes dispatch/wire/
+  recovery counters per tenant. Tenant-less tasks bypass the scheduler
+  entirely.
 
 Worker-to-worker dataflow (locality scheduling + the location map): a task
 dispatched with ``keep`` parks any large result in the producing worker's
@@ -129,7 +149,8 @@ from .base import (Backend, CompletionHandle, EventWaitMixin, TaskSpec,
 from .blobstore import (DRIVER_STORE, PayloadRef, RemoteValue,
                         encode_backfill)
 from .launchers import WorkerProc, resolve_launcher
-from .transport import FrameReader, send_frame
+from .transport import (FrameReader, TLSConfig, generate_self_signed_cert,
+                        send_frame, serve_auth, server_tls_context)
 
 #: pre-hello launch failures retained for error messages
 _LAUNCH_FAILURES_KEEP = 8
@@ -246,7 +267,10 @@ class ClusterBackend(EventWaitMixin, Backend):
                  min_replicas: int = 1,
                  lineage_max_depth: int = 8,
                  lineage_max_attempts: int = 3,
-                 lineage_keep: int = 512):
+                 lineage_keep: int = 512,
+                 token: "str | None" = None,
+                 tls: "TLSConfig | bool | None" = None,
+                 tenants: "dict | tuple | None" = None):
         self._blob_store_bytes = blob_store_bytes
         #: keep large results worker-resident (RemoteValue dataflow); False
         #: restores the pre-dataflow wire shape: every result travels inline
@@ -343,6 +367,43 @@ class ClusterBackend(EventWaitMixin, Backend):
         self._tag_seq = itertools.count()
         self._tag_base = os.urandom(4).hex()
 
+        # -- transport security: shared token + optional TLS ----------------
+        self._token = token if token is not None \
+            else os.environ.get("REPRO_CLUSTER_TOKEN", "")
+        if tls is True:
+            import tempfile
+            tls = generate_self_signed_cert(
+                tempfile.mkdtemp(prefix="repro-tls-"))
+        self._tls: "TLSConfig | None" = tls or None
+        self._tls_ctx = server_tls_context(self._tls) \
+            if self._tls is not None else None
+        self._secured = bool(self._token) or self._tls is not None
+        #: credentials the workers' peer-fetch servers enforce, shipped in
+        #: the init frame over the already-authenticated control channel
+        self._peer_secret = os.urandom(16).hex() if self._secured else ""
+        self._init_extras: dict = {"blob_store_bytes": blob_store_bytes}
+        if self._peer_secret:
+            self._init_extras["peer_secret"] = self._peer_secret
+        if self._tls is not None:
+            with open(self._tls.certfile, "rb") as f:
+                cert_pem = f.read()
+            with open(self._tls.keyfile or self._tls.certfile, "rb") as f:
+                key_pem = f.read()
+            self._init_extras["tls_material"] = (cert_pem, key_pem)
+        #: authenticated-but-unregistered connections handed from the
+        #: handshake threads to the select loop (guarded by _pool_cv)
+        self._joiners: list[_SockWorker] = []
+
+        # -- per-tenant fair-share scheduling (guarded by _pool_cv) ---------
+        self._tenant_policy: dict[str, dict] = {}
+        self._tenant_rt: dict[str, dict] = {}
+        self._vtime = 0.0                    # start-time fair-queuing clock
+        self._tenant_thread: "threading.Thread | None" = None
+        self._recovery_by_tenant: "collections.Counter" = \
+            collections.Counter()
+        if tenants:
+            self.configure_tenants(dict(tenants))
+
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((bind, int(port)))
@@ -400,8 +461,22 @@ class ClusterBackend(EventWaitMixin, Backend):
                 f"reachable interface (bind='0.0.0.0' [+ advertise=]) or "
                 f"use SSHLauncher(reverse_tunnel=True)", RuntimeWarning,
                 stacklevel=2)
+        extra_env = []
+        if self._token:
+            extra_env.append(("REPRO_CLUSTER_TOKEN", self._token))
+        if self._tls is not None:
+            extra_env.append(("REPRO_CLUSTER_TLS", "1"))
+            if local_only and self._tls.cafile:
+                # the CA pin is a local file path — only forwardable to
+                # workers sharing this filesystem; remote dials still
+                # encrypt + token-auth, just without cert verification
+                extra_env.append(("REPRO_CLUSTER_TLS_CA", self._tls.cafile))
         try:
-            wp = launcher.launch(host, addr, tag=tag)
+            if extra_env:
+                wp = launcher.launch(host, addr, tag=tag,
+                                     extra_env=tuple(extra_env))
+            else:
+                wp = launcher.launch(host, addr, tag=tag)
         except Exception as exc:                 # noqa: BLE001
             with self._pool_cv:
                 if not relaunch:
@@ -524,6 +599,211 @@ class ClusterBackend(EventWaitMixin, Backend):
         with self._pool_cv:
             return sum(1 for w in self._idle if w.sock is not None)
 
+    # -- per-tenant fair-share scheduling ------------------------------------
+    #
+    # Tasks carrying ``TaskSpec.tenant`` do not check a worker out FIFO:
+    # they enter their tenant's pending queue (``submit_queued``) and a
+    # dedicated dispatcher thread serves queues by *start-time fair
+    # queuing* — each dispatch advances its tenant's virtual finish time by
+    # 1/weight, and the tenant with the smallest next finish time goes
+    # first. A tenant flooding its queue therefore advances its own clock
+    # far ahead and cannot starve a light tenant beyond its weight ratio;
+    # ``max_in_flight`` and token-bucket ``rate`` caps gate dispatch per
+    # tenant on top.
+
+    def configure_tenants(self, tenants: "dict | tuple") -> None:
+        """Install/replace per-tenant policy: ``{tenant: weight}`` or
+        ``{tenant: {"weight": w, "max_in_flight": n, "rate": per_s}}``
+        (tuple-of-pairs accepted so hashable specs can carry it)."""
+        policy: dict[str, dict] = {}
+        for name, pol in dict(tenants).items():
+            if isinstance(pol, (int, float)):
+                pol = {"weight": float(pol)}
+            else:
+                pol = dict(pol)
+            pol.setdefault("weight", 1.0)
+            if pol["weight"] <= 0:
+                raise ValueError(f"tenant {name!r} weight must be > 0")
+            policy[str(name)] = pol
+        with self._pool_cv:
+            self._tenant_policy = policy
+            for name in policy:
+                self._tenant_rt_for_locked(name)
+            self._pool_cv.notify_all()
+
+    def _tenant_rt_for_locked(self, name: str) -> dict:
+        rt = self._tenant_rt.get(name)
+        if rt is None:
+            rt = self._tenant_rt[name] = {
+                "queue": collections.deque(), "in_flight": 0,
+                "vfinish": 0.0, "dispatched": 0, "completed": 0,
+                "bytes_sent": 0, "bytes_recv": 0,
+                "tokens": 0.0, "tokens_at": time.monotonic(),
+                "primed": False}
+        return rt
+
+    def _tenant_weight(self, name: str) -> float:
+        return max(self._tenant_policy.get(name, {}).get("weight", 1.0),
+                   1e-9)
+
+    def _next_tenant_locked(self, now: float) -> "str | None":
+        """Pick the dispatchable tenant with the smallest virtual finish
+        time. Caller holds ``_pool_cv``."""
+        best, best_finish = None, None
+        for name, rt in self._tenant_rt.items():
+            if not rt["queue"]:
+                continue
+            pol = self._tenant_policy.get(name, {})
+            cap = pol.get("max_in_flight")
+            if cap is not None and rt["in_flight"] >= cap:
+                continue
+            rate = pol.get("rate")
+            if rate:
+                burst = max(1.0, float(rate))
+                if not rt["primed"]:
+                    # a fresh bucket starts full — the first dispatches of
+                    # a quiet tenant should not wait out the refill
+                    rt["tokens"], rt["primed"] = burst, True
+                rt["tokens"] = min(
+                    burst, rt["tokens"] + (now - rt["tokens_at"]) * rate)
+                rt["tokens_at"] = now
+                if rt["tokens"] < 1.0:
+                    continue
+            # the head task's finish tag was frozen at *enqueue* time
+            # (submit_queued). Recomputing it here against the advancing
+            # _vtime would re-bump a backlogged light tenant's start on
+            # every round and let a heavy tenant starve it outright.
+            finish = rt["queue"][0][3]
+            if best_finish is None or finish < best_finish:
+                best, best_finish = name, finish
+        return best
+
+    def _rate_starved_locked(self) -> bool:
+        """Queued work exists that only a token refill can unblock."""
+        return any(rt["queue"] and self._tenant_policy.get(n, {}).get("rate")
+                   for n, rt in self._tenant_rt.items())
+
+    def _ensure_tenant_thread_locked(self) -> None:
+        if self._tenant_thread is None or not self._tenant_thread.is_alive():
+            self._tenant_thread = threading.Thread(
+                target=self._tenant_dispatch_loop, name="tenant-dispatch",
+                daemon=True)
+            self._tenant_thread.start()
+
+    def _tenant_dispatch_loop(self) -> None:
+        while True:
+            task = handle = worker = name = None
+            with self._pool_cv:
+                while self._open:
+                    now = time.monotonic()
+                    name = self._next_tenant_locked(now)
+                    if name is not None:
+                        rt = self._tenant_rt[name]
+                        peek = rt["queue"][0][0]
+                        worker = self._pick_idle_locked(
+                            self._holders(peek.affinity))
+                        if worker is not None:
+                            task, handle, start, _fin = \
+                                rt["queue"].popleft()
+                            pol = self._tenant_policy.get(name, {})
+                            # SFQ: virtual time is the start tag of the
+                            # task entering service (monotone under caps)
+                            self._vtime = max(self._vtime, start)
+                            rt["in_flight"] += 1
+                            rt["dispatched"] += 1
+                            if pol.get("rate"):
+                                rt["tokens"] -= 1.0
+                            break
+                    # nothing dispatchable now: a short wait when only a
+                    # token refill can unblock queued work, a long one
+                    # otherwise (completions/submissions notify_all)
+                    self._pool_cv.wait(
+                        0.02 if self._rate_starved_locked() else 0.5)
+                if task is None:             # shutdown: drain every queue
+                    drained = []
+                    for rt in self._tenant_rt.values():
+                        while rt["queue"]:
+                            drained.append(rt["queue"].popleft())
+                    self._tenant_thread = None
+            if task is None:
+                for t, h, *_ in drained:
+                    if not h.done.is_set():
+                        h.error = ChannelError(
+                            f"cluster backend shut down while future "
+                            f"{t.label!r} was queued",
+                            future_label=t.label)
+                        self._complete(h)
+                return
+            self._dispatch(task, worker, handle=handle)
+            self.add_done_callback(
+                handle, lambda _h, name=name: self._tenant_task_done(name))
+
+    def _tenant_task_done(self, name: str) -> None:
+        with self._pool_cv:
+            rt = self._tenant_rt.get(name)
+            if rt is not None:
+                rt["in_flight"] = max(rt["in_flight"] - 1, 0)
+                rt["completed"] += 1
+            self._pool_cv.notify_all()
+
+    def submit_queued(self, task: TaskSpec) -> _Handle:
+        """Admission entry point for tenant-tagged work (the serving tier):
+        returns the task's handle immediately and lets the fair-share
+        dispatcher assign a worker when this tenant's turn comes. Tasks
+        without a tenant fall through to plain :meth:`submit`."""
+        if task.tenant is None:
+            return self.submit(task)
+        handle = _Handle(task)
+        with self._pool_cv:
+            if not self._open:
+                raise ChannelError("cluster backend is shut down")
+            rt = self._tenant_rt_for_locked(task.tenant)
+            # start-time fair queuing: tag the task NOW and never again.
+            # A tenant going idle re-anchors at the current virtual time;
+            # a backlogged tenant chains off its own last finish tag, so
+            # its position in the service order is immune to how far the
+            # other tenants' dispatches advance _vtime meanwhile.
+            start = max(self._vtime, rt["vfinish"])
+            finish = start + 1.0 / self._tenant_weight(task.tenant)
+            rt["vfinish"] = finish
+            rt["queue"].append((task, handle, start, finish))
+            self._ensure_tenant_thread_locked()
+            self._pool_cv.notify_all()
+        return handle
+
+    def free_slots_for(self, tenant: "str | None") -> int:
+        """Per-tenant admission: how much more work ``tenant`` may have
+        outstanding (in flight + queued). Bounded by its ``max_in_flight``
+        when configured, else by twice the cluster capacity — enough queue
+        depth for the fair-share scheduler to arbitrate, bounded so a
+        flooding client cannot build an unbounded driver-side queue."""
+        if tenant is None:
+            return self.free_slots()
+        with self._pool_cv:
+            rt = self._tenant_rt_for_locked(tenant)
+            outstanding = rt["in_flight"] + len(rt["queue"])
+            cap = self._tenant_policy.get(tenant, {}).get("max_in_flight")
+            bound = cap if cap is not None else 2 * max(self._capacity, 1)
+            return max(0, int(bound) - outstanding)
+
+    def tenant_stats(self) -> dict:
+        """Per-tenant attribution: ``{tenant: {dispatched, completed,
+        in_flight, queued, bytes_sent, bytes_recv, reconstructions}}`` —
+        the serving tier's answer to "who is using the cluster"."""
+        with self._pool_cv:
+            out = {name: {"dispatched": rt["dispatched"],
+                          "completed": rt["completed"],
+                          "in_flight": rt["in_flight"],
+                          "queued": len(rt["queue"]),
+                          "bytes_sent": rt["bytes_sent"],
+                          "bytes_recv": rt["bytes_recv"]}
+                   for name, rt in self._tenant_rt.items()}
+        with self._lineage_lock:
+            recov = dict(self._recovery_by_tenant)
+        for name, stats in out.items():
+            stats["reconstructions"] = recov.get(name, 0)
+        return out
+
     def resize(self, workers: int) -> None:
         """Elastic scaling: grow by launching connect-back workers (round-
         robin over the host list; external mode just raises the expected
@@ -599,6 +879,7 @@ class ClusterBackend(EventWaitMixin, Backend):
                             pass
                     else:
                         self._pump(data)
+                self._service_joiners()
                 self._service_relaunches()
                 self._service_releases()
                 self._service_state_timeouts()
@@ -617,11 +898,20 @@ class ClusterBackend(EventWaitMixin, Backend):
         except OSError:
             return
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        if self._secured:
+            # TLS + auth handshakes block (and must be able to *time out*
+            # on a silent or plaintext dialer) — never on the select loop,
+            # where they would stall every worker's heartbeats. A short-
+            # lived side thread negotiates, then hands the authenticated
+            # connection back through _joiners + the wake pipe.
+            threading.Thread(target=self._handshake_accept,
+                             args=(conn, addr), name="cluster-handshake",
+                             daemon=True).start()
+            return
         w = _SockWorker(next(self._wid), conn, addr)
         try:
             send_frame(conn, ("init", self._nested_blob, self._session_seed,
-                              self._hb_interval,
-                              {"blob_store_bytes": self._blob_store_bytes}),
+                              self._hb_interval, self._init_extras),
                        w.send_lock)
         except OSError:
             w.close()
@@ -629,6 +919,58 @@ class ClusterBackend(EventWaitMixin, Backend):
         self._sel.register(conn, selectors.EVENT_READ, w)
         with self._pool_cv:
             self._all.append(w)
+
+    def _handshake_accept(self, conn, addr) -> None:
+        """Side-thread TLS + token negotiation for one inbound connection.
+        Any failure — bad token, plaintext bytes on a TLS listener, a
+        dialer that never speaks — closes the socket within the auth
+        timeout; nothing it sent is ever decoded as a frame."""
+        from .transport import AUTH_TIMEOUT_S
+        try:
+            conn.settimeout(AUTH_TIMEOUT_S)
+            if self._tls_ctx is not None:
+                conn = self._tls_ctx.wrap_socket(conn, server_side=True)
+            if self._token:
+                serve_auth(conn, {"cluster": self._token})
+            conn.settimeout(None)
+        except Exception:                            # noqa: BLE001
+            try:
+                conn.close()
+            except OSError:
+                pass
+            return
+        w = _SockWorker(next(self._wid), conn, addr)
+        try:
+            send_frame(conn, ("init", self._nested_blob, self._session_seed,
+                              self._hb_interval, self._init_extras),
+                       w.send_lock)
+        except OSError:
+            w.close()
+            return
+        with self._pool_cv:
+            if not self._open:
+                w.close()
+                return
+            self._joiners.append(w)
+        try:
+            os.write(self._wake_w, b"j")
+        except (OSError, ValueError):
+            pass
+
+    def _service_joiners(self) -> None:
+        """Register handshake-thread connections with the selector (on the
+        loop thread, where every other register/unregister happens)."""
+        if not self._joiners:                # unlocked hint, same as _loop
+            return
+        with self._pool_cv:
+            joiners, self._joiners = self._joiners, []
+            for w in joiners:
+                self._all.append(w)
+        for w in joiners:
+            try:
+                self._sel.register(w.sock, selectors.EVENT_READ, w)
+            except (KeyError, ValueError, OSError):
+                self._on_dead(w, "could not register handshaken socket")
 
     def _pump(self, w: _SockWorker) -> None:
         try:
@@ -640,7 +982,8 @@ class ClusterBackend(EventWaitMixin, Backend):
             self._on_dead(w, repr(exc))
             return
         w.last_seen = time.monotonic()
-        for frame in frames:
+        sizes = w.reader.last_sizes      # index-aligned with ``frames``
+        for idx, frame in enumerate(frames):
             tag = frame[0]
             if tag == "hello":
                 w.meta = frame[1]
@@ -714,6 +1057,10 @@ class ClusterBackend(EventWaitMixin, Backend):
             elif tag == "result":
                 h = w.busy
                 if h is not None and frame[1] == h.task.task_id:
+                    if h.task.tenant is not None and idx < len(sizes):
+                        with self._pool_cv:
+                            self._tenant_rt_for_locked(
+                                h.task.tenant)["bytes_recv"] += sizes[idx]
                     held = frame[3] if len(frame) > 3 else ()
                     if held:
                         # even a discarded late result stays in the
@@ -1037,6 +1384,12 @@ class ClusterBackend(EventWaitMixin, Backend):
         from .. import state as state_mod
         _tag, rid, op, args = frame
         svc = state_mod.service()
+        # tenant-tagged tasks see a private key namespace: their keys are
+        # wrapped server-side (the client never sees the wrapper), so one
+        # tenant can neither read nor clobber another's KV entries
+        tenant = getattr(w.busy.task, "tenant", None) \
+            if w.busy is not None else None
+        args = state_mod.scope_args(op, args, tenant)
 
         def _send(status, payload, digest=None):
             try:
@@ -1085,7 +1438,8 @@ class ClusterBackend(EventWaitMixin, Backend):
             return payload
 
         def _serve():
-            status, payload, digest = svc.handle(op, args, w.known)
+            status, payload, digest = svc.handle(op, args, w.known,
+                                                 tenant=tenant)
             if status == "ok":
                 payload = _wrap(payload)
             _send(status, payload, digest)
@@ -1093,7 +1447,7 @@ class ClusterBackend(EventWaitMixin, Backend):
         big = op == "blob" \
             or (op == "get" and svc.estimated_nbytes(args[0])
                 >= state_mod.STATE_INLINE_MAX) \
-            or (op in ("put", "cas") and args[-1][0] == "r"
+            or (op in ("put", "cas", "add", "extend") and args[-1][0] == "r"
                 and args[-1][3] >= state_mod.STATE_INLINE_MAX)
         if big:
             threading.Thread(target=_serve, name="state-serve",
@@ -1173,13 +1527,19 @@ class ClusterBackend(EventWaitMixin, Backend):
             while len(self._lineage) > self._lineage_keep:
                 self._lineage.popitem(last=False)
 
-    def recovery_stats(self) -> dict:
+    def recovery_stats(self, by_tenant: bool = False) -> dict:
         """Counters for the recovery machinery (tests/diagnostics):
         ``reconstructions`` (lineage re-executions), ``replications``
         (proactive pushes under ``min_replicas``), ``replica_promotions``
-        (task-path peer fetches registered as new holders)."""
+        (task-path peer fetches registered as new holders).
+        ``by_tenant=True`` adds a ``{"by_tenant": {tenant:
+        reconstructions}}`` attribution of lineage re-executions to the
+        tenant whose task produced the rebuilt digest."""
         with self._lineage_lock:
-            return dict(self._recovery)
+            out = dict(self._recovery)
+            if by_tenant:
+                out["by_tenant"] = dict(self._recovery_by_tenant)
+            return out
 
     def _ensure_remote_inputs(self, task: TaskSpec) -> None:
         """Pre-dispatch lineage gate for ``submit()``: every remote input
@@ -1244,6 +1604,8 @@ class ClusterBackend(EventWaitMixin, Backend):
                             future_label=label or None)
                     rec.attempts += 1
                     self._recovery["reconstructions"] += 1
+                    if rec.task.tenant is not None:
+                        self._recovery_by_tenant[rec.task.tenant] += 1
                     ev = self._rebuilds[digest] = threading.Event()
                 else:
                     rec = None
@@ -1455,6 +1817,11 @@ class ClusterBackend(EventWaitMixin, Backend):
     # -- Backend API ---------------------------------------------------------
 
     def submit(self, task: TaskSpec) -> _Handle:
+        if task.tenant is not None:
+            # tenant-tagged work never checks out FIFO: it rides the
+            # fair-share queues (handle returned immediately, dispatch
+            # deferred to the tenant scheduler)
+            return self.submit_queued(task)
         try:
             self._ensure_remote_inputs(task)
         except FutureError as exc:
@@ -1468,13 +1835,23 @@ class ClusterBackend(EventWaitMixin, Backend):
         return self._dispatch(task, worker)
 
     def try_submit(self, task: TaskSpec) -> "_Handle | None":
+        if task.tenant is not None:
+            # deficit-style queue admission replaces FIFO checkout: the
+            # tenant may enter the scheduler's queues while it has
+            # outstanding budget; the fair-share dispatcher decides when a
+            # worker is actually assigned
+            if self.free_slots_for(task.tenant) <= 0:
+                return None
+            return self.submit_queued(task)
         worker = self._try_checkout(prefer=self._holders(task.affinity))
         if worker is None:
             return None
         return self._dispatch(task, worker)
 
-    def _dispatch(self, task: TaskSpec, worker: _SockWorker) -> _Handle:
-        handle = _Handle(task)
+    def _dispatch(self, task: TaskSpec, worker: _SockWorker,
+                  handle: "_Handle | None" = None) -> _Handle:
+        if handle is None:
+            handle = _Handle(task)
         blob = task.shipped
         assert blob is not None, "cluster backend requires a shipped fn"
         worker.busy = handle
@@ -1509,15 +1886,21 @@ class ClusterBackend(EventWaitMixin, Backend):
             self._finish(worker, handle)
             return handle
         try:
+            sent = 0
             for digest, pblob in puts:
-                send_frame(worker.sock,
-                           ("put", digest, pickle.PickleBuffer(pblob)),
-                           worker.send_lock)
+                sent += send_frame(worker.sock,
+                                   ("put", digest,
+                                    pickle.PickleBuffer(pblob)),
+                                   worker.send_lock)
                 worker.known.add(digest)
-            send_frame(worker.sock,
-                       ("task", task.task_id, blob, task.refs,
-                        hints, self._remote_results),
-                       worker.send_lock)
+            sent += send_frame(worker.sock,
+                               ("task", task.task_id, blob, task.refs,
+                                hints, self._remote_results),
+                               worker.send_lock)
+            if task.tenant is not None:
+                with self._pool_cv:
+                    self._tenant_rt_for_locked(
+                        task.tenant)["bytes_sent"] += sent
         except (OSError, AttributeError):
             worker.busy = None
             handle.error = WorkerDiedError(
@@ -1598,6 +1981,17 @@ class ClusterBackend(EventWaitMixin, Backend):
             self._cleaned = True
         self._fail_all_fetches()     # unblock pull_blob callers (they see
         #                              _open=False and raise ChannelError)
+        with self._pool_cv:
+            drained = []
+            for rt in self._tenant_rt.values():
+                while rt["queue"]:
+                    drained.append(rt["queue"].popleft())
+        for t, h, *_ in drained:     # the dispatcher usually beat us here;
+            if not h.done.is_set():  # _complete is idempotent either way
+                h.error = ChannelError(
+                    f"cluster backend shut down while future "
+                    f"{t.label!r} was queued", future_label=t.label)
+                self._complete(h)
         with self._pool_cv:
             workers = list(self._all)
             self._all, self._idle = [], []

@@ -28,6 +28,11 @@ Flags for scheduler-launched fleets:
   from the driver (and bound reconnect attempts the same way), so a
   scheduler-launched worker cannot outlive a dead driver and squat its
   allocation forever. ``0`` (default): never.
+* ``--token`` / ``--tls`` / ``--tls-ca`` — the driver's security settings
+  (see the *security preamble* in ``transport.py``). Default from
+  ``REPRO_CLUSTER_TOKEN`` / ``REPRO_CLUSTER_TLS`` /
+  ``REPRO_CLUSTER_TLS_CA``, which driver-side launchers export for the
+  workers they spawn.
 
 Protocol (see transport.py): the driver sends ``init`` (nested plan stack,
 session seed, heartbeat interval, extras) immediately on accept; the worker
@@ -83,7 +88,9 @@ import threading
 import time
 
 from ..errors import ChannelError
-from .transport import recv_frame, send_frame
+from .transport import (TLSConfig, client_tls_context, dial_auth,
+                        recv_frame, send_frame, serve_auth,
+                        server_tls_context)
 
 
 def _answer_fetch(sock, send_lock, store, digest) -> None:
@@ -105,10 +112,20 @@ class _PeerServer:
     """Ephemeral listener serving this worker's blob store to sibling
     workers (the worker-to-worker half of the fetch/offer protocol).
     Best-effort: if the bind fails, ``addr`` stays ``None`` and peers
-    simply use the driver-fallback path."""
+    simply use the driver-fallback path.
 
-    def __init__(self, store, host_hint: str):
+    On a secured cluster the driver ships per-cluster peer credentials in
+    the init extras (over the already-authenticated control channel):
+    every peer connection must then pass the same TLS wrap and/or auth
+    preamble as the driver listener — an attacker who can reach a worker's
+    ephemeral port cannot fetch blobs, the same guarantee as the driver
+    port."""
+
+    def __init__(self, store, host_hint: str, *, tls_ctx=None,
+                 secret: str = ""):
         self._store = store
+        self._tls_ctx = tls_ctx
+        self._secret = secret
         self.addr: "tuple[str, int] | None" = None
         self._ls: "socket.socket | None" = None
         try:
@@ -134,6 +151,10 @@ class _PeerServer:
     def _serve_one(self, conn):
         try:
             conn.settimeout(30.0)
+            if self._tls_ctx is not None:
+                conn = self._tls_ctx.wrap_socket(conn, server_side=True)
+            if self._secret:
+                serve_auth(conn, {"peer": self._secret})
             conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             while True:
                 msg = recv_frame(conn)
@@ -156,24 +177,36 @@ class _PeerServer:
                 pass
 
 
-def _peer_fetch(digest, addrs, timeout: float = 5.0) -> "bytes | None":
+def _peer_fetch(digest, addrs, timeout: float = 5.0, *, tls_ctx=None,
+                secret: str = "") -> "bytes | None":
     """Try each peer address for ``digest``; first offer wins. ``None``
     when no peer can serve it (unreachable, partitioned, evicted) — the
     caller falls back to the driver's ``need`` path. Failures are bounded
     by ``timeout`` per address, so a partitioned peer costs seconds, not a
-    stuck task."""
+    stuck task. ``tls_ctx``/``secret`` are the cluster's peer credentials
+    (mandatory on both sides when the driver armed them)."""
     for addr in addrs or ():
+        ps = None
         try:
-            with socket.create_connection(tuple(addr),
-                                          timeout=timeout) as ps:
-                ps.settimeout(timeout)
-                ps.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                send_frame(ps, ("fetch", digest))
-                msg = recv_frame(ps)
-                if msg[0] == "offer" and msg[1] == digest:
-                    return bytes(msg[2])
+            ps = socket.create_connection(tuple(addr), timeout=timeout)
+            ps.settimeout(timeout)
+            if tls_ctx is not None:
+                ps = tls_ctx.wrap_socket(ps)
+            if secret:
+                dial_auth(ps, secret)
+            ps.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            send_frame(ps, ("fetch", digest))
+            msg = recv_frame(ps)
+            if msg[0] == "offer" and msg[1] == digest:
+                return bytes(msg[2])
         except (EOFError, ChannelError, OSError):
             continue
+        finally:
+            if ps is not None:
+                try:
+                    ps.close()
+                except OSError:
+                    pass
     return None
 
 
@@ -266,7 +299,34 @@ def _serve(sock: socket.socket, *, tag: str = "",
         local_ip = sock.getsockname()[0]
     except OSError:
         local_ip = "127.0.0.1"
-    peer_srv = _PeerServer(store, local_ip)
+    # Peer-fetch credentials arrive in the init extras over the (already
+    # authenticated) control channel: a random per-cluster secret, plus the
+    # cluster's TLS cert/key PEM bytes when the driver is TLS-armed. Both
+    # sides of every worker-to-worker connection then enforce them.
+    peer_secret = extras.get("peer_secret", "")
+    peer_srv_ctx = peer_cli_ctx = None
+    if extras.get("tls_material") is not None:
+        import tempfile
+        cert_pem, key_pem = extras["tls_material"]
+        tdir = tempfile.mkdtemp(prefix="repro-peer-tls-")
+        certfile = os.path.join(tdir, "cert.pem")
+        keyfile = os.path.join(tdir, "key.pem")
+        with open(certfile, "wb") as fh:
+            fh.write(cert_pem)
+        with open(keyfile, "wb") as fh:
+            fh.write(key_pem)
+        os.chmod(keyfile, 0o600)
+        tls_cfg = TLSConfig(certfile=certfile, keyfile=keyfile,
+                            cafile=certfile)
+        peer_srv_ctx = server_tls_context(tls_cfg)
+        peer_cli_ctx = client_tls_context(tls_cfg)
+
+    def peer_fetch(digest, addrs):
+        return _peer_fetch(digest, addrs, tls_ctx=peer_cli_ctx,
+                           secret=peer_secret)
+
+    peer_srv = _PeerServer(store, local_ip, tls_ctx=peer_srv_ctx,
+                           secret=peer_secret)
 
     meta = {"pid": os.getpid(), "host": socket.gethostname()}
     if tag:
@@ -317,7 +377,7 @@ def _serve(sock: socket.socket, *, tag: str = "",
                 def _replicate(digest=msg[1], addrs=msg[2]):
                     blob = store.get(digest)
                     if blob is None:
-                        blob = _peer_fetch(digest, addrs)
+                        blob = peer_fetch(digest, addrs)
                         if blob is None:
                             return       # no holder reachable: best-effort
                         store.put(digest, blob)
@@ -383,7 +443,7 @@ def _serve(sock: socket.socket, *, tag: str = "",
                         lambda d: send_frame(sock, ("need", d), send_lock),
                         recv_msg,
                         peer_fetch=(
-                            (lambda d: _peer_fetch(d, hints.get(d)))
+                            (lambda d: peer_fetch(d, hints.get(d)))
                             if hints else None),
                         on_peer_fetched=_promoted)
                     if stopped == "stop":
@@ -419,13 +479,41 @@ def _serve(sock: socket.socket, *, tag: str = "",
             pass
 
 
+def _secure_dial(sock, host: str, *, token: str = "",
+                 tls: "TLSConfig | None" = None, timeout: float = 30.0):
+    """Upgrade a fresh driver connection per the cluster's security
+    settings: TLS wrap first (so the auth preamble travels encrypted),
+    then the shared-token handshake. Returns the (possibly wrapped)
+    socket; raises :class:`ChannelError` on any refusal — bounded by
+    ``timeout``, so dialing a mismatched listener fails fast instead of
+    hanging."""
+    if tls is None and not token:
+        return sock
+    sock.settimeout(timeout)
+    if tls is not None:
+        ctx = client_tls_context(tls)
+        try:
+            sock = ctx.wrap_socket(sock, server_hostname=host)
+        except OSError as exc:
+            raise ChannelError(
+                f"TLS handshake with driver {host!r} failed: {exc!r} "
+                f"(is the listener TLS-armed?)") from exc
+    if token:
+        dial_auth(sock, token, timeout=timeout)
+    return sock
+
+
 def run_worker(host: str, port: int, *, connect_timeout: float = 30.0,
                tag: str = "", reconnect: bool = False,
-               max_idle_s: float = 0.0) -> None:
+               max_idle_s: float = 0.0, token: str = "",
+               tls: "TLSConfig | None" = None) -> None:
     """Connect to the driver and resolve shipped futures until told to stop
     or the connection drops. Default: exit on disconnect and let the
     driver's relaunch policy self-heal; with ``reconnect=True`` keep
-    redialing (scheduler-owned workers), bounded by ``max_idle_s``."""
+    redialing (scheduler-owned workers), bounded by ``max_idle_s``.
+    ``token``/``tls`` must match the driver's security settings (launched
+    workers inherit them via ``REPRO_CLUSTER_TOKEN`` / ``REPRO_CLUSTER_TLS``
+    / ``REPRO_CLUSTER_TLS_CA``)."""
     os.environ.setdefault("OMP_NUM_THREADS", "1")
     os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
 
@@ -449,12 +537,19 @@ def run_worker(host: str, port: int, *, connect_timeout: float = 30.0,
             continue
         served_at = time.monotonic()
         try:
+            sock = _secure_dial(sock, host, token=token, tls=tls,
+                                timeout=connect_timeout)
             reason = _serve(sock, tag=tag, max_idle_s=max_idle_s,
                             handshake_timeout=connect_timeout)
         except (EOFError, ChannelError, OSError):
-            # connection lost inside the init handshake (driver mid-restart
-            # accepted then closed): same as any other drop — redial when
-            # --reconnect, die-and-be-relaunched otherwise
+            # connection lost inside the init/security handshake (driver
+            # mid-restart accepted then closed, credential mismatch): same
+            # as any other drop — redial when --reconnect,
+            # die-and-be-relaunched otherwise
+            try:
+                sock.close()
+            except OSError:
+                pass
             if not reconnect:
                 raise
             reason = "eof"
@@ -488,13 +583,29 @@ def main(argv=None) -> None:
                     help="exit after this many seconds without any frame "
                          "from the driver (0: never) — keeps scheduler-"
                          "launched workers from outliving a dead driver")
+    ap.add_argument("--token", default=os.environ.get(
+                        "REPRO_CLUSTER_TOKEN", ""),
+                    help="shared cluster token for the auth preamble "
+                         "(default: $REPRO_CLUSTER_TOKEN)")
+    ap.add_argument("--tls", action="store_true",
+                    default=bool(os.environ.get("REPRO_CLUSTER_TLS")),
+                    help="wrap the driver connection in TLS (default: "
+                         "$REPRO_CLUSTER_TLS non-empty)")
+    ap.add_argument("--tls-ca", default=os.environ.get(
+                        "REPRO_CLUSTER_TLS_CA", ""),
+                    help="PEM file to verify the driver's certificate "
+                         "against (default: $REPRO_CLUSTER_TLS_CA; empty: "
+                         "encrypt without verifying)")
     args = ap.parse_args(argv)
     host, _, port = args.address.rpartition(":")
     if not port.isdigit():
         ap.error(f"address must be HOST:PORT, got {args.address!r}")
+    tls = TLSConfig(cafile=args.tls_ca) if (args.tls or args.tls_ca) \
+        else None
     run_worker(host or "127.0.0.1", int(port),
                connect_timeout=args.connect_timeout, tag=args.tag,
-               reconnect=args.reconnect, max_idle_s=args.max_idle_s)
+               reconnect=args.reconnect, max_idle_s=args.max_idle_s,
+               token=args.token, tls=tls)
 
 
 if __name__ == "__main__":

@@ -165,6 +165,13 @@ class Launcher:
     *worker* can reach) and returns the :class:`WorkerProc` handle.
     Subclasses usually only build a command line; process ownership,
     pre-hello polling and relaunch policy live in the cluster driver.
+
+    ``extra_env`` is the driver's per-cluster credential hand-off
+    (``REPRO_CLUSTER_TOKEN`` and friends — see ``cluster_worker.py``):
+    ``(("K", "V"), ...)`` pairs every launcher must deliver into the
+    worker's environment, merged *after* its own ``env`` config. The
+    driver only passes the kwarg when it is non-empty, so third-party
+    launchers without the parameter keep working on unsecured clusters.
     """
 
     #: True when launched workers always dial the driver's loopback
@@ -173,7 +180,9 @@ class Launcher:
     local_only = False
 
     def launch(self, host: str, driver_addr: "tuple[str, int]", *,
-               tag: "str | None" = None) -> WorkerProc:
+               tag: "str | None" = None,
+               extra_env: "tuple[tuple[str, str], ...]" = ()
+               ) -> WorkerProc:
         raise NotImplementedError
 
     def describe(self) -> str:
@@ -224,7 +233,7 @@ class LocalLauncher(Launcher):
 
     local_only = True
 
-    def launch(self, host, driver_addr, *, tag=None):
+    def launch(self, host, driver_addr, *, tag=None, extra_env=()):
         dhost, dport = driver_addr
         cmd = [self.python or sys.executable, "-m", WORKER_MODULE,
                f"{dhost}:{dport}"]
@@ -232,7 +241,7 @@ class LocalLauncher(Launcher):
             cmd += ["--tag", tag]
         cmd += list(self.worker_args)
         return self._spawn(cmd, host or "127.0.0.1", tag,
-                           env=self._worker_env(self.env),
+                           env=self._worker_env(self.env + tuple(extra_env)),
                            capture_stderr=self.capture_stderr,
                            tag_forwarded=bool(tag))
 
@@ -273,7 +282,7 @@ class SSHLauncher(Launcher):
     worker_args: "tuple[str, ...]" = ()
     capture_stderr: bool = True
 
-    def command(self, host, driver_addr, *, tag=None) -> list:
+    def command(self, host, driver_addr, *, tag=None, extra_env=()) -> list:
         """The full local argv this launcher would run (exposed so tests
         and ``describe()`` can show the bootstrap without an sshd)."""
         dhost, dport = driver_addr
@@ -286,7 +295,7 @@ class SSHLauncher(Launcher):
             addr = f"{dhost}:{dport}"
         remote = ["env",
                   f"PYTHONPATH={shlex.quote(self.pythonpath or _src_root())}"]
-        for k, v in self.env:
+        for k, v in self.env + tuple(extra_env):
             remote.append(f"{k}={shlex.quote(str(v))}")
         # the whole remote command is one space-joined string evaluated by
         # the remote shell: quote every word that could carry spaces
@@ -296,10 +305,16 @@ class SSHLauncher(Launcher):
         remote += [shlex.quote(a) for a in self.worker_args]
         return cmd + [dest, " ".join(remote)]
 
-    def launch(self, host, driver_addr, *, tag=None):
-        return self._spawn(self.command(host, driver_addr, tag=tag),
-                           host, tag, capture_stderr=self.capture_stderr,
-                           tag_forwarded=bool(tag))
+    def launch(self, host, driver_addr, *, tag=None, extra_env=()):
+        # NOTE: remote env (cluster token included) rides the ssh command
+        # line (`env K=V ...`), so it is visible to `ps` on the remote host
+        # for the bootstrap's lifetime — the standard makeClusterPSOCK
+        # trade-off. Hosts needing stronger secrecy should pre-provision
+        # REPRO_CLUSTER_TOKEN in the remote shell profile instead.
+        return self._spawn(
+            self.command(host, driver_addr, tag=tag, extra_env=extra_env),
+            host, tag, capture_stderr=self.capture_stderr,
+            tag_forwarded=bool(tag))
 
     def describe(self) -> str:
         tun = "+revtunnel" if self.reverse_tunnel else ""
@@ -331,7 +346,7 @@ class CommandLauncher(Launcher):
     env: "tuple[tuple[str, str], ...]" = ()
     capture_stderr: bool = True
 
-    def launch(self, host, driver_addr, *, tag=None):
+    def launch(self, host, driver_addr, *, tag=None, extra_env=()):
         dhost, dport = driver_addr
         subst = {"host": host or "127.0.0.1",
                  "driver": f"{dhost}:{dport}",
@@ -346,7 +361,7 @@ class CommandLauncher(Launcher):
         # FIFO fallback handles the pairing either way
         return self._spawn(cmd, host, tag if "{tag}" in self.template
                            else None,
-                           env=self._worker_env(self.env),
+                           env=self._worker_env(self.env + tuple(extra_env)),
                            capture_stderr=self.capture_stderr,
                            tag_forwarded=False)
 

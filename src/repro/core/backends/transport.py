@@ -149,10 +149,72 @@ Two read paths, both quadratic-copy-free:
 Connection loss maps to ``EOFError`` (clean close between frames) or
 :class:`ChannelError` (close mid-frame); the driver translates either into
 ``WorkerDiedError`` for the future that was resolving there.
+
+Security preamble (opt-in, **before any frame is decoded**): when a
+listener is configured with TLS and/or a shared token, every byte above
+rides inside the negotiated channel and the very first exchange is a raw
+fixed-width handshake — not a pickle frame, so an unauthenticated peer
+never reaches ``pickle.loads``:
+
+  listener -> dialer : magic ``b"RFUT"`` | version u8 | nonce (16 B)
+  dialer -> listener : magic ``b"RFUT"`` | HMAC-SHA256(token, nonce) (32 B)
+  listener -> dialer : verdict u8 — ``0x01`` accepted, ``0x00`` denied
+                       (the listener closes after a deny)
+
+The listener matches the MAC against every configured ``{principal:
+token}`` pair (constant-time compare), so the same preamble authenticates
+cluster workers (single ``cluster`` token), peer blob fetches (per-backend
+random ``peer`` secret shipped to workers in ``init`` extras), and serving
+clients (per-tenant tokens — the matched principal *is* the tenant
+identity). Both sides run under a deadline: a plaintext dial into a TLS
+listener, a TLS dial into a plaintext listener, or a silent peer all
+surface as :class:`ChannelError` within the timeout, never a hang.
+
+Serving-tier session frames (client <-> ``repro.core.serving`` server,
+after TLS + token preamble on the same framed transport):
+
+  server -> client : ("welcome", meta)  meta = {"tenant", "session",
+                                        "workers", "session_ttl"}
+                     ("done", fid, run[, "err"])   completed future: the
+                                        sanitized CapturedRun (results held
+                                        worker-resident are materialized
+                                        server-side first); trailing "err"
+                                        marks an infrastructure error (the
+                                        run carries the exception)
+                     ("free_rep", rid, n)          admission reply —
+                                        ``n`` = this tenant's fair share of
+                                        ``free_slots()``
+                     ("state_rep", rid, status, payload)  shared-state
+                                        reply (same shapes as the cluster
+                                        frame above, tenant-namespaced)
+                     ("stats_rep", rid, stats)     per-tenant wire/dispatch
+                                        attribution snapshot
+                     ("expired",)       session TTL elapsed: every pending
+                                        and future op fails with
+                                        ``ChannelError``, connection closes
+  client -> server : ("sub", fid, shipped, refs, blobs, opts)  submit: the
+                                        shipped task pickle, the digest
+                                        list it references, {digest:
+                                        payload_blob} for refs this session
+                                        has not sent yet (at most once per
+                                        session), and opts = {"label",
+                                        "capture_stdout",
+                                        "capture_conditions",
+                                        "seed_declared"}
+                     ("free", rid)      ask for this tenant's free slots
+                     ("state", rid, op, args)      shared-state op
+                     ("stats", rid)     per-tenant stats snapshot
+                     ("cancel", fid)    best-effort cancel of a submitted,
+                                        unfinished future
+                     ("bye",)           clean session end
+                     ("cancel", fid)    best-effort cancel of a submitted fid
+                     ("bye",)           clean session close
 """
 
 from __future__ import annotations
 
+import dataclasses
+import hmac
 import os
 import pickle
 import struct
@@ -245,6 +307,205 @@ def reset_wire_stats() -> None:
 
 
 # --------------------------------------------------------------------------
+# Transport security: TLS contexts + the raw auth preamble
+# --------------------------------------------------------------------------
+
+#: first bytes on an authenticated connection, both directions — a fixed
+#: magic so a mis-dialed client (wrong port, plaintext into TLS) fails the
+#: preamble instead of being interpreted as a frame length
+AUTH_MAGIC = b"RFUT"
+AUTH_VERSION = 1
+_NONCE_LEN = 16
+_MAC_LEN = 32                                # HMAC-SHA256
+#: wall-clock budget for the whole preamble (either side); expiry maps to
+#: ChannelError so a protocol mismatch can never hang a dial or the
+#: listener's handshake thread
+AUTH_TIMEOUT_S = float(os.environ.get("REPRO_CLUSTER_AUTH_TIMEOUT_S", "10"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TLSConfig:
+    """TLS material for cluster/serving sockets. ``certfile``/``keyfile``
+    arm the listener side; ``cafile`` (usually the same self-signed cert)
+    lets dialers verify the listener. An empty ``cafile`` still encrypts —
+    the token preamble provides authentication — but skips certificate
+    verification. Frozen + hashable so it can ride in ``BackendSpec``
+    kwargs and the warm-pool key."""
+
+    certfile: str = ""
+    keyfile: str = ""
+    cafile: str = ""
+
+    def fingerprint(self) -> str:
+        """Digest of the *material* (file contents, not paths) — two
+        configs pointing at different certs never collide in the warm-pool
+        key even if the paths match."""
+        import hashlib
+        h = hashlib.blake2b(digest_size=8)
+        for path in (self.certfile, self.keyfile, self.cafile):
+            try:
+                with open(path, "rb") as f:
+                    h.update(f.read())
+            except OSError:
+                h.update(path.encode())
+        return h.hexdigest()
+
+
+def generate_self_signed_cert(directory: str,
+                              common_name: str = "repro-cluster") -> TLSConfig:
+    """Write a fresh self-signed cert/key pair under ``directory`` using the
+    system ``openssl`` binary (no third-party packages) and return a
+    :class:`TLSConfig` whose ``cafile`` is the cert itself."""
+    import subprocess
+    certfile = os.path.join(directory, "repro-tls-cert.pem")
+    keyfile = os.path.join(directory, "repro-tls-key.pem")
+    proc = subprocess.run(
+        ["openssl", "req", "-x509", "-newkey", "rsa:2048", "-nodes",
+         "-keyout", keyfile, "-out", certfile, "-days", "7",
+         "-subj", f"/CN={common_name}",
+         "-addext", "subjectAltName=DNS:localhost,IP:127.0.0.1"],
+        capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise ChannelError(
+            f"self-signed cert generation failed (is openssl installed?): "
+            f"{proc.stderr.strip()[:500]}")
+    os.chmod(keyfile, 0o600)
+    return TLSConfig(certfile=certfile, keyfile=keyfile, cafile=certfile)
+
+
+def server_tls_context(tls: TLSConfig):
+    """SSLContext for the listener side (driver, peer server, serving)."""
+    import ssl
+    ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_SERVER)
+    ctx.minimum_version = ssl.TLSVersion.TLSv1_2
+    try:
+        ctx.load_cert_chain(tls.certfile, tls.keyfile or None)
+    except (OSError, ssl.SSLError) as exc:
+        raise ChannelError(f"cannot load TLS cert chain "
+                           f"({tls.certfile!r}): {exc}") from exc
+    return ctx
+
+
+def client_tls_context(tls: "TLSConfig | None"):
+    """SSLContext for the dialing side (worker, peer fetch, serving client).
+    With a ``cafile`` the listener's certificate is verified against it;
+    without one the channel is encrypted but unverified (the token preamble
+    still authenticates both parties to each other)."""
+    import ssl
+    ctx = ssl.SSLContext(ssl.PROTOCOL_TLS_CLIENT)
+    ctx.minimum_version = ssl.TLSVersion.TLSv1_2
+    cafile = tls.cafile if tls is not None else ""
+    if cafile:
+        ctx.check_hostname = False           # self-signed lab certs; the
+        ctx.verify_mode = ssl.CERT_REQUIRED  # CA pin is the trust anchor
+        try:
+            ctx.load_verify_locations(cafile)
+        except (OSError, ssl.SSLError) as exc:
+            raise ChannelError(f"cannot load TLS CA file "
+                               f"({cafile!r}): {exc}") from exc
+    else:
+        ctx.check_hostname = False
+        ctx.verify_mode = ssl.CERT_NONE
+    return ctx
+
+
+def _is_tls(sock) -> bool:
+    return type(sock).__module__ == "ssl"
+
+
+def _auth_recv(sock, n: int, role: str) -> bytes:
+    try:
+        buf = b""
+        while len(buf) < n:
+            chunk = sock.recv(n - len(buf))
+            if not chunk:
+                raise ChannelError(
+                    f"auth handshake: peer closed during {role} "
+                    f"(denied, or not an authenticated endpoint)")
+            buf += chunk
+        return buf
+    except (TimeoutError, OSError) as exc:
+        if isinstance(exc, ChannelError):
+            raise
+        raise ChannelError(
+            f"auth handshake {role} failed: {exc!r} — wrong endpoint, "
+            f"a plaintext dial into a TLS listener, or vice versa") from exc
+
+
+def _mac(token: str, nonce: bytes) -> bytes:
+    return hmac.new(token.encode(), nonce, "sha256").digest()
+
+
+def serve_auth(sock, tokens: "dict[str, str]", *,
+               timeout: float = AUTH_TIMEOUT_S) -> str:
+    """Listener side of the token preamble. Challenges the dialer with a
+    random nonce, matches the returned MAC against every ``{principal:
+    token}`` pair (constant-time), answers with a verdict byte, and returns
+    the matched principal name. Raises :class:`ChannelError` (after sending
+    the deny verdict when possible) on mismatch, garbage, or timeout —
+    **before any frame is decoded**. The caller owns closing the socket on
+    failure."""
+    prev = sock.gettimeout()
+    sock.settimeout(timeout)
+    try:
+        nonce = os.urandom(_NONCE_LEN)
+        try:
+            sock.sendall(AUTH_MAGIC + bytes((AUTH_VERSION,)) + nonce)
+        except OSError as exc:
+            raise ChannelError(f"auth challenge send failed: {exc!r}") \
+                from exc
+        reply = _auth_recv(sock, len(AUTH_MAGIC) + _MAC_LEN, "response")
+        who = None
+        if reply[:len(AUTH_MAGIC)] == AUTH_MAGIC:
+            mac = reply[len(AUTH_MAGIC):]
+            for principal, token in tokens.items():
+                if hmac.compare_digest(mac, _mac(token, nonce)):
+                    who = principal
+                    break
+        if who is None:
+            try:
+                sock.sendall(b"\x00")
+            except OSError:
+                pass
+            raise ChannelError("auth rejected: bad token")
+        sock.sendall(b"\x01")
+        return who
+    finally:
+        try:
+            sock.settimeout(prev)
+        except OSError:
+            pass
+
+
+def dial_auth(sock, token: str, *, timeout: float = AUTH_TIMEOUT_S) -> None:
+    """Dialer side of the token preamble: read the challenge, answer with
+    the token's MAC, require the accept verdict. Raises
+    :class:`ChannelError` on denial, protocol garbage, or timeout."""
+    prev = sock.gettimeout()
+    sock.settimeout(timeout)
+    try:
+        hdr = _auth_recv(sock, len(AUTH_MAGIC) + 1 + _NONCE_LEN, "challenge")
+        if hdr[:len(AUTH_MAGIC)] != AUTH_MAGIC:
+            raise ChannelError(
+                "auth handshake: endpoint did not send the expected "
+                "challenge (is it an authenticated repro listener?)")
+        nonce = hdr[len(AUTH_MAGIC) + 1:]
+        try:
+            sock.sendall(AUTH_MAGIC + _mac(token, nonce))
+        except OSError as exc:
+            raise ChannelError(f"auth response send failed: {exc!r}") \
+                from exc
+        verdict = _auth_recv(sock, 1, "verdict")
+        if verdict != b"\x01":
+            raise ChannelError("auth rejected by listener: bad token")
+    finally:
+        try:
+            sock.settimeout(prev)
+        except OSError:
+            pass
+
+
+# --------------------------------------------------------------------------
 # Frame encoding
 # --------------------------------------------------------------------------
 
@@ -312,8 +573,9 @@ def _decode_payload(payload) -> Any:
     raise ChannelError(f"unknown frame codec {flag}")
 
 
-def _sendmsg_all(sock, parts: list) -> None:
-    """Scatter-send every buffer in ``parts`` without concatenating them."""
+def _sendmsg_all(sock, parts: list) -> int:
+    """Scatter-send every buffer in ``parts`` without concatenating them;
+    returns the total bytes sent (per-tenant wire attribution)."""
     views = [v if isinstance(v, memoryview) else memoryview(v)
              for v in parts]
     views = [v.cast("B") if v.format != "B" or v.ndim != 1 else v
@@ -325,9 +587,12 @@ def _sendmsg_all(sock, parts: list) -> None:
     # sendmsg returns 0 and the pop loop below — which only consumes views
     # while `sent` is positive — would spin forever holding send_lock.
     views = [v for v in views if len(v)]
-    if not hasattr(sock, "sendmsg"):
+    # SSLSocket inherits a sendmsg attribute but it raises
+    # NotImplementedError (TLS records cannot scatter-gather) — fall back
+    # to sendall over the encrypted channel.
+    if not hasattr(sock, "sendmsg") or _is_tls(sock):
         sock.sendall(b"".join(views))
-        return
+        return total
     while views:
         sent = sock.sendmsg(views[:64])      # stay well under IOV_MAX
         while sent:
@@ -337,17 +602,19 @@ def _sendmsg_all(sock, parts: list) -> None:
             else:
                 views[0] = views[0][sent:]
                 sent = 0
+    return total
 
 
-def send_frame(sock, obj: Any, lock: "threading.Lock | None" = None) -> None:
+def send_frame(sock, obj: Any,
+               lock: "threading.Lock | None" = None) -> int:
     """Serialize and send one frame; ``lock`` serializes concurrent senders
-    (e.g. a worker's heartbeat thread vs its result path)."""
+    (e.g. a worker's heartbeat thread vs its result path). Returns the
+    frame's on-wire byte count."""
     parts = encode_frame_parts(obj)
     if lock is None:
-        _sendmsg_all(sock, parts)
-    else:
-        with lock:
-            _sendmsg_all(sock, parts)
+        return _sendmsg_all(sock, parts)
+    with lock:
+        return _sendmsg_all(sock, parts)
 
 
 # --------------------------------------------------------------------------
@@ -412,15 +679,30 @@ class FrameReader:
         self._buf = bytearray()
         self._bulk: "bytearray | None" = None    # preallocated frame body
         self._bulk_fill = 0
+        #: on-wire sizes of the frames returned by the last :meth:`feed`,
+        #: index-aligned with its return value (per-tenant attribution)
+        self.last_sizes: list = []
 
     def feed(self) -> list:
-        """Do one ``recv()``/``recv_into`` and return every complete frame
-        now buffered.
+        """Do one ``recv()``/``recv_into`` pass and return every complete
+        frame now buffered. On a TLS socket one raw readiness event can
+        decrypt more application bytes than a single ``recv`` returns —
+        select never fires for bytes already sitting decrypted in the SSL
+        layer — so the pass repeats while ``sock.pending()`` reports
+        buffered plaintext.
 
         Raises ``EOFError`` on clean close, :class:`ChannelError` if the peer
         closed with a partial frame buffered (truncated frame).
         """
         frames: list = []
+        self.last_sizes = []
+        while True:
+            self._feed_once(frames)
+            pending = getattr(self._sock, "pending", None)
+            if pending is None or not pending():
+                return frames
+
+    def _feed_once(self, frames: list) -> None:
         if self._bulk is not None:
             r = self._sock.recv_into(
                 memoryview(self._bulk)[self._bulk_fill:],
@@ -431,10 +713,11 @@ class FrameReader:
                     f"({self._bulk_fill}/{len(self._bulk)} buffered bytes)")
             self._bulk_fill += r
             if self._bulk_fill < len(self._bulk):
-                return frames
+                return
             body, self._bulk = self._bulk, None
             _count_recv(_LEN.size + len(body))
             frames.append(_decode_payload(body))
+            self.last_sizes.append(_LEN.size + len(body))
         else:
             chunk = self._sock.recv(_CHUNK)
             if not chunk:
@@ -463,8 +746,8 @@ class FrameReader:
             _count_recv(end)
             frames.append(_decode_payload(
                 bytes(memoryview(self._buf)[_LEN.size:end])))
+            self.last_sizes.append(end)
             del self._buf[:end]
-        return frames
 
 
 # --------------------------------------------------------------------------

@@ -184,18 +184,80 @@ _WARM_POOL_MAX = int(os.environ.get("REPRO_WARM_POOL_MAX", "3"))
 #: excludes the in-process backends — threads are cheap to respawn, and the
 #: asyncio backend's whole cost is one event-loop thread: parking a live
 #: loop (with its pending-task drain on shutdown) buys nothing over a cold
-#: start, so plan() swaps shut it down instead.
+#: start, so plan() swaps shut it down instead. The serving *client* is
+#: also excluded: its session holds the process-wide state-client override
+#: and a server-side TTL — parking it would keep routing state calls to a
+#: session the user has planned away from.
 _POOLABLE = ("processes", "cluster")
+
+
+def _freeze(obj) -> "Any":
+    """Recursively hashable view of a spec kwarg value: ``tenants={"a":
+    {"weight": 3.0}}`` must be poolable even though dicts aren't
+    hashable. Dicts become tagged sorted item-tuples (the tag keeps
+    ``{"a": 1}`` distinct from ``(("a", 1),)``)."""
+    if isinstance(obj, dict):
+        return ("{}", tuple(sorted((k, _freeze(v)) for k, v in obj.items())))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(v) for v in obj)
+    if isinstance(obj, (set, frozenset)):
+        return ("set", tuple(sorted(map(repr, obj))))
+    try:
+        hash(obj)
+    except TypeError:
+        return ("repr", repr(obj))
+    return obj
+
+
+def _security_fingerprint(head: BackendSpec) -> tuple:
+    """Credential identity of a secured backend spec. Two plans can be
+    kwarg-identical yet security-distinct — the cluster token defaults to
+    ``$REPRO_CLUSTER_TOKEN`` (mutable between plans) and ``tls=True``
+    generates a fresh cert per instantiation — and reattaching a warm
+    pool across a credential change would serve the new plan with the old
+    secrets. Tokens enter the key hashed, never raw."""
+    if head.name not in ("cluster", "serving"):
+        return ()
+    import hashlib
+    kwargs = dict(head.kwargs)
+    token = kwargs.get("token")
+    if token is None:
+        token = os.environ.get("REPRO_CLUSTER_TOKEN", "")
+    token_fp = hashlib.blake2b(str(token).encode(),
+                               digest_size=8).hexdigest() if token else ""
+    tls = kwargs.get("tls") or kwargs.get("tls_ca")
+    if tls is True:
+        # a fresh self-signed cert per instantiation: never key-compatible
+        # with a parked pool, so make the fingerprint spec-stable ("auto")
+        # — the *same spec* re-planned still reattaches, which is correct
+        # because the parked backend carries its generated cert with it
+        tls_fp = "auto"
+    elif hasattr(tls, "fingerprint"):
+        tls_fp = tls.fingerprint()
+    else:
+        tls_fp = _freeze(tls) if tls else ""
+    return (token_fp, tls_fp, _freeze(kwargs.get("tenants")))
 
 
 def _backend_key(head: BackendSpec, stack: "tuple[BackendSpec, ...]"
                  ) -> tuple:
-    """Identity under which a live backend may be reused: same head spec,
-    same nested stack (workers captured it at init), same session seed
-    (worker RNG streams derive from it)."""
+    """Identity under which a live backend may be reused: same head spec
+    (kwargs deep-frozen so dict-valued ones like ``tenants=`` hash), same
+    nested stack (workers captured it at init), same session seed (worker
+    RNG streams derive from it), same security credentials
+    (:func:`_security_fingerprint`)."""
     from . import rng as rng_mod
     nested = stack[1:] if len(stack) > 1 else (_SEQUENTIAL,)
-    return (head, nested, rng_mod._session_seed)
+
+    def _kw(s: BackendSpec):
+        # the raw token must never sit in a long-lived pool key; the
+        # security fingerprint covers it (hashed)
+        return _freeze({k: v for k, v in s.kwargs if k != "token"})
+
+    return (head.name, _kw(head),
+            tuple((s.name, _kw(s)) for s in nested),
+            rng_mod._session_seed,
+            _security_fingerprint(head))
 
 
 def _park_active_locked() -> list:
@@ -212,7 +274,7 @@ def _park_active_locked() -> list:
     _active_backend = _active_spec = _active_key = None
     if backend is None:
         return doomed
-    if key is None or key[0].name not in _POOLABLE:
+    if key is None or key[0] not in _POOLABLE:
         doomed.append(backend)
         return doomed
     stale = _WARM_POOL.pop(key, None)

@@ -1,0 +1,5 @@
+"""``python -m repro.core.serving`` — start a serving server from the CLI."""
+
+from . import main
+
+main()

@@ -164,6 +164,30 @@ def oob(payload):
     return payload
 
 
+#: first element of a tenant-scoped key tuple (serving tier): tenant keys
+#: are wrapped server-side as ``(_TENANT_NS, tenant, key)`` so two tenants'
+#: namespaces can never collide — and a tenant cannot *name* another's keys
+#: at all, because the wrapper is applied after its identity is established
+_TENANT_NS = "~tenant~"
+
+
+def scoped_key(tenant: "str | None", key):
+    """The storage key for ``key`` in ``tenant``'s namespace (identity for
+    ``tenant=None`` — direct library use is unscoped)."""
+    if tenant is None:
+        return key
+    return (_TENANT_NS, tenant, key)
+
+
+def scope_args(op: str, args: tuple, tenant: "str | None") -> tuple:
+    """Rewrite a wire op's key into ``tenant``'s namespace. ``blob`` is
+    content-addressed (digests are unguessable, no key to scope) and
+    ``keys`` is scoped by the service itself (it must list + unwrap)."""
+    if tenant is None or op in ("blob", "keys"):
+        return args
+    return (scoped_key(tenant, args[0]),) + tuple(args[1:])
+
+
 def _safe_exc(exc: Exception) -> Exception:
     """An exception instance that survives pickling (mirrors worker.py's
     ``_sanitize_run``)."""
@@ -207,7 +231,7 @@ class StateService:
         self._enc: dict = {}
         self._digest_key: dict = {}
         self.counters = {"puts": 0, "gets": 0, "cas_ok": 0, "cas_fail": 0,
-                         "deletes": 0, "waits": 0, "updates": 0}
+                         "deletes": 0, "waits": 0, "updates": 0, "folds": 0}
 
     # -- core ops (in-process surface) --------------------------------------
 
@@ -298,6 +322,39 @@ class StateService:
             version, fired = self._commit_locked(key, value)
         self._fire(fired, value, version)
         return value, version
+
+    # -- server-side folds ---------------------------------------------------
+    #
+    # ``add``/``extend`` are the two hot fold shapes (counters and logs).
+    # Folding under the service lock makes them exact at any contention in
+    # ONE round trip — remote ``update`` is a CAS retry loop whose expected
+    # cost grows with the number of concurrent writers.
+
+    def add(self, key, delta, default=0):
+        """Atomically commit ``(current or default) + delta`` as the next
+        version of ``key``; returns ``(new_value, version)``. Works for any
+        type with ``+`` (ints, floats, ndarrays...)."""
+        with self._lock:
+            self.counters["folds"] += 1
+            current = self._values.get(key, _MISSING)
+            value = (default if current is _MISSING else current) + delta
+            version, fired = self._commit_locked(key, value)
+        self._fire(fired, value, version)
+        return value, version
+
+    def extend(self, key, items):
+        """Atomically append ``items`` to the list at ``key`` (absent key
+        starts from ``[]``); returns ``(new_length, version)``. The stored
+        list is replaced, never mutated in place — readers holding the old
+        value keep a consistent snapshot."""
+        items = list(items)
+        with self._lock:
+            self.counters["folds"] += 1
+            current = self._values.get(key, _MISSING)
+            value = (list(current) if current is not _MISSING else []) + items
+            version, fired = self._commit_locked(key, value)
+        self._fire(fired, value, version)
+        return len(value), version
 
     def delete(self, key) -> bool:
         """Remove the entry. The version counter is retained (monotone
@@ -459,12 +516,17 @@ class StateService:
         DRIVER_STORE.put(digest, blob)
         return blob
 
-    def handle(self, op: str, args: tuple, known: "set | None" = None):
+    def handle(self, op: str, args: tuple, known: "set | None" = None,
+               tenant: "str | None" = None):
         """Execute one non-blocking wire op. Returns ``(status, payload,
         sent_digest)`` with status ``"ok"`` or ``"err"`` — never raises
         (malformed ops are the *request's* failure, not the driver's).
         ``wait`` is not handled here: it blocks, so each driver routes it
-        through :meth:`add_watch` (cluster) or a side thread (processes)."""
+        through :meth:`add_watch` (cluster) or a side thread (processes).
+
+        ``tenant`` only affects ``keys``: key args must already be scoped
+        by the caller via :func:`scope_args` (the scoping must also cover
+        paths that bypass ``handle`` — ``wait`` watches, size probes)."""
         try:
             if op == "get":
                 key, min_version = args
@@ -518,10 +580,37 @@ class StateService:
                 payload, digest = self.reply_payload(
                     key, current, current_version, known)
                 return "ok", (False, current_version, True, payload), digest
+            if op == "add":
+                key, vp = args
+                delta, default = _wire_decode(vp)
+                with self._lock:
+                    self.counters["folds"] += 1
+                    current = self._values.get(key, _MISSING)
+                    value = (default if current is _MISSING
+                             else current) + delta
+                    version, fired = self._commit_locked(key, value)
+                self._fire(fired, value, version)
+                payload, digest = self.reply_payload(key, value, version,
+                                                     known)
+                return "ok", (version, payload), digest
+            if op == "extend":
+                key, vp = args
+                length, version = self.extend(key, _wire_decode(vp))
+                return "ok", (version, length), None
             if op == "delete":
                 return "ok", self.delete(args[0]), None
             if op == "keys":
-                return "ok", self.keys(args[0]), None
+                if tenant is None:
+                    return "ok", self.keys(args[0]), None
+                prefix = args[0]
+                with self._lock:
+                    inner = [k[2] for k in self._values
+                             if isinstance(k, tuple) and len(k) == 3
+                             and k[0] == _TENANT_NS and k[1] == tenant]
+                if prefix:
+                    inner = [k for k in inner
+                             if isinstance(k, str) and k.startswith(prefix)]
+                return "ok", sorted(inner, key=repr), None
             if op == "version":
                 return "ok", self.version(args[0]), None
             if op == "blob":
@@ -560,11 +649,52 @@ class _InProcClient:
     def update(self, key, fn, default=None):
         return self._svc.update(key, fn, default)
 
+    def add(self, key, delta, default=0):
+        return self._svc.add(key, delta, default)
+
+    def extend(self, key, items):
+        return self._svc.extend(key, items)
+
     def delete(self, key):
         return self._svc.delete(key)
 
     def wait(self, key, min_version=1, timeout=None):
         return self._svc.wait(key, min_version, timeout)
+
+    async def wait_async(self, key, min_version=1, timeout=None):
+        """Event-loop-native wait: resolves via the service's watch
+        registry, so the asyncio backend's cooperative tasks never park a
+        thread (nor block the loop) on a KV wait."""
+        import asyncio
+        loop = asyncio.get_running_loop()
+        fut: "asyncio.Future" = loop.create_future()
+        svc = self._svc
+
+        def cb(ok, value, version):
+            def _settle():
+                if fut.done():
+                    return
+                if ok:
+                    fut.set_result((value, version))
+                else:
+                    fut.set_exception(StateTimeout(
+                        f"state.wait_async({key!r}, min_version="
+                        f"{min_version}) timed out after {timeout}s at "
+                        f"version {version}"))
+            try:
+                loop.call_soon_threadsafe(_settle)
+            except RuntimeError:
+                pass                         # loop closed mid-wait
+
+        deadline = (time.monotonic() + timeout) if timeout is not None \
+            else None
+        svc.add_watch(key, int(min_version), cb, deadline)
+        if timeout is not None:
+            # in-process there is no cluster loop sweeping expired
+            # watches — schedule the sweep ourselves, just past the
+            # deadline so the satisfied-first race favours success
+            loop.call_later(timeout + 0.005, svc.expire_watches)
+        return await fut
 
     def keys(self, prefix=""):
         return self._svc.keys(prefix)
@@ -641,6 +771,19 @@ class _RPCClient:
                 # version moved but no value came back: read() settles it
                 value, version = self.read(key, default=default)
 
+    def add(self, key, delta, default=0):
+        """Server-side atomic ``(current or default) + delta`` — one RPC,
+        exact under any contention (no CAS retry loop)."""
+        version, payload = self._call(
+            "add", (key, _wire_encode((delta, default))))
+        return self._decode(payload), version
+
+    def extend(self, key, items):
+        """Server-side atomic list append; ``(new_length, version)``."""
+        version, length = self._call(
+            "extend", (key, _wire_encode(list(items))))
+        return length, version
+
     def delete(self, key) -> bool:
         return self._call("delete", (key,))
 
@@ -648,6 +791,12 @@ class _RPCClient:
         version, payload = self._call(
             "wait", (key, int(min_version), timeout), wait_timeout=timeout)
         return self._decode(payload), version
+
+    async def wait_async(self, key, min_version=1, timeout=None):
+        """Awaitable wait over the wire: the blocking RPC is parked on a
+        worker thread so the caller's event loop stays live."""
+        import asyncio
+        return await asyncio.to_thread(self.wait, key, min_version, timeout)
 
     def keys(self, prefix=""):
         return self._call("keys", (prefix,))
@@ -701,7 +850,7 @@ class SockStateClient(_RPCClient):
         entry = [threading.Event(), None]
         with self._lock:
             self._waits[rid] = entry
-        if op in ("put", "cas"):
+        if op in ("put", "cas", "add", "extend"):
             args = args[:-1] + (oob(args[-1]),)
         try:
             send_frame(self._sock, ("state", rid, op, args), self._send_lock)
@@ -780,6 +929,10 @@ class PipeStateClient(_RPCClient):
 _TLS = threading.local()
 _SERVICE: "StateService | None" = None
 _DEFAULT_CLIENT: "_InProcClient | None" = None
+#: process-wide client override (the serving tier: a client process's
+#: driver-side ``state.*`` calls must reach the *server's* service, not a
+#: local singleton). Checked after the per-thread task context.
+_OVERRIDE_CLIENT = None
 _SERVICE_LOCK = threading.Lock()
 
 
@@ -795,16 +948,29 @@ def service() -> StateService:
 def reset() -> None:
     """Replace the singleton with a fresh, empty service (test isolation;
     pending watches on the old service die with it)."""
-    global _SERVICE, _DEFAULT_CLIENT
+    global _SERVICE, _DEFAULT_CLIENT, _OVERRIDE_CLIENT
     with _SERVICE_LOCK:
         _SERVICE = None
         _DEFAULT_CLIENT = None
+        _OVERRIDE_CLIENT = None
+
+
+def set_default_client(client) -> None:
+    """Install ``client`` as the process-wide ambient state client —
+    every ``state.*`` call outside a worker task context routes through
+    it. ``None`` restores the in-process singleton. Used by the serving
+    client backend so a tenant process's driver-side KV calls reach the
+    server's (tenant-scoped) service."""
+    global _OVERRIDE_CLIENT
+    _OVERRIDE_CLIENT = client
 
 
 def _client():
     client = getattr(_TLS, "client", None)
     if client is not None:
         return client
+    if _OVERRIDE_CLIENT is not None:
+        return _OVERRIDE_CLIENT
     global _DEFAULT_CLIENT
     if _DEFAULT_CLIENT is None or _DEFAULT_CLIENT._svc is not service():
         _DEFAULT_CLIENT = _InProcClient(service())
@@ -857,6 +1023,19 @@ def update(key, fn: Callable, default=None):
     return _client().update(key, fn, default)
 
 
+def add(key, delta, default=0):
+    """Server-side atomic fold ``(current or default) + delta``; returns
+    ``(new_value, version)``. One RPC — exact at any contention, unlike a
+    remote :func:`update` CAS loop."""
+    return _client().add(key, delta, default)
+
+
+def extend(key, items):
+    """Server-side atomic list append; returns ``(new_length, version)``.
+    An absent key starts from ``[]``."""
+    return _client().extend(key, items)
+
+
 def delete(key) -> bool:
     return _client().delete(key)
 
@@ -865,6 +1044,15 @@ def wait(key, min_version: int = 1, timeout: "float | None" = None):
     """Block until ``key`` reaches ``min_version``; ``(value, version)``.
     Raises :class:`StateTimeout` on expiry."""
     return _client().wait(key, min_version, timeout)
+
+
+async def wait_async(key, min_version: int = 1,
+                     timeout: "float | None" = None):
+    """Awaitable :func:`wait` — in ``plan("asyncio")`` bodies (or any
+    coroutine) the event loop keeps running while this parks on the key's
+    version watch. Returns ``(value, version)``; raises
+    :class:`StateTimeout` on expiry."""
+    return await _client().wait_async(key, min_version, timeout)
 
 
 def keys(prefix: str = "") -> list:
@@ -883,6 +1071,8 @@ def stats() -> dict:
 __all__ = [
     "StateService", "StateError", "StateTimeout", "state_context",
     "SockStateClient", "PipeStateClient", "service", "reset",
-    "put", "get", "read", "cas", "update", "delete", "wait", "keys",
-    "version", "stats",
+    "set_default_client",
+    "put", "get", "read", "cas", "update", "add", "extend", "delete",
+    "wait", "wait_async", "keys", "version", "stats",
+    "scoped_key", "scope_args",
 ]

@@ -28,6 +28,25 @@ import time
 
 from repro.core.backends.launchers import Launcher, LocalLauncher, WorkerProc
 
+_TLS_LOCK = threading.Lock()
+_TLS_CFG = None
+
+
+def ephemeral_tls():
+    """Process-cached self-signed TLS material for tests: one openssl
+    keygen per pytest run, shared by every TLS test (the cert is valid
+    for days; generating per-test would dominate suite time)."""
+    global _TLS_CFG
+    with _TLS_LOCK:
+        if _TLS_CFG is None:
+            import tempfile
+
+            from repro.core.backends.transport import \
+                generate_self_signed_cert
+            _TLS_CFG = generate_self_signed_cert(
+                tempfile.mkdtemp(prefix="repro-test-tls-"))
+        return _TLS_CFG
+
 
 class HarnessLauncher(Launcher):
     """Launcher wrapper that remembers everything it launched and can hurt
@@ -46,8 +65,10 @@ class HarnessLauncher(Launcher):
     def local_only(self):
         return getattr(self.inner, "local_only", False)
 
-    def launch(self, host, driver_addr, *, tag=None) -> WorkerProc:
-        wp = self.inner.launch(host, driver_addr, tag=tag)
+    def launch(self, host, driver_addr, *, tag=None,
+               extra_env=()) -> WorkerProc:
+        wp = self.inner.launch(host, driver_addr, tag=tag,
+                               extra_env=extra_env)
         with self._cv:
             self.procs.append(wp)
             self._cv.notify_all()

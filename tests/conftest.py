@@ -36,6 +36,10 @@ def pytest_configure(config):
         "markers",
         "asyncio: cooperative-frontend tests (await/async-for surface and "
         "the event-loop backend; select with '-m asyncio')")
+    config.addinivalue_line(
+        "markers",
+        "serving: multi-tenant secure serving tier tests (TLS/token "
+        "handshake, driver server, fair-share; select with '-m serving')")
 
 
 def pytest_collection_modifyitems(config, items):

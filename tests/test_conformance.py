@@ -24,6 +24,12 @@ BACKENDS = [
     # subsystem (LocalLauncher is the hosts=N default): the full conformance
     # surface must hold on *launched* workers, not just pre-connected ones
     ("cluster+local-launcher", "cluster", {"hosts": 2}),
+    # the same launched fleet behind the full transport-security preamble:
+    # TLS on every socket (driver listener, worker dial, peer fetch) plus
+    # the shared-token handshake. The entire conformance surface must be
+    # indistinguishable from plaintext. ``_secure`` resolves to real
+    # credentials in the fixture (the cert is generated at runtime).
+    ("cluster+tls+token", "cluster", {"hosts": 2, "_secure": True}),
     ("jax_async", "jax_async", {}),
     # the cooperative event-loop backend: sync bodies run as one segment on
     # the loop thread, async bodies are driven segment-by-segment — the full
@@ -34,10 +40,20 @@ BACKENDS = [
 IDS = [b[0] for b in BACKENDS]
 
 
+def resolve_backend_kwargs(kw):
+    """Expand fixture-only sentinels into real plan() kwargs — any suite
+    reusing BACKENDS for its own matrix must route kwargs through here."""
+    kw = dict(kw)
+    if kw.pop("_secure", False):
+        from _cluster_harness import ephemeral_tls
+        kw.update(token="conformance-secret", tls=ephemeral_tls())
+    return kw
+
+
 @pytest.fixture(params=BACKENDS, ids=IDS)
 def backend(request):
     _id, name, kw = request.param
-    rc.plan(name, **kw)
+    rc.plan(name, **resolve_backend_kwargs(kw))
     yield name
     rc.shutdown()
 

@@ -1,0 +1,295 @@
+"""Multi-tenant secure serving tier (`repro.core.serving`).
+
+Covers the three security/tenancy layers end to end, in one process (the
+server's inner cluster still launches real worker processes):
+
+* transport security — wrong token, plaintext-to-TLS and unauthenticated
+  raw connections are all rejected *before any frame decode*, with a
+  clear ChannelError on the client side and never a hang;
+* the long-lived driver server — concurrent sessions over one warm
+  cluster, each with the full future/state API, session TTL expiry;
+* per-tenant policy — fair-share caps actually bound a tenant's worker
+  occupancy, state is namespaced per tenant, and wire/recovery stats are
+  attributed to the right tenant.
+"""
+
+import itertools
+import threading
+import time
+
+import pytest
+
+import repro.core as rc
+from _cluster_harness import ephemeral_tls
+from repro.core import future, gather, state, value
+from repro.core.backends.base import TaskSpec
+from repro.core.errors import ChannelError
+from repro.core.globals_capture import dumps_robust, ship_function
+from repro.core.serving import ServingClientBackend, serve
+
+pytestmark = pytest.mark.serving
+
+_ids = itertools.count(1)
+
+
+def _task(fn):
+    """Hand-build the shipped TaskSpec future.py would produce, for tests
+    driving ServingClientBackend directly (two sessions in one process —
+    plan() is global, so the second tenant can't come from plan())."""
+    sources: dict = {}
+    shipped = dumps_robust(
+        {"fn": ship_function(fn, {}, (), ref_sink=sources),
+         "args": (), "kwargs": {}, "capture_stdout": True,
+         "capture_conditions": True, "seed_declared": False},
+        ref_sink=sources)
+    return TaskSpec(task_id=next(_ids), fn=None, shipped=shipped,
+                    payload_sources=sources)
+
+
+def _value(client, handle):
+    run = client.collect(handle)
+    if run.error is not None:
+        raise run.error
+    return run.value
+
+
+# --------------------------------------------------------------------------
+# Transport security: rejected before any frame decode, never a hang
+# --------------------------------------------------------------------------
+
+def test_wrong_token_rejected_fast_and_server_survives():
+    with serve({"workers": 1}, tokens={"alice": "s1"}) as srv:
+        host, port = srv.address
+        t0 = time.monotonic()
+        with pytest.raises(ChannelError):
+            ServingClientBackend(addr=(host, port), token="WRONG")
+        assert time.monotonic() - t0 < 11.0
+        # the listener shrugged it off: a good credential still works
+        c = ServingClientBackend(addr=(host, port), token="s1")
+        assert _value(c, c.submit(_task(lambda: 7))) == 7
+        c.shutdown()
+
+
+def test_plaintext_dial_to_tls_listener_rejected():
+    with serve({"workers": 1}, tokens={"a": "s"},
+               tls=ephemeral_tls()) as srv:
+        host, port = srv.address
+        t0 = time.monotonic()
+        with pytest.raises(ChannelError):
+            ServingClientBackend(addr=(host, port), token="s")  # no TLS
+        assert time.monotonic() - t0 < 11.0
+        ca = srv.tls.certfile
+        c = ServingClientBackend(addr=(host, port), token="s", tls_ca=ca)
+        assert _value(c, c.submit(_task(lambda: 8))) == 8
+        c.shutdown()
+
+
+def test_unauthenticated_raw_socket_cannot_submit():
+    """A raw connection that skips the handshake and speaks protocol
+    frames directly gets disconnected without ever reaching the frame
+    decoder — it can neither submit tasks nor pull state/blobs."""
+    import socket as socket_mod
+
+    from repro.core.backends.transport import recv_frame, send_frame
+    with serve({"workers": 1}, tokens={"a": "s"}) as srv:
+        raw = socket_mod.create_connection(srv.address, timeout=5)
+        raw.settimeout(10.0)
+        with pytest.raises((ChannelError, EOFError, OSError)):
+            # first bytes are not the AUTH magic -> listener hangs up
+            send_frame(raw, ("sub", 1, b"evil", [], {}, {}))
+            recv_frame(raw)
+        raw.close()
+
+
+def test_cluster_listener_rejects_tokenless_worker_dial():
+    """The inner cluster's own worker listener is behind the same
+    preamble: a tokenless dial is refused, so an attacker can't skip the
+    serving tier and register as a 'worker' to receive task pickles."""
+    from repro.core.backends.cluster_worker import run_worker
+    with serve({"workers": 1, "token": "wsecret"},
+               tokens={"a": "s"}) as srv:
+        caddr = srv.inner.address
+        with pytest.raises((ChannelError, EOFError, OSError)):
+            run_worker(caddr[0], caddr[1], token="BAD")
+
+
+# --------------------------------------------------------------------------
+# The long-lived server: sessions, full API, TTL
+# --------------------------------------------------------------------------
+
+def test_plan_serving_full_future_and_state_api():
+    with serve({"workers": 2}, tokens={"alice": "s1"}) as srv:
+        host, port = srv.address
+        rc.plan("serving", addr=f"{host}:{port}", token="s1")
+        # futures, gather, closures with captured payloads
+        xs = [future(lambda i=i: i * i) for i in range(6)]
+        assert value(gather(xs)) == [i * i for i in range(6)]
+        # error relay: evaluation errors come back as themselves
+        with pytest.raises(ZeroDivisionError):
+            value(future(lambda: 1 // 0))
+        # state: driver-side calls and task-body calls hit the same
+        # tenant-scoped namespace on the server
+        state.put("cfg", {"lr": 0.1})
+        n, _ = state.add("steps", 3)
+        assert n == 3
+
+        def body():
+            from repro.core import state as st
+            st.add("steps", 1)
+            return st.get("cfg")["lr"]
+
+        assert value(future(body)) == 0.1
+        assert state.get("steps") == 4
+        be = rc.planning.active_backend()
+        stats = be.session_stats()
+        assert stats["tenant"] == "alice"
+        assert stats["tenant_stats"]["completed"] >= 8
+        rc.plan("sequential")
+        rc.shutdown()
+
+
+def test_session_ttl_expiry_is_a_clean_error_not_a_hang():
+    with serve({"workers": 1}, tokens={"t": "x"}, session_ttl=0.8) as srv:
+        c = ServingClientBackend(addr=srv.address, token="x")
+        assert _value(c, c.submit(_task(lambda: 1))) == 1
+        time.sleep(1.4)
+        t0 = time.monotonic()
+        with pytest.raises(ChannelError, match="expired"):
+            c.free_slots()
+        with pytest.raises(ChannelError, match="expired"):
+            c.submit(_task(lambda: 2))
+        # the state API's error contract is StateError; the expired-session
+        # ChannelError rides inside it, still instant and still clear
+        with pytest.raises((ChannelError, state.StateError), match="expired"):
+            c._state.get("anything")
+        assert time.monotonic() - t0 < 5.0
+        c.shutdown()
+
+
+# --------------------------------------------------------------------------
+# Tenancy: isolation, fair-share caps, attribution
+# --------------------------------------------------------------------------
+
+def test_two_tenant_sessions_state_isolation_and_attribution():
+    with serve({"workers": 2},
+               tokens={"alice": "s1", "bob": "s2"},
+               tenants={"alice": {"weight": 3.0},
+                        "bob": {"weight": 1.0}}) as srv:
+        a = ServingClientBackend(addr=srv.address, token="s1")
+        b = ServingClientBackend(addr=srv.address, token="s2")
+        assert (a.tenant, b.tenant) == ("alice", "bob")
+        ha = [a.submit(_task(lambda i=i: ("a", i))) for i in range(5)]
+        hb = [b.submit(_task(lambda i=i: ("b", i))) for i in range(3)]
+        assert [_value(a, h) for h in ha] == [("a", i) for i in range(5)]
+        assert [_value(b, h) for h in hb] == [("b", i) for i in range(3)]
+        # same key, different namespaces
+        a._state.put("k", "alice-data")
+        b._state.put("k", "bob-data")
+        assert a._state.get("k") == "alice-data"
+        assert b._state.get("k") == "bob-data"
+        # attribution: each session sees its own tenant's counters
+        sa, sb = a.session_stats(), b.session_stats()
+        assert sa["tenant_stats"]["completed"] == 5
+        assert sb["tenant_stats"]["completed"] == 3
+        assert sa["tenant_stats"]["bytes_sent"] > 0
+        assert "by_tenant" in sa["recovery"]
+        a.shutdown()
+        b.shutdown()
+
+
+def test_max_in_flight_cap_keeps_a_worker_free_for_the_other_tenant():
+    """Tenant ``hog`` is capped at one in-flight task; its burst of slow
+    tasks serializes on one worker while ``small``'s task grabs the other
+    worker immediately — a flooding tenant cannot occupy the fleet."""
+    with serve({"workers": 2},
+               tokens={"hog": "h", "small": "s"},
+               tenants={"hog": {"max_in_flight": 1},
+                        "small": {}}) as srv:
+        hog = ServingClientBackend(addr=srv.address, token="h")
+        small = ServingClientBackend(addr=srv.address, token="s")
+        hh = [hog.submit(_task(
+                  lambda: __import__("time").sleep(0.4) or "slow"))
+              for _ in range(4)]
+        t0 = time.monotonic()
+        assert _value(small, small.submit(_task(lambda: "quick"))) == "quick"
+        quick_latency = time.monotonic() - t0
+        assert [_value(hog, h) for h in hh] == ["slow"] * 4
+        hog_wall = time.monotonic() - t0
+        # 4 serialized 0.4s sleeps ~1.6s; the capped tenant must not have
+        # parallelized, and the small tenant must not have queued behind it
+        assert quick_latency < 1.0, quick_latency
+        assert hog_wall > 1.2, hog_wall
+        assert hog.session_stats()["tenant_stats"]["completed"] == 4
+        hog.shutdown()
+        small.shutdown()
+
+
+# --------------------------------------------------------------------------
+# Warm-pool security regression (satellite): credentials are key material
+# --------------------------------------------------------------------------
+
+def test_warm_pool_key_handles_dict_kwargs_and_credentials(monkeypatch):
+    from repro.core import planning
+    # dict-valued kwargs (tenants=...) must be poolable, not a TypeError
+    rc.plan("cluster", workers=1, tenants={"a": {"weight": 2.0}})
+    b1 = planning.active_backend()
+    assert value(future(lambda: 1)) == 1
+    rc.plan("threads")
+    rc.plan("cluster", workers=1, tenants={"a": {"weight": 2.0}})
+    assert planning.active_backend() is b1      # same spec -> reattach
+    # a credential change is an identity change: same kwargs, new token
+    # must NOT reattach to the unsecured warm pool
+    rc.plan("threads")
+    monkeypatch.setenv("REPRO_CLUSTER_TOKEN", "rotated-secret")
+    rc.plan("cluster", workers=1, tenants={"a": {"weight": 2.0}})
+    b2 = planning.active_backend()
+    assert b2 is not b1
+    assert value(future(lambda: 2)) == 2
+    rc.shutdown()
+
+
+def test_warm_pool_key_hashes_tls_config_material():
+    from repro.core import planning
+    tls = ephemeral_tls()
+    k1 = planning._backend_key(
+        planning.spec("cluster", workers=1, token="t", tls=tls),
+        (planning.spec("cluster", workers=1, token="t", tls=tls),))
+    hash(k1)                                    # must be hashable
+    k2 = planning._backend_key(
+        planning.spec("cluster", workers=1, token="other", tls=tls),
+        (planning.spec("cluster", workers=1, token="other", tls=tls),))
+    assert k1 != k2                             # token is key material
+    # and the raw token never appears in the key (it's hashed)
+    assert "other" not in repr(k2)
+
+
+def test_weighted_fair_share_interleaves_3_to_1():
+    """Start-time fair queuing, end to end through the serving tier: with
+    one worker and both queues backlogged, the weight-3 tenant gets
+    exactly 3 of every 4 dispatches — not FIFO by arrival, and no
+    starvation of the light tenant while heavy's queue is deep."""
+    with serve({"workers": 1},
+               tokens={"heavy": "h", "light": "l"},
+               tenants={"heavy": {"weight": 3.0},
+                        "light": {"weight": 1.0}}) as srv:
+        heavy = ServingClientBackend(addr=srv.address, token="h")
+        light = ServingClientBackend(addr=srv.address, token="l")
+        order: list = []                  # list.append is atomic
+        handles = []
+        for client, name, n in ((heavy, "heavy", 12), (light, "light", 12)):
+            for i in range(n):
+                h = client.submit(_task(
+                    lambda: __import__("time").sleep(0.02) or True))
+                client.add_done_callback(
+                    h, lambda _h, n=name: order.append(n))
+                handles.append((client, h))
+        for client, h in handles:
+            client.collect(h)
+        window = order[:12]
+        share = sum(1 for n in window if n == "heavy") / len(window)
+        # ideal is 0.75; one worker + frozen enqueue tags make the
+        # schedule deterministic up to the first dispatch race
+        assert 0.6 <= share <= 0.9, (share, order)
+        assert "light" in window, "light tenant starved"
+        heavy.shutdown()
+        light.shutdown()

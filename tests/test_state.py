@@ -188,3 +188,81 @@ def test_wait_min_version_skips_stale_values():
     rc.state.put("mv.k", "new")                # version 2
     assert value(w) == ("new", 2)
     rc.shutdown()
+
+
+# --------------------------------------------------------------------------
+# Server-side fold ops: add/extend resolve contention in one RPC
+# --------------------------------------------------------------------------
+
+def test_add_exact_under_eight_way_contention():
+    """state.add from 8 concurrent cluster workers is a server-side fold:
+    one RPC per delta, no CAS retry loop, and the count is *exact* —
+    final value == sum of all deltas == final version."""
+    rc.plan("cluster", workers=8)
+    per_task = 25
+
+    def body():
+        from repro.core import state
+        for _ in range(per_task):
+            state.add("fold.add", 1)
+        return True
+
+    fs = [future(body) for _ in range(8)]
+    assert value(gather(fs)) == [True] * 8
+    assert state.get("fold.add") == 8 * per_task
+    assert state.version("fold.add") == 8 * per_task
+    rc.shutdown()
+
+
+def test_extend_exact_under_eight_way_contention():
+    """state.extend from 8 concurrent workers loses no element: the final
+    list is a permutation of every appended item, exactly once each."""
+    rc.plan("cluster", workers=8)
+    per_task = 10
+
+    def body(wid):
+        from repro.core import state
+        for i in range(per_task):
+            state.extend("fold.list", [(wid, i)])
+        return True
+
+    fs = [future(lambda w=w: body(w)) for w in range(8)]
+    assert value(gather(fs)) == [True] * 8
+    got = state.get("fold.list")
+    assert sorted(got) == sorted(
+        (w, i) for w in range(8) for i in range(per_task))
+    assert state.version("fold.list") == 8 * per_task
+    rc.shutdown()
+
+
+def test_add_default_and_return_value():
+    """add returns the post-fold (value, version); default seeds the first
+    fold; floats/negative deltas work (it's ``current + delta``, not a
+    counter special case)."""
+    assert state.add("acc.f", 2.5, default=10.0) == (12.5, 1)
+    assert state.add("acc.f", -0.5) == (12.0, 2)
+    n, ver = state.extend("acc.l", ["a", "b"])
+    assert (n, ver) == (2, 1)
+    n, ver = state.extend("acc.l", ["c"])
+    assert (n, ver) == (3, 2)
+    assert state.get("acc.l") == ["a", "b", "c"]
+
+
+def test_wait_async_wakes_without_thread_per_waiter():
+    """state.wait_async parks on the service watch list and resolves on
+    the event loop — a put from another thread wakes the awaiting
+    coroutine; a timeout raises StateTimeout."""
+    import asyncio
+    import threading
+
+    async def main():
+        fut = asyncio.ensure_future(
+            state.wait_async("aw.k", 1, timeout=30))
+        await asyncio.sleep(0.05)          # parked, not polling
+        threading.Timer(0.05, lambda: state.put("aw.k", "go")).start()
+        val, ver = await fut
+        assert (val, ver) == ("go", 1)
+        with pytest.raises(state.StateTimeout):
+            await state.wait_async("aw.k", 99, timeout=0.1)
+
+    asyncio.run(main())

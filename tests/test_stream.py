@@ -17,7 +17,7 @@ import pytest
 import repro.core as rc
 from _cluster_harness import HarnessLauncher
 from repro.core import future_map, stream
-from test_conformance import BACKENDS, IDS
+from test_conformance import BACKENDS, IDS, resolve_backend_kwargs
 
 _FAST = dict(heartbeat_interval=0.1, heartbeat_timeout=3.0,
              relaunch_backoff=0.05, relaunch_backoff_cap=0.2)
@@ -26,7 +26,7 @@ _FAST = dict(heartbeat_interval=0.1, heartbeat_timeout=3.0,
 @pytest.fixture(params=BACKENDS, ids=IDS)
 def backend(request):
     _id, name, kw = request.param
-    rc.plan(name, **kw)
+    rc.plan(name, **resolve_backend_kwargs(kw))
     yield name
     rc.shutdown()
 
